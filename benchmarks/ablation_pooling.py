@@ -1,0 +1,63 @@
+"""Pooling-unit ablation: what IS the paper's adder-based pooling?
+
+The paper describes its pooling unit as adder-based with "no dedicated
+output logic" (Sec. III-B), which admits three radix-domain readings,
+all implemented in core/layers.py:
+
+  avg  sum-pool, 1/w² folded into the next requantizer   (our default)
+  or   per-plane bitwise OR of packed levels (binary max per time step;
+       an upper bound on max whose bias grows with T)
+  max  lexicographic bit-plane max (exact max of radix values)
+
+This benchmark measures converted accuracy vs T per mode. The published
+Table I trend (accuracy rises with T, saturating at T≈5-6) is reproduced
+by 'avg' and INVERTED by 'or' — quantitative evidence that adders-without-
+output-logic means sum pooling (EXPERIMENTS.md §Reproduction note).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conversion, engine
+from repro.data.synthetic import SyntheticVision
+from repro.models import lenet
+from repro.train.trainer import TrainConfig, train_ann
+
+
+def _acc(qnet, data, batches=4, batch=256):
+    fwd = jax.jit(lambda x: engine.run(qnet, x))
+    c = 0
+    for i in range(batches):
+        x, y = data.batch(20_000 + i, batch)
+        c += int((np.asarray(fwd(jnp.asarray(x))).argmax(-1) == y).sum())
+    return c / (batches * batch)
+
+
+def run(log=print, steps: int = 300):
+    data = SyntheticVision()
+    for mode in ("avg", "or", "max"):
+        static, params, _ = lenet.make(pool_mode=mode)
+        params, _ = train_ann(static, params, data,
+                              TrainConfig(steps=steps, batch_size=128,
+                                          lr=1e-2, log_every=10**6), log=None)
+        calib = jnp.asarray(data.calibration_batch(256))
+        accs = {}
+        for T in (3, 4, 6):
+            qnet = conversion.convert(static, params, calib, num_steps=T)
+            accs[T] = _acc(qnet, data)
+        rising = accs[6] >= accs[3] - 0.01
+        log(f"ablation_pool,mode={mode}," +
+            ",".join(f"T{t}={a:.3f}" for t, a in accs.items()) +
+            f",trend_rising={rising}")
+    return None
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Benchmark aggregator: one section per paper table + extensions.
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run table1     # one section
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (ablation_pooling, kernel_bench,
+                            lm_radix_accuracy, table1_timesteps,
+                            table2_convunits, table3_comparison)
+    sections = {
+        "table1": table1_timesteps.run,
+        "table2": table2_convunits.run,
+        "table3": table3_comparison.run,
+        "kernels": kernel_bench.run,
+        "lm_radix": lm_radix_accuracy.run,
+        "ablation_pooling": ablation_pooling.run,
+    }
+    want = sys.argv[1:] or list(sections)
+    for name in want:
+        print(f"### {name}")
+        t0 = time.time()
+        sections[name]()
+        print(f"### {name} done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Table II reproduction: latency / power / resources vs #conv units.
+
+Paper (LeNet-5, T=3, 100 MHz):
+  1 unit: 1063us 3.07W 11k/10k   2: 648us 3.09W 15k/14k
+  4:  450us 3.17W 24k/23k        8: 370us 3.28W 42k/39k
+
+The cycle model's two free constants are fitted on these + Table I points
+(core/hwmodel.py); this benchmark reports the closed-loop fit error per
+point and checks the paper's two qualitative claims: latency converges
+(sub-linear speedup from unit duplication — pool/linear units are not
+duplicated) while resources scale ~linearly.
+"""
+
+from __future__ import annotations
+
+from repro.core.hwmodel import CostModel
+
+
+def run(log=print):
+    model = CostModel.calibrated()
+    rows = model.table2()
+    for r in rows:
+        log(f"table2,units={r['units']},model_us={r['model_us']:.0f},"
+            f"paper_us={r['paper_us']},err={r['err_pct']:+.1f}%,"
+            f"model_w={r['model_w']:.2f},paper_w={r['paper_w']},"
+            f"model_klut={r['model_klut']:.0f},paper_klut={r['paper_klut']}")
+    lat = [r["model_us"] for r in rows]
+    speedup = lat[0] / lat[-1]
+    log(f"table2,speedup_1_to_8={speedup:.2f},sublinear={speedup < 8.0},"
+        f"max_lat_err_pct={max(abs(r['err_pct']) for r in rows):.1f}")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Architecture config registry: ``--arch <id>`` resolution.
+
+Each assigned architecture has a module exporting ``ARCH`` (the exact
+published configuration) and ``SMOKE`` (a reduced same-family config for CPU
+smoke tests).  The paper's own CNNs (lenet5 / vgg11 / fang_cnn) register
+their model builders here too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+LM_ARCHS: List[str] = [
+    "recurrentgemma_2b",
+    "kimi_k2_1t_a32b",
+    "grok_1_314b",
+    "qwen2_vl_72b",
+    "deepseek_coder_33b",
+    "gemma_2b",
+    "glm4_9b",
+    "gemma_7b",
+    "rwkv6_3b",
+    "whisper_medium",
+]
+
+SNN_ARCHS: List[str] = ["lenet5", "vgg11", "fang_cnn"]
+
+
+def canon(name: str) -> str:
+    return name.replace("-", "_")
+
+
+def get_config(name: str, smoke: bool = False):
+    """ArchConfig for an LM arch id (dashes or underscores both accepted)."""
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.SMOKE if smoke else mod.ARCH
+
+
+def get_snn(name: str):
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.make
+
+
+def all_lm_configs(smoke: bool = False) -> Dict[str, object]:
+    return {a: get_config(a, smoke) for a in LM_ARCHS}

@@ -1,0 +1,3 @@
+"""Fang et al. [11] CNN — Table III cross-accelerator comparison network."""
+
+from repro.models.fang import make, INPUT_HW, NUM_CLASSES  # noqa: F401

@@ -1,0 +1,3 @@
+"""LeNet-5 — the paper's primary evaluation network (Tables I-III)."""
+
+from repro.models.lenet import make, INPUT_HW, NUM_CLASSES  # noqa: F401

@@ -1,0 +1,3 @@
+"""VGG-11 — the paper's scalability demonstrator (Table III, CIFAR-100)."""
+
+from repro.models.vgg import make, NUM_CLASSES  # noqa: F401

@@ -1,0 +1,4 @@
+# The paper's primary contribution: radix neural encoding and the
+# accelerator-equivalent execution semantics (bit-exact SNN / quantized-ANN
+# twin pair), plus the calibrated FPGA hardware cost model (hwmodel).
+from repro.core import conversion, encoding, engine, layers, neuron  # noqa: F401

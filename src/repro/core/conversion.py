@@ -1,0 +1,239 @@
+"""ANN -> SNN conversion (the paper's model-preparation path, ref [14] E3NE).
+
+Pipeline:
+  1. train a float ANN (see train/),
+  2. calibrate per-layer activation scales on a calibration batch,
+  3. quantize weights to ``weight_bits`` (paper: 3) symmetric signed integers,
+  4. fold scales into per-layer requantization multipliers.
+
+The result is a :class:`QuantizedNet` whose spiking and packed-integer
+execution paths are bit-exact twins (see core/layers.py).
+
+Model description format
+------------------------
+A network is ``(static, params)``:
+
+* ``static``: tuple of ``(kind, cfg)`` pairs; ``kind`` in
+  {"conv", "linear", "pool", "flatten"}; cfg is a dict of ints/strings
+  (stride, padding, window, mode).
+* ``params``: list with one entry per layer; {"w": ..., "b": ...} for
+  conv/linear, ``None`` for pool/flatten.
+
+The last conv/linear layer produces float logits (no requantization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding, layers
+
+__all__ = [
+    "float_forward",
+    "calibrate",
+    "quantize_weights",
+    "convert",
+    "QuantizedNet",
+]
+
+Static = Tuple[Tuple[str, dict], ...]
+
+
+# ---------------------------------------------------------------------------
+# Float reference network (training target).
+# ---------------------------------------------------------------------------
+
+
+def float_forward(
+    static: Static,
+    params: Sequence[Optional[dict]],
+    x: jax.Array,
+    *,
+    return_activations: bool = False,
+):
+    """Float ANN forward.  ReLU after every conv/linear except the last.
+
+    Pool mode "avg"/"max"/"or" — "or" trains as max (its straight-through
+    float surrogate).
+    """
+    acts = []
+    n_affine = sum(1 for k, _ in static if k in ("conv", "linear"))
+    seen_affine = 0
+    for (kind, cfg), p in zip(static, params):
+        if kind == "conv":
+            seen_affine += 1
+            x = jax.lax.conv_general_dilated(
+                x, p["w"],
+                window_strides=(cfg.get("stride", 1),) * 2,
+                padding=cfg.get("padding", "VALID"),
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + p["b"]
+            if seen_affine < n_affine:
+                x = jax.nn.relu(x)
+                acts.append(x)
+        elif kind == "linear":
+            seen_affine += 1
+            x = x @ p["w"] + p["b"]
+            if seen_affine < n_affine:
+                x = jax.nn.relu(x)
+                acts.append(x)
+        elif kind == "pool":
+            mode = cfg.get("mode", "or")
+            if mode == "avg":
+                x = jax.lax.reduce_window(
+                    x, 0.0, jax.lax.add,
+                    (1, cfg["window"], cfg["window"], 1),
+                    (1, cfg["window"], cfg["window"], 1), "VALID",
+                ) / float(cfg["window"] ** 2)
+            else:  # max / or share the max float surrogate
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max,
+                    (1, cfg["window"], cfg["window"], 1),
+                    (1, cfg["window"], cfg["window"], 1), "VALID",
+                )
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        else:
+            raise ValueError(f"unknown layer kind {kind!r}")
+    if return_activations:
+        return x, acts
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Calibration + weight quantization.
+# ---------------------------------------------------------------------------
+
+
+def calibrate(
+    static: Static, params, calib_x: jax.Array, percentile: float = 99.9
+) -> List[float]:
+    """Per-requant-point activation scales (max or high percentile).
+
+    Returns one scale per conv/linear layer *input*: scales[0] is the input
+    scale (images assumed in [0, 1] -> 1.0 unless data says otherwise),
+    scales[i] is the scale of the activation feeding affine layer i.
+    """
+    _, acts = float_forward(static, params, calib_x, return_activations=True)
+    # activation scale after each ReLU / pool — we only need those feeding
+    # affine layers; conservative approach: track the running scale.
+    scales = [float(max(1.0, jnp.max(calib_x)))]
+    for a in acts:
+        if percentile >= 100.0:
+            s = float(jnp.max(a))
+        else:
+            s = float(jnp.percentile(a, percentile))
+        scales.append(max(s, 1e-6))
+    return scales
+
+
+def quantize_weights(w: jax.Array, weight_bits: int,
+                     per_channel: bool = False):
+    """Symmetric quantization to ``weight_bits`` signed levels.
+
+    3 bits (paper) -> levels in [-3, 3] (symmetric, zero preserved).
+    ``per_channel=True`` uses one scale per output channel (the last dim);
+    the extra scales fold into the per-channel requantization multiplier in
+    the output logic — same 3-bit weight memory, much lower quantization
+    error (DESIGN.md §2 assumption notes).
+    """
+    qmax = 2 ** (weight_bits - 1) - 1
+    if per_channel:
+        s_w = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1))) / qmax
+        s_w = jnp.maximum(s_w, 1e-12)
+    else:
+        s_w = max(float(jnp.max(jnp.abs(w))) / qmax if qmax > 0 else 1.0,
+                  1e-12)
+    w_q = jnp.clip(jnp.round(w / s_w), -qmax, qmax).astype(jnp.int8)
+    return w_q, s_w
+
+
+# ---------------------------------------------------------------------------
+# The converted network.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedNet:
+    """Converted network: integer weights + folded requant multipliers.
+
+    qlayers mirrors ``static``; each entry is a dict:
+      conv/linear: {"w_q", "b_int", "mult"(None for logits layer)}
+      pool/flatten: None
+    ``logit_scale`` maps the last integer accumulator to float logits.
+    """
+
+    static: Static = dataclasses.field(metadata=dict(static=True))
+    num_steps: int = dataclasses.field(metadata=dict(static=True))
+    weight_bits: int = dataclasses.field(metadata=dict(static=True))
+    qlayers: List[Optional[dict]] = dataclasses.field(default_factory=list)
+    input_scale: float = 1.0
+    logit_scale: float = 1.0
+
+
+def convert(
+    static: Static,
+    params,
+    calib_x: jax.Array,
+    *,
+    num_steps: int,
+    weight_bits: int = 3,
+    percentile: float = 99.9,
+    per_channel: bool = False,
+) -> QuantizedNet:
+    """ANN -> radix-SNN conversion (scales folded; see module docstring)."""
+    scales = calibrate(static, params, calib_x, percentile)
+    lvlp1 = encoding.max_level(num_steps) + 1  # 2^T
+
+    qlayers: List[Optional[dict]] = []
+    affine_idx = 0
+    n_affine = sum(1 for k, _ in static if k in ("conv", "linear"))
+    s_in = scales[0]
+    input_scale = s_in
+    pending_pool_div = 1.0  # avg-pool window division folded into next requant
+    logit_scale = 1.0
+    for (kind, cfg), p in zip(static, params):
+        if kind in ("conv", "linear"):
+            affine_idx += 1
+            w_q, s_w = quantize_weights(p["w"], weight_bits, per_channel)
+            # accumulator unit value: (s_in / 2^T) * s_w / pending_pool_div
+            # (a per-output-channel vector when per_channel)
+            acc_unit = (s_in / lvlp1) * s_w / pending_pool_div
+            b_int = jnp.round(p["b"] / acc_unit).astype(jnp.int32)
+            if affine_idx < n_affine:
+                s_out = scales[affine_idx]
+                mult = jnp.asarray(acc_unit * lvlp1 / s_out, jnp.float32)
+                qlayers.append({"w_q": w_q, "b_int": b_int, "mult": mult})
+                s_in = s_out
+            else:
+                logit_scale = acc_unit
+                qlayers.append({"w_q": w_q, "b_int": b_int, "mult": None})
+            pending_pool_div = 1.0
+        elif kind == "pool":
+            mode = cfg.get("mode", "or")
+            if mode == "avg":
+                # sum-pool accumulates; fold the 1/window^2 into next requant
+                pending_pool_div = float(cfg["window"] ** 2)
+            # max/or pools preserve levels; scale after pool uses the
+            # calibrated post-pool scale only through the float surrogate —
+            # keep s_in unchanged (levels unchanged).
+            qlayers.append(None)
+        elif kind == "flatten":
+            qlayers.append(None)
+        else:
+            raise ValueError(kind)
+
+    return QuantizedNet(
+        static=static,
+        num_steps=num_steps,
+        weight_bits=weight_bits,
+        qlayers=qlayers,
+        input_scale=float(input_scale),
+        logit_scale=(float(logit_scale) if jnp.ndim(logit_scale) == 0
+                     else jnp.asarray(logit_scale, jnp.float32)),
+    )

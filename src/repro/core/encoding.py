@@ -1,0 +1,162 @@
+"""Radix neural encoding — the paper's central primitive.
+
+A radix-encoded spike train of length ``T`` assigns a spike at time step ``t``
+the weight ``2^(T-1-t)`` (earlier spikes are more significant).  A train
+``s_0 .. s_{T-1}`` therefore *is* the T-bit unsigned binary expansion of the
+integer activation
+
+    q = sum_t  s_t * 2^(T-1-t),          q in [0, 2^T - 1].
+
+This module provides the encode/decode pair, bit-plane packing (the packed
+representation along the time axis is exactly the integer ``q``), and a
+rate-coding baseline used for comparison experiments.
+
+Conventions
+-----------
+* Spike planes are laid out time-major: ``planes[t]`` is the t-th time step,
+  with ``t = 0`` the most-significant bit (MSB-first, matching the paper's
+  left-shift accumulation order, Alg. 1 line 12).
+* Planes are ``int8`` in {0, 1}; packed activations are ``uint8`` for
+  ``T <= 8`` (the paper uses T in [3, 6]) and ``int32`` above that.
+* Real-valued activations are mapped to integers with a per-tensor (or
+  per-channel) positive scale:  ``q = clip(floor(x / scale * (2^T - 1)), 0,
+  2^T - 1)``.  ReLU is implied by the lower clip — exactly the paper's
+  "apply ReLU and requantize".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "max_level",
+    "quantize",
+    "dequantize",
+    "encode",
+    "decode",
+    "pack_planes",
+    "unpack_planes",
+    "rate_encode",
+    "rate_decode",
+    "radix_weights",
+]
+
+
+def max_level(num_steps: int) -> int:
+    """Largest integer representable by a radix spike train of length T."""
+    return (1 << num_steps) - 1
+
+
+def _packed_dtype(num_steps: int):
+    return jnp.uint8 if num_steps <= 8 else jnp.int32
+
+
+def radix_weights(num_steps: int, dtype=jnp.int32) -> jax.Array:
+    """Per-time-step weights ``2^(T-1-t)``, MSB first: [2^(T-1), ..., 2, 1]."""
+    return jnp.asarray(1 << np.arange(num_steps - 1, -1, -1), dtype=dtype)
+
+
+def quantize(x: jax.Array, num_steps: int, scale: jax.Array | float = 1.0) -> jax.Array:
+    """Real activation -> integer level in [0, 2^T - 1] (ReLU + requantize).
+
+    ``scale`` is the real value mapped to full-scale; it may be a scalar or
+    broadcastable per-channel array.  Uses floor rounding (the hardware
+    truncates — spikes that "didn't happen" carry no value).
+    """
+    lvl = max_level(num_steps)
+    q = jnp.floor(x / scale * (lvl + 1))
+    return jnp.clip(q, 0, lvl).astype(_packed_dtype(num_steps))
+
+
+def dequantize(q: jax.Array, num_steps: int, scale: jax.Array | float = 1.0) -> jax.Array:
+    """Integer level -> real activation (midpoint-free truncation inverse)."""
+    lvl = max_level(num_steps)
+    return q.astype(jnp.float32) * (jnp.asarray(scale, jnp.float32) / (lvl + 1))
+
+
+def encode(q: jax.Array, num_steps: int) -> jax.Array:
+    """Integer levels -> radix spike train, shape ``(T,) + q.shape``.
+
+    ``planes[t] = (q >> (T-1-t)) & 1`` — MSB first.  Output int8 in {0,1}.
+    """
+    q = q.astype(jnp.int32)
+    shifts = jnp.arange(num_steps - 1, -1, -1, dtype=jnp.int32)
+    shifts = shifts.reshape((num_steps,) + (1,) * q.ndim)
+    planes = (q[None, ...] >> shifts) & 1
+    return planes.astype(jnp.int8)
+
+
+def decode(planes: jax.Array) -> jax.Array:
+    """Radix spike train ``(T, ...)`` -> integer levels (int32).
+
+    Implemented as the paper's Horner accumulation: acc = (acc << 1) + s_t.
+    """
+    num_steps = planes.shape[0]
+
+    def body(acc, plane):
+        return (acc << 1) + plane.astype(jnp.int32), None
+
+    acc0 = jnp.zeros(planes.shape[1:], jnp.int32)
+    acc, _ = jax.lax.scan(body, acc0, planes.astype(jnp.int32))
+    del num_steps
+    return acc
+
+
+def pack_planes(planes: jax.Array) -> jax.Array:
+    """Pack a (T, ...) spike train along time into the integer activation.
+
+    For radix encoding this is *identical* to :func:`decode`; it exists as a
+    named op because the packed form is the memory format the TPU kernels
+    consume (1 byte per activation instead of T bytes / T floats).
+    """
+    num_steps = planes.shape[0]
+    return decode(planes).astype(_packed_dtype(num_steps))
+
+
+def unpack_planes(q: jax.Array, num_steps: int) -> jax.Array:
+    """Inverse of :func:`pack_planes` (== :func:`encode`)."""
+    return encode(q, num_steps)
+
+
+# ---------------------------------------------------------------------------
+# Rate-coding baseline (what traditional SNN accelerators consume).
+# ---------------------------------------------------------------------------
+
+
+def rate_encode(
+    x: jax.Array,
+    num_steps: int,
+    scale: jax.Array | float = 1.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Rate coding: spike probability proportional to magnitude.
+
+    Deterministic variant (key=None) emits evenly spaced spikes via error
+    accumulation (a.k.a. sigma-delta); stochastic variant draws Bernoulli
+    spikes.  Returns (T, ...) int8.  Needs ``num_steps`` ~ 2^T steps to match
+    the precision radix coding achieves with T steps — the paper's motivating
+    asymmetry, which benchmarks/table1 quantifies.
+    """
+    p = jnp.clip(x / scale, 0.0, 1.0)
+    if key is not None:
+        u = jax.random.uniform(key, (num_steps,) + p.shape)
+        return (u < p[None]).astype(jnp.int8)
+
+    def body(err, _):
+        err = err + p
+        spike = (err >= 1.0).astype(jnp.int8)
+        return err - spike, spike
+
+    _, spikes = jax.lax.scan(body, jnp.zeros_like(p), None, length=num_steps)
+    return spikes
+
+
+def rate_decode(planes: jax.Array, scale: jax.Array | float = 1.0) -> jax.Array:
+    """Spike-count decode for rate-coded trains."""
+    num_steps = planes.shape[0]
+    return planes.astype(jnp.float32).sum(0) * (jnp.asarray(scale, jnp.float32) / num_steps)

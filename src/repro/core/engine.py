@@ -1,0 +1,246 @@
+"""Execution engine — the software twin of the accelerator's controller.
+
+Runs a converted :class:`~repro.core.conversion.QuantizedNet` layer by layer,
+exactly as the FPGA controller sequences its processing units:
+
+  load activations (ping) -> processing unit -> store activations (pong)
+
+Execution paths
+---------------
+* ``mode="packed"``  — packed integer levels (uint8).  This is the TPU-native
+  path: one tensor per layer, radix packing == integer activation.
+* ``mode="snn"``     — paper-faithful spike-plane path: (T, ...) binary
+  planes, Horner accumulation per layer.  Bit-exact equal to "packed".
+* ``backend="kernels"`` — packed path dispatched through the Pallas kernels
+  (interpret-mode on CPU); ``backend="jnp"`` uses core/layers.py directly.
+
+The engine also produces :class:`MemoryReport` — the ping-pong buffer sizing
+and per-layer access counts the paper's memory system is built around (used
+by core/hwmodel.py and benchmarks/; reproduces the "4.5 MB BRAM for VGG-11
+feature maps" style numbers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Literal, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conversion, encoding, layers
+
+__all__ = ["run", "MemoryReport", "memory_report"]
+
+
+# ---------------------------------------------------------------------------
+# Forward execution.
+# ---------------------------------------------------------------------------
+
+
+def _affine_is_last(static, idx: int) -> bool:
+    return not any(k in ("conv", "linear") for k, _ in static[idx + 1:])
+
+
+def run(
+    qnet: conversion.QuantizedNet,
+    x: jax.Array,
+    *,
+    mode: Literal["packed", "snn"] = "packed",
+    backend: Literal["jnp", "kernels"] = "jnp",
+) -> jax.Array:
+    """Run the converted net on float input ``x`` (NHWC); returns float logits."""
+    T = qnet.num_steps
+    q = encoding.quantize(x, T, qnet.input_scale)
+
+    if backend == "kernels":
+        from repro.kernels import ops as kops  # deferred: optional path
+    else:
+        kops = None
+
+    if mode == "snn":
+        state = encoding.encode(q, T)  # (T, N, H, W, C) binary planes
+    else:
+        state = q
+
+    for idx, ((kind, cfg), qp) in enumerate(zip(qnet.static, qnet.qlayers)):
+        if kind == "conv":
+            stride, padding = cfg.get("stride", 1), cfg.get("padding", "VALID")
+            if mode == "snn":
+                acc = layers.snn_conv2d(state, qp["w_q"], qp["b_int"],
+                                        stride=stride, padding=padding)
+            elif kops is not None:
+                acc = kops.radix_conv2d(state, qp["w_q"], qp["b_int"], T,
+                                        stride=stride, padding=padding)
+            else:
+                acc = layers.q_conv2d(state, qp["w_q"], qp["b_int"],
+                                      stride=stride, padding=padding)
+            state = _requant_or_logits(acc, qp, qnet, mode)
+        elif kind == "linear":
+            if mode == "snn":
+                acc = layers.snn_linear(state, qp["w_q"], qp["b_int"])
+            elif kops is not None:
+                acc = kops.radix_matmul(state, qp["w_q"], qp["b_int"], T)
+            else:
+                acc = layers.q_linear(state, qp["w_q"], qp["b_int"])
+            state = _requant_or_logits(acc, qp, qnet, mode)
+        elif kind == "pool":
+            state = _pool(state, cfg, mode)
+        elif kind == "flatten":
+            if mode == "snn":
+                state = state.reshape(state.shape[0], state.shape[1], -1)
+            else:
+                state = state.reshape(state.shape[0], -1)
+        else:
+            raise ValueError(kind)
+    return state  # float logits
+
+
+def _requant_or_logits(acc, qp, qnet, mode):
+    if qp["mult"] is None:  # final layer -> float logits
+        return acc.astype(jnp.float32) * qnet.logit_scale
+    q = layers.q_requantize(acc, qnet.num_steps, qp["mult"])
+    if mode == "snn":
+        return encoding.encode(q, qnet.num_steps)
+    return q
+
+
+def _pool(state, cfg, mode):
+    w, pool_mode = cfg["window"], cfg.get("mode", "or")
+    if mode == "snn":
+        if pool_mode == "or":
+            return layers.snn_or_pool(state, w)
+        if pool_mode == "avg":
+            # per-plane sum pool; planes become multi-bit but stay linear —
+            # hardware note: avg mode needs an output requantizer (DESIGN §2)
+            return jax.vmap(lambda p: layers.q_avg_pool(p, w))(state)
+        if pool_mode == "max":
+            packed = layers.snn_max_pool(state, w)
+            return encoding.encode(packed, state.shape[0])
+        raise ValueError(pool_mode)
+    if pool_mode == "or":
+        return layers.q_or_pool(state, w)
+    if pool_mode == "avg":
+        return layers.q_avg_pool(state, w)
+    if pool_mode == "max":
+        return layers.q_max_pool(state, w)
+    raise ValueError(pool_mode)
+
+
+# ---------------------------------------------------------------------------
+# Ping-pong buffer sizing / memory-access accounting.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LayerMem:
+    name: str
+    in_shape: Tuple[int, ...]
+    out_shape: Tuple[int, ...]
+    act_bits: int                 # bits per activation element (T, packed)
+    weight_bytes: int             # parameter bytes at weight_bits resolution
+    act_reads: int                # activation elements read (with row reuse)
+    act_writes: int
+    weight_reads: int             # weight elements fetched (row reuse: once
+                                  # per (out-row, time step) per kernel row)
+
+
+@dataclasses.dataclass
+class MemoryReport:
+    layers: List[LayerMem]
+    buf2d_bytes: int              # ping+pong 2-D activation buffers
+    buf1d_bytes: int              # ping+pong 1-D activation buffers
+    weight_bram_bytes: int        # on-chip weight storage if it fits
+    needs_dram: bool              # paper: VGG-11 streams weights from DRAM
+    total_param_bytes: int
+
+    @property
+    def total_buffer_bytes(self) -> int:
+        return self.buf2d_bytes + self.buf1d_bytes
+
+
+def memory_report(
+    qnet: conversion.QuantizedNet,
+    input_hw: Tuple[int, int, int],
+    *,
+    bram_capacity_bytes: int = 8 << 20,
+) -> MemoryReport:
+    """Static ping-pong sizing + access counts for one inference (batch 1).
+
+    Mirrors Sec. III-C: two 2-D buffers sized to the largest conv/pool
+    feature map (at T bits per element, packed), two 1-D buffers for the
+    linear layers; weights on-chip iff they fit ``bram_capacity_bytes``.
+    """
+    T = qnet.num_steps
+    h, w, c = input_hw
+    shape: Tuple[int, ...] = (h, w, c)
+    layer_mems: List[LayerMem] = []
+    max2d = int(np.prod(shape))
+    max1d = 0
+    total_param_bytes = 0
+
+    for (kind, cfg), qp in zip(qnet.static, qnet.qlayers):
+        in_shape = shape
+        if kind == "conv":
+            kh, kw, cin, cout = qp["w_q"].shape
+            stride = cfg.get("stride", 1)
+            if cfg.get("padding", "VALID") == "SAME":
+                ho = -(-shape[0] // stride)
+                wo = -(-shape[1] // stride)
+            else:
+                ho = (shape[0] - kh) // stride + 1
+                wo = (shape[1] - kw) // stride + 1
+            shape = (ho, wo, cout)
+            wbytes = math.ceil(kh * kw * cin * cout * qnet.weight_bits / 8)
+            total_param_bytes += wbytes
+            layer_mems.append(LayerMem(
+                name=f"conv{kh}x{kw}x{cin}->{cout}",
+                in_shape=in_shape, out_shape=shape, act_bits=T,
+                weight_bytes=wbytes,
+                # row-based reuse: each input row read once per (out-channel
+                # pass, time step); kernel rows re-fetched per output row.
+                act_reads=T * cin * shape[0] * in_shape[1] * kh // 1,
+                act_writes=int(np.prod(shape)),
+                weight_reads=T * cin * cout * kh * kw * shape[0],
+            ))
+            max2d = max(max2d, int(np.prod(shape)))
+        elif kind == "linear":
+            fin, fout = qp["w_q"].shape
+            shape = (fout,)
+            wbytes = math.ceil(fin * fout * qnet.weight_bits / 8)
+            total_param_bytes += wbytes
+            layer_mems.append(LayerMem(
+                name=f"linear{fin}->{fout}",
+                in_shape=in_shape, out_shape=shape, act_bits=T,
+                weight_bytes=wbytes,
+                act_reads=T * fin, act_writes=fout,
+                weight_reads=T * fin * fout,
+            ))
+            max1d = max(max1d, fin, fout)
+        elif kind == "pool":
+            win = cfg["window"]
+            shape = (shape[0] // win, shape[1] // win, shape[2])
+            layer_mems.append(LayerMem(
+                name=f"pool{win}", in_shape=in_shape, out_shape=shape,
+                act_bits=T, weight_bytes=0,
+                act_reads=T * int(np.prod(in_shape)),
+                act_writes=int(np.prod(shape)), weight_reads=0,
+            ))
+            max2d = max(max2d, int(np.prod(shape)))
+        elif kind == "flatten":
+            shape = (int(np.prod(shape)),)
+            max1d = max(max1d, shape[0])
+
+    buf2d = 2 * math.ceil(max2d * T / 8)          # ping + pong, T-bit packed
+    buf1d = 2 * math.ceil(max1d * T / 8)
+    needs_dram = total_param_bytes > bram_capacity_bytes
+    return MemoryReport(
+        layers=layer_mems,
+        buf2d_bytes=buf2d,
+        buf1d_bytes=buf1d,
+        weight_bram_bytes=0 if needs_dram else total_param_bytes,
+        needs_dram=needs_dram,
+        total_param_bytes=total_param_bytes,
+    )

@@ -1,0 +1,79 @@
+"""Neuron models.
+
+The paper's processing units implement, per layer:
+
+    acc   = sum over (input channels, time steps) of gated weight adds,
+            with a one-bit left shift between time steps  (Horner),
+    out   = ReLU(acc) requantized to a T-step radix spike train.
+
+``radix_membrane`` is that Horner accumulation; ``radix_fire`` is the
+ReLU+requantize output stage (the radix-IF neuron: the output spike at step t
+is the t-th most significant bit of the clipped membrane).  A conventional
+(leaky) integrate-and-fire neuron is provided for the rate-coding baseline.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+
+__all__ = ["radix_membrane", "radix_fire", "lif_step", "lif_run"]
+
+
+def radix_membrane(per_step_currents: jax.Array) -> jax.Array:
+    """Horner accumulation over the time axis (axis 0, MSB first).
+
+    ``acc_t = (acc_{t-1} << 1) + I_t`` — so the result equals
+    ``sum_t I_t * 2^(T-1-t)`` at full integer precision, matching the
+    accelerator's output logic (Fig. 2, "<<" block).
+    """
+
+    def body(acc, cur):
+        return (acc << 1) + cur, None
+
+    acc0 = jnp.zeros(per_step_currents.shape[1:], jnp.int32)
+    acc, _ = jax.lax.scan(body, acc0, per_step_currents.astype(jnp.int32))
+    return acc
+
+
+def radix_fire(acc: jax.Array, num_steps: int, requant_mult: jax.Array | float) -> jax.Array:
+    """ReLU + requantize a membrane value to integer level [0, 2^T - 1].
+
+    ``requant_mult`` folds input scale, weight scale and output scale
+    (see core/conversion.py).  floor() models truncation in hardware.
+    Shared verbatim by the quantized-ANN twin so both paths are bit-exact.
+    """
+    lvl = encoding.max_level(num_steps)
+    q = jnp.floor(acc.astype(jnp.float32) * requant_mult)
+    return jnp.clip(q, 0, lvl).astype(jnp.uint8 if num_steps <= 8 else jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Conventional LIF neuron — rate-coding baseline (Fang et al. style models).
+# ---------------------------------------------------------------------------
+
+
+def lif_step(v: jax.Array, current: jax.Array, *, leak: float = 1.0, threshold: float = 1.0):
+    """One LIF step: integrate, fire on threshold, soft reset (subtract)."""
+    v = v * leak + current
+    spike = (v >= threshold).astype(current.dtype)
+    v = v - spike * threshold
+    return v, spike
+
+
+def lif_run(
+    currents: jax.Array, *, leak: float = 1.0, threshold: float = 1.0
+) -> jax.Array:
+    """Run a LIF neuron over a (T, ...) current sequence; returns spikes."""
+
+    def body(v, cur):
+        v, s = lif_step(v, cur, leak=leak, threshold=threshold)
+        return v, s
+
+    v0 = jnp.zeros(currents.shape[1:], currents.dtype)
+    _, spikes = jax.lax.scan(body, v0, currents)
+    return spikes

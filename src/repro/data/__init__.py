@@ -1,0 +1,6 @@
+"""Input pipelines: procedural datasets + sharded, prefetching loaders."""
+
+from repro.data.synthetic import SyntheticVision, synthetic_tokens
+from repro.data.pipeline import ShardedLoader, Prefetcher
+
+__all__ = ["SyntheticVision", "synthetic_tokens", "ShardedLoader", "Prefetcher"]

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the paper's compute hot spots (bit-serial radix
+# matmul/conv + spike encoder), with jnp oracles in ref.py and jit'd
+# wrappers in ops.py.  Validated in interpret mode on CPU; TPU is the target.
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle spells out the radix bit-serial math explicitly (independent of
+core/layers.py) so the kernels are checked against a second implementation.
+All reductions accumulate in int32 — the kernels must match bit-exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["radix_matmul_ref", "radix_conv2d_ref", "spike_encode_ref"]
+
+
+def radix_matmul_ref(
+    x_q: jax.Array, w_q: jax.Array, num_steps: int
+) -> jax.Array:
+    """Bit-serial matmul oracle.
+
+    out[m, n] = sum_t 2^(T-1-t) * sum_k plane_t[m, k] * w[k, n]
+    with plane_t[m, k] = (x_q[m, k] >> (T-1-t)) & 1.
+
+    Mathematically equal to ``x_q @ w_q`` (the radix identity), but written
+    bit-serially on purpose: the oracle mirrors the paper's dataflow.
+    """
+    x = x_q.astype(jnp.int32)
+    acc = jnp.zeros((x.shape[0], w_q.shape[1]), jnp.int32)
+    for t in range(num_steps):
+        shift = num_steps - 1 - t
+        plane = (x >> shift) & 1
+        acc = (acc << 1) + jax.lax.dot_general(
+            plane, w_q.astype(jnp.int32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    return acc
+
+
+def radix_conv2d_ref(
+    x_q: jax.Array, w_q: jax.Array, num_steps: int
+) -> jax.Array:
+    """Bit-serial stride-1 VALID conv oracle (NHWC x HWIO -> NHWC, int32)."""
+    x = x_q.astype(jnp.int32)
+    acc = None
+    for t in range(num_steps):
+        shift = num_steps - 1 - t
+        plane = ((x >> shift) & 1).astype(jnp.int32)
+        part = jax.lax.conv_general_dilated(
+            plane, w_q.astype(jnp.int32),
+            window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32,
+        )
+        acc = part if acc is None else (acc << 1) + part
+    return acc
+
+
+def spike_encode_ref(x: jax.Array, num_steps: int, scale: float) -> jax.Array:
+    """Quantize float -> packed radix levels (uint8), floor + clip."""
+    lvl = (1 << num_steps) - 1
+    q = jnp.floor(x / scale * (lvl + 1))
+    return jnp.clip(q, 0, lvl).astype(jnp.uint8)

@@ -1,0 +1,120 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  Only the dry-run gets 512 placeholder devices; tests and
+#   benches see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell.
+
+For each cell on the 16x16 single-pod mesh (and the 2x16x16 multi-pod mesh
+with --multi-pod), this driver:
+
+  1. builds abstract inputs (ShapeDtypeStructs, no allocation),
+  2. jit-lowers train_step / prefill / decode_step with the full sharding
+     rules (parallel/sharding.py),
+  3. compiles — sharding mismatches, unsupported collectives and
+     compile-time OOMs fail HERE, which is the point of the exercise,
+  4. records memory_analysis / cost_analysis / loop-adjusted roofline terms
+     to a JSON report (EXPERIMENTS.md §Dry-run / §Roofline read from it).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma_2b --cell train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--quant radix]
+  python -m repro.launch.dryrun --all --out reports/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import LM_ARCHS, get_config
+from repro.launch import cells as cells_lib
+from repro.launch import roofline as roof_lib
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, cell: str, multi_pod: bool, quant: str = "none",
+             moe_impl: str = "auto", seq_shard: bool = True,
+             remat: bool = True, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    lowered, meta = cells_lib.lower_cell(
+        arch, cell, mesh, quant=quant, moe_impl=moe_impl,
+        seq_shard=seq_shard, remat=remat)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    rep = roof_lib.roofline(arch, cell, mesh_name, chips, compiled,
+                            meta["model_flops"])
+    out = rep.to_dict()
+    out.update(quant=quant, moe_impl=moe_impl, seq_shard=seq_shard,
+               remat=remat, lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), status="ok")
+    if verbose:
+        print(f"[dryrun] {roof_lib.format_row(rep)}  "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        if rep.memory_per_device:
+            gb = {k: v / 2**30 for k, v in rep.memory_per_device.items()}
+            print(f"         memory/device GiB: " +
+                  " ".join(f"{k}={v:.2f}" for k, v in gb.items()))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quant", default="none", choices=["none", "radix"])
+    ap.add_argument("--moe-impl", default="auto")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        matrix = cells_lib.cell_matrix()
+    else:
+        assert args.arch and args.cell, "--arch and --cell (or --all)"
+        matrix = ((args.arch, args.cell),)
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results, failures = [], []
+    for multi_pod in meshes:
+        for arch, cell in matrix:
+            try:
+                results.append(run_cell(
+                    arch, cell, multi_pod, quant=args.quant,
+                    moe_impl=args.moe_impl,
+                    seq_shard=not args.no_seq_shard))
+            except Exception as e:  # a failure here is a sharding bug
+                traceback.print_exc()
+                rec = {"arch": arch, "cell": cell,
+                       "mesh": "2x16x16" if multi_pod else "16x16",
+                       "status": "fail",
+                       "error": f"{type(e).__name__}: {e}"}
+                failures.append(rec)
+                results.append(rec)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"[dryrun] wrote {len(results)} cells to {args.out}")
+    print(f"[dryrun] {len(results) - len(failures)}/{len(results)} cells OK")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

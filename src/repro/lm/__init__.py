@@ -1,0 +1,11 @@
+"""LM architecture zoo: one composable model covering all assigned archs.
+
+``config.ArchConfig`` describes an architecture declaratively (block pattern,
+dims, MoE, attention variant); ``model.py`` builds init/forward/train/serve
+functions from it; ``radix.py`` integrates the paper's radix encoding as a
+first-class serving feature (quantized projections + radix KV cache).
+"""
+
+from repro.lm.config import ArchConfig, MoEConfig, ShapeCell, SHAPE_CELLS
+
+__all__ = ["ArchConfig", "MoEConfig", "ShapeCell", "SHAPE_CELLS"]

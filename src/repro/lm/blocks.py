@@ -1,0 +1,505 @@
+"""Functional building blocks for the LM zoo.
+
+Everything is a pure function of (params-dict, inputs); model.py composes
+them per ArchConfig.  Distribution is GSPMD-first (pjit propagates shardings
+through these einsums); the MoE block additionally has explicit shard_map
+dispatch variants (see moe.py).
+
+Conventions:
+  activations  (B, S, d)  dtype cfg.dtype (bf16 default)
+  q/k/v        (B, S, H, hd)
+  KV cache     dict(k=(B, S_max, Hkv, hd), v=..., plus radix scales)
+  positions    (B, S) int32  (or (3, B, S) for M-RoPE)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.lm.config import ArchConfig
+
+__all__ = ["norm", "rope_apply", "attention", "decode_attention", "ffn",
+           "rglru_block", "rwkv6_block", "conv1d_causal"]
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+
+def norm(x: jax.Array, p: dict, kind: str) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind in ("rmsnorm", "gemma_rmsnorm"):
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        xf = xf * lax.rsqrt(var + 1e-6)
+        w = p["w"].astype(jnp.float32)
+        scale = (1.0 + w) if kind == "gemma_rmsnorm" else w
+        return (xf * scale).astype(x.dtype)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        xf = (xf - mu) * lax.rsqrt(var + 1e-5)
+        return (xf * p["w"] + p["b"]).astype(x.dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + Qwen2-VL M-RoPE).
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions: jax.Array, hd: int, theta: float) -> jax.Array:
+    """(..., S) positions -> (..., S, hd//2) angles."""
+    freq = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    return positions.astype(jnp.float32)[..., None] * freq
+
+
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: Optional[Tuple[int, ...]] = None) -> jax.Array:
+    """Rotate (B, S, H, hd).  positions (B, S), or (3, B, S) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the hd//2 rotary frequencies are split into sections
+    (temporal, height, width); each section takes its angle from the
+    corresponding positional stream.  Text tokens carry identical streams, so
+    M-RoPE == RoPE on text (tested).
+    """
+    hd = x.shape[-1]
+    if mrope_sections is not None:
+        assert positions.ndim == 3, "M-RoPE wants (3, B, S) positions"
+        angles = _rope_angles(positions, hd, theta)        # (3, B, S, hd/2)
+        parts, start = [], 0
+        for i, sec in enumerate(mrope_sections):
+            parts.append(angles[i, ..., start:start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)              # (B, S, hd/2)
+    else:
+        ang = _rope_angles(positions, hd, theta)           # (B, S, hd/2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)       # (B, S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill): query-chunked, GQA, causal or local window.
+# ---------------------------------------------------------------------------
+
+
+def _qkv(x, p, cfg: ArchConfig):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])            # (B,S,H,hd)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])            # (B,S,Hkv,hd)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """(B,Sq,H,hd) x (B,Sk,Hkv,hd) -> (B,H,Sq,Sk) without repeating K."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    s = jnp.einsum("bqhgk,bshk->bhgqs", qg, k)
+    return s.reshape(B, Hkv * g, Sq, s.shape[-1])
+
+
+def _gqa_out(probs, v):
+    """(B,H,Sq,Sk) x (B,Sk,Hkv,hd) -> (B,Sq,H,hd)."""
+    B, H, Sq, Sk = probs.shape
+    Hkv = v.shape[2]
+    g = H // Hkv
+    pg = probs.reshape(B, Hkv, g, Sq, Sk)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", pg, v)
+    return o.reshape(B, Sq, H, o.shape[-1])
+
+
+def attention(x: jax.Array, p: dict, cfg: ArchConfig, positions: jax.Array,
+              *, window: int = 0, cross_kv: Optional[Tuple] = None,
+              return_kv: bool = False, causal: bool = True):
+    """Full/local self-attention (or cross-attention when ``cross_kv``).
+
+    Query-chunked: scores materialize (B, H, chunk, Sk) at a time — the
+    VMEM-residency analogue of flash attention expressed at the XLA level,
+    bounding the transient instead of the full (S, S) score matrix.
+    """
+    B, S, _ = x.shape
+    hd = cfg.hd
+    if cross_kv is None:
+        q, k, v = _qkv(x, p, cfg)
+        if cfg.pos_embed == "rope":
+            sec = cfg.mrope_sections
+            q = rope_apply(q, positions, cfg.rope_theta, sec)
+            k = rope_apply(k, positions, cfg.rope_theta, sec)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k, v = cross_kv
+        causal = False
+
+    scale = hd ** -0.5
+    Sk = k.shape[1]
+    chunk = min(cfg.attn_chunk, S) if cfg.attn_chunk else S
+    if S % chunk:
+        chunk = S          # irregular lengths: single-pass fallback
+
+    kpos = jnp.arange(Sk)
+
+    def attend_chunk(qc, qpos):
+        s = _gqa_scores(qc, k).astype(jnp.float32) * scale  # (B,H,cq,Sk)
+        if causal:
+            m = qpos[:, None] >= kpos[None, :]
+            if window:
+                m &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(m[None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        return _gqa_out(pr, v)
+
+    if chunk >= S:
+        o = attend_chunk(q, positions[0] if positions.ndim == 2 else positions[0, 0])
+    else:
+        assert S % chunk == 0, (S, chunk)
+        qpos_all = positions[0] if positions.ndim == 2 else positions[0, 0]
+        qs = q.reshape(B, S // chunk, chunk, cfg.n_heads, hd).swapaxes(0, 1)
+        ps = qpos_all.reshape(S // chunk, chunk)
+        o = lax.map(lambda args: attend_chunk(*args), (qs, ps))
+        o = o.swapaxes(0, 1).reshape(B, S, cfg.n_heads, hd)
+
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode attention: one new token against a (possibly sharded) KV cache.
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(x: jax.Array, p: dict, cfg: ArchConfig, cache: dict,
+                     pos: jax.Array, *, window: int = 0,
+                     cross: bool = False) -> Tuple[jax.Array, dict]:
+    """x (B, 1, d); cache {k, v} (B, S_max, Hkv, hd) (+ scales if radix).
+
+    The KV sequence axis is sharded over the 'model' mesh axis at pod scale
+    (flash-decoding style sequence parallelism): scores and the probability-
+    weighted value sum contract over the sharded axis, and GSPMD inserts the
+    small (B, H, hd) all-reduce — DESIGN.md §5 'SP'.
+    """
+    from repro.lm import radix as radix_lib
+
+    B = x.shape[0]
+    hd = cfg.hd
+    if cross:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k, v = radix_lib.cache_read(cache, cfg)
+        mask = None
+    else:
+        q, knew, vnew = _qkv(x, p, cfg)
+        if cfg.pos_embed == "rope":
+            if cfg.mrope_sections is None:
+                posb = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
+                q = rope_apply(q, posb, cfg.rope_theta)
+                knew = rope_apply(knew, posb, cfg.rope_theta)
+            else:
+                pos3 = jnp.broadcast_to(pos.reshape(1, -1, 1), (3, B, 1))
+                q = rope_apply(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+                knew = rope_apply(knew, pos3, cfg.rope_theta, cfg.mrope_sections)
+        cache = radix_lib.cache_update(cache, knew, vnew, pos, cfg,
+                                       window=window)
+        k, v = radix_lib.cache_read(cache, cfg)
+        S = k.shape[1]
+        if window:
+            # ring buffer: slot i holds absolute position pos - ((pos-i) % W),
+            # which is always within the window; mask only unwritten slots.
+            slots = jnp.arange(S)
+            abs_pos = pos - ((pos - slots) % window)
+            valid = (abs_pos >= 0)[None, :]
+        else:
+            kpos = jnp.arange(S)
+            valid = kpos[None, :] <= pos.reshape(-1, 1)
+        mask = valid[:, None, None, :]                     # (B,1,1,S)
+
+    s = _gqa_scores(q, k).astype(jnp.float32) * hd ** -0.5  # (B,H,1,S)
+    if mask is not None:
+        s = jnp.where(mask, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = _gqa_out(pr, v)                                     # (B,1,H,hd)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# Channel mixing: dense FFN variants.
+# ---------------------------------------------------------------------------
+
+
+def ffn(x: jax.Array, p: dict, cfg: ArchConfig) -> jax.Array:
+    from repro.lm import radix as radix_lib
+    matmul = functools.partial(radix_lib.maybe_radix_matmul, cfg=cfg)
+    if cfg.act in ("swiglu", "geglu"):
+        g = matmul(x, p["w_gate"])
+        u = matmul(x, p["w_up"])
+        h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * u
+        return matmul(h, p["w_down"])
+    if cfg.act == "gelu_mlp":
+        return matmul(jax.nn.gelu(matmul(x, p["w_up"])), p["w_down"])
+    if cfg.act == "relu_sq":
+        return matmul(jnp.square(jax.nn.relu(matmul(x, p["w_up"]))), p["w_down"])
+    raise ValueError(cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma).
+# ---------------------------------------------------------------------------
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x (B, S, C), w (K, C).  With ``state``
+    (B, K-1, C) runs in streaming mode and returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    if state is None:
+        return y
+    return y, xp[:, -(K - 1):, :]
+
+
+def _rglru_scan(a: jax.Array, bx: jax.Array, h0: Optional[jax.Array]):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan over S.  (B,S,W)."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def rglru_block(x: jax.Array, p: dict, cfg: ArchConfig,
+                state: Optional[dict] = None, *, return_state: bool = False):
+    """Griffin recurrent block: [linear -> conv -> RG-LRU] * gate -> out.
+
+    Recurrence (per channel): r,i = sigmoid(W_a x), sigmoid(W_x x);
+    a = a_param^(8 r); h = a h_- + sqrt(1-a^2) (i * x).
+    Train/prefill uses an associative scan (O(log S) depth); decode carries
+    (conv_state, h) and costs O(1) per token.
+    """
+    W = cfg.lru_width or cfg.d_model
+    K = p["conv_w"].shape[0]
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])              # (B,S,W)
+    u_pre = x @ p["w_rec_in"]
+    if state is None:
+        u = conv1d_causal(u_pre, p["conv_w"])
+        # streaming conv state = last K-1 raw inputs (zero-padded sequences
+        # shorter than K-1 behave identically because conv pads with zeros)
+        conv_state_new = (
+            jnp.pad(u_pre, ((0, 0), (max(K - 1 - u_pre.shape[1], 0), 0), (0, 0)))
+            [:, -(K - 1):, :] if return_state else None)
+    else:
+        u, conv_state_new = conv1d_causal(u_pre, p["conv_w"], state["conv"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a_max = -8.0 * jax.nn.softplus(p["lambda_p"])       # (W,) < 0
+    a = jnp.exp(log_a_max * r)                              # (B,S,W)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * uf)
+
+    if state is None:
+        h = _rglru_scan(a, bx, None)
+        new_state = ({"conv": conv_state_new, "h": h[:, -1, :]}
+                     if return_state else None)
+    else:
+        h = a * state["h"][:, None, :] + bx                 # S == 1 decode
+        new_state = {"conv": conv_state_new, "h": h[:, -1, :]}
+
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return (y, new_state) if (state is not None or return_state) else y
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 'Finch' time mix (data-dependent decay) + channel mix.
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x_{t-1} stream.  prev (B, d) is the carry for decode."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _rwkv_chunk_scan(r, k, v, w, u, chunk: int, remat_body: bool = False):
+    """Chunked linear recurrence (all (B, H, S, hd), decay w in (0,1)):
+
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+        o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+
+    Per chunk (length C), with L = inclusive cumsum(log w) and E = exclusive:
+
+        intra:  o_t += sum_{j<t} (r_t e^{E_t}) . (k_j e^{-L_j}) v_j
+        diag:   o_t += (r_t . u k_t) v_t
+        inter:  o_t += (r_t e^{E_t}) . S_in
+        state:  S_out = e^{L_C} . S_in + sum_j (k_j e^{L_C - L_j}) v_j^T
+
+    All exponents except -L_j are <= 0 (stable); -L_j is clipped at 30 —
+    terms whose true decay is below e^-30 contribute ~1e-13 and truncate
+    harmlessly.  This is the GLA-style block-parallel form: one scan over
+    S/C chunks carrying a (B, H, hd, hd) state, attention-like einsums
+    inside — the MXU-friendly TPU adaptation of RWKV's sequential loop.
+    """
+    B, H, S, hd = r.shape
+    assert S % chunk == 0, (S, chunk)
+    N = S // chunk
+    # (N, B, H, C, hd) chunked views, scan over axis 0
+    rs, ks, vs, ws = (t.reshape(B, H, N, chunk, hd).transpose(2, 0, 1, 3, 4)
+                      for t in (r, k, v, w))
+    logw = jnp.log(jnp.clip(ws.astype(jnp.float32), 1e-9, 1.0))
+    L = jnp.cumsum(logw, axis=3)                            # inclusive
+    E = L - logw                                            # exclusive
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def body(S0, xs):
+        rc, kc, vc, Lc, Ec = xs
+        rf, kf, vf = (t.astype(jnp.float32) for t in (rc, kc, vc))
+        # intra-chunk decay matrix computed directly in log space:
+        # diff[t, j, c] = E_t[c] - L_j[c] <= 0 for j < t — no overflow, and
+        # no catastrophic underflow from factorizing exp(E)·exp(-L).
+        # (A bf16 variant of D was measured and REFUTED: XLA materializes
+        # the f32 exp before the cast, so converts only added traffic —
+        # EXPERIMENTS.md §Perf cell A, iteration A5.)
+        diff = Ec[..., :, None, :] - Lc[..., None, :, :]    # (B,H,C,C,hd)
+        D = jnp.exp(jnp.where(tri[..., None] > 0, diff, -jnp.inf))
+        att = jnp.einsum("bhtc,bhjc,bhtjc->bhtj", rf, kf, D)
+        o = jnp.einsum("bhtj,bhjd->bhtd", att, vf)
+        o = o + (rf * u * kf).sum(-1, keepdims=True) * vf   # diag bonus
+        q_ = rf * jnp.exp(Ec)                               # decay-to-chunk-start
+        o = o + jnp.einsum("bhtc,bhcd->bhtd", q_, S0)       # inter-chunk
+        Lc_last = Lc[..., -1:, :]                           # (B,H,1,hd)
+        k_hat = kf * jnp.exp(Lc_last - Lc)
+        S1 = S0 * jnp.exp(Lc_last[..., 0, :])[..., :, None] \
+            + jnp.einsum("bhjc,bhjd->bhcd", k_hat, vf)
+        return S1, o
+
+    if remat_body:
+        # §Perf cell A: the (B,H,C,C,hd) intra-chunk decay tensor would be
+        # stacked as a backward residual for every chunk (~C x the residual
+        # bytes of anything else in the layer); recomputing it in the
+        # backward pass trades cheap VPU flops for that HBM traffic.
+        body = jax.checkpoint(body)
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    S_final, os = lax.scan(body, S0, (rs, ks, vs, L, E))
+    return os.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd), S_final
+
+
+def _rwkv_step(r, k, v, w, u, S0):
+    """Single decode step: inputs (B, H, hd); S0 (B, H, hd, hd) fp32."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wkv = S0 + u[..., :, None] * kf[..., :, None] * vf[..., None, :]
+    o = jnp.einsum("bhc,bhcd->bhd", rf, wkv)
+    S1 = S0 * w.astype(jnp.float32)[..., :, None] \
+        + kf[..., :, None] * vf[..., None, :]
+    return o, S1
+
+
+def _shard_last_over_model(t: jax.Array, mesh) -> jax.Array:
+    """Constrain the trailing (head_dim) axis over 'model' — RWKV's 40
+    heads don't divide the model axis, so without this the whole wkv
+    recurrence replicates across model ranks (§Perf cell A, iteration A3)."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return t
+    if mesh.shape["model"] == 1 or t.shape[-1] % mesh.shape["model"]:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    spec = P(dp, *([None] * (t.ndim - 2)), "model")
+    return lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+
+def rwkv6_block(x: jax.Array, p: dict, cfg: ArchConfig,
+                state: Optional[dict] = None, *, chunk: int = 64,
+                return_state: bool = False, mesh=None):
+    """RWKV-6 'Finch' time mix: token shift, per-projection mu mixing,
+    LOW-RANK DATA-DEPENDENT DECAY (the Finch contribution), wkv recurrence,
+    per-head groupnorm, silu(g) gate.  x (B, S, d).
+
+    Decode mode (state != None, S == 1) carries {"last_x": (B,d),
+    "S": (B,H,hd,hd) fp32} and runs the O(1) step.
+    """
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    prev = state["last_x"] if state is not None else None
+    sx = _token_shift(x, prev) - x                          # (B,S,d)
+
+    def mix(tag):
+        return x + sx * p[f"mu_{tag}"].astype(x.dtype)
+
+    r = mix("r") @ p["w_r"]
+    k = mix("k") @ p["w_k"]
+    v = mix("v") @ p["w_v"]
+    g = jax.nn.silu(mix("g") @ p["w_g"])
+    # Finch decay: w = exp(-exp(w0 + lora)) in (0, 1), data-dependent
+    lora = jnp.tanh(mix("w") @ p["w_dec_a"]) @ p["w_dec_b"]
+    logit = p["w_dec0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(logit, -20.0, 6.0)))      # (B,S,d)
+
+    def heads(t):
+        return t.reshape(B, S, H, hd).transpose(0, 2, 1, 3)  # (B,H,S,hd)
+
+    u = p["u_bonus"].astype(jnp.float32)                     # (H, hd)
+    if state is None:
+        chunk = min(cfg.rwkv_chunk or chunk, S)
+        if S % chunk:
+            chunk = S
+        rh, kh, vh, wh = (_shard_last_over_model(heads(t), mesh)
+                          for t in (r, k, v, w))
+        o, S_fin = _rwkv_chunk_scan(rh, kh, vh, wh,
+                                    u[None, :, None, :], chunk=chunk,
+                                    remat_body=cfg.rwkv_remat_chunk)
+        new_state = ({"last_x": x[:, -1, :], "S": S_fin}
+                     if return_state else None)
+    else:
+        S0 = state["S"]
+        o1, S1 = _rwkv_step(heads(r)[:, :, 0], heads(k)[:, :, 0],
+                            heads(v)[:, :, 0], heads(w)[:, :, 0],
+                            u[None], S0)
+        o = o1[:, :, None, :]
+        new_state = {"last_x": x[:, -1, :], "S": S1}
+
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H, hd)         # (B,S,H,hd)
+    # per-head groupnorm
+    of = o.astype(jnp.float32)
+    mu = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    o = ((of - mu) * lax.rsqrt(var + 1e-5) * p["gn_w"] + p["gn_b"])
+    o = o.reshape(B, S, d).astype(x.dtype) * g
+    y = o @ p["w_o"]
+    return (y, new_state) if (state is not None or return_state) else y
+
+
+def rwkv6_channel_mix(x: jax.Array, p: dict,
+                      state: Optional[dict] = None, *,
+                      return_state: bool = False):
+    """RWKV channel mix: token-shifted squared-relu MLP with receptance."""
+    prev = state["last_x"] if state is not None else None
+    sx = _token_shift(x, prev) - x
+    xk = x + sx * p["mu_ck"].astype(x.dtype)
+    xr = x + sx * p["mu_cr"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_ck"]))
+    y = jax.nn.sigmoid(xr @ p["w_cr"]) * (kk @ p["w_cv"])
+    if state is not None or return_state:
+        return y, {"last_x": x[:, -1, :]}
+    return y

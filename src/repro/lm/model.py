@@ -1,0 +1,715 @@
+"""Model construction: init / train / prefill / decode from an ArchConfig.
+
+One composable implementation covers all ten assigned architectures:
+layer *segments* (whole block-pattern periods) are stacked and executed with
+``lax.scan`` so an 80-layer model compiles one scan body; block types inside
+a period (attn / local_attn / rglru / rwkv6) are applied in sequence by the
+body.  Caches mirror the segment structure.
+
+Public surface (all pure functions; `mesh=None` -> single-device semantics):
+
+    init_params(key, cfg)                  real parameters
+    abstract_params(cfg)                   ShapeDtypeStructs (dry-run)
+    radixify_params(params, cfg)           paper-technique serving weights
+    forward_train(params, batch, cfg, mesh)        -> logits, aux
+    loss_fn(params, batch, cfg, mesh)              -> loss, metrics
+    make_train_step(cfg, mesh, opt)                -> step fn
+    init_cache(cfg, batch, max_len) / abstract_cache(...)
+    prefill(params, batch, cfg, mesh, max_len)     -> last_logits, cache
+    decode_step(params, cache, tokens, pos, cfg, mesh) -> logits, cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.lm import blocks, moe as moe_lib, radix as radix_lib
+from repro.lm.config import ArchConfig, segments_for
+from repro.train import optim as optim_lib
+
+__all__ = [
+    "init_params", "abstract_params", "radixify_params",
+    "forward_train", "loss_fn", "make_train_step",
+    "init_cache", "prefill", "decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Initialization.
+# ---------------------------------------------------------------------------
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _nrm(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _init_norm(cfg: ArchConfig):
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "gemma_rmsnorm":
+        return {"w": jnp.zeros((d,), jnp.float32)}   # effective scale 1 + w
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def _init_attn(key, cfg: ArchConfig, cross: bool = False):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 4)
+    s_in = d ** -0.5
+    s_out = (H * hd * 2 * cfg.n_layers) ** -0.5
+    p = {
+        "wq": _nrm(ks[0], (d, H, hd), s_in, dt),
+        "wo": _nrm(ks[3], (H, hd, d), s_out, dt),
+    }
+    if not cross:
+        p["wk"] = _nrm(ks[1], (d, Hkv, hd), s_in, dt)
+        p["wv"] = _nrm(ks[2], (d, Hkv, hd), s_in, dt)
+    else:
+        p["wk"] = _nrm(ks[1], (d, Hkv, hd), s_in, dt)
+        p["wv"] = _nrm(ks[2], (d, Hkv, hd), s_in, dt)
+    return p
+
+
+def _init_ffn(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, (f * 2 * cfg.n_layers) ** -0.5
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": _nrm(ks[0], (d, f), s_in, dt),
+                "w_up": _nrm(ks[1], (d, f), s_in, dt),
+                "w_down": _nrm(ks[2], (f, d), s_out, dt)}
+    return {"w_up": _nrm(ks[0], (d, f), s_in, dt),
+            "w_down": _nrm(ks[1], (f, d), s_out, dt)}
+
+
+def _init_moe(key, cfg: ArchConfig):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, (f * 2 * cfg.n_layers) ** -0.5
+    p = {
+        "router": _nrm(ks[0], (d, E), s_in, jnp.float32),
+        "w_gate": _nrm(ks[1], (E, d, f), s_in, dt),
+        "w_up": _nrm(ks[2], (E, d, f), s_in, dt),
+        "w_down": _nrm(ks[3], (E, f, d), s_out, dt),
+    }
+    if m.num_shared:
+        p["shared"] = _init_ffn(ks[4], cfg, d_ff=m.num_shared * f)
+    return p
+
+
+def _init_rglru(key, cfg: ArchConfig):
+    d = cfg.d_model
+    W = cfg.lru_width or d
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    sw = W ** -0.5
+    # lambda_p init so a^8 in (0.9, 0.999) at r=1 (Griffin appendix)
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jax.random.uniform(ks[5], (W,), jnp.float32, 0.9, 0.999)) / 8.0))
+    return {
+        "w_gate_branch": _nrm(ks[0], (d, W), s, dt),
+        "w_rec_in": _nrm(ks[1], (d, W), s, dt),
+        "conv_w": _nrm(ks[2], (cfg.conv_width, W), 0.25, jnp.float32),
+        "w_a": _nrm(ks[3], (W, W), sw, jnp.float32),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_x": _nrm(ks[4], (W, W), sw, jnp.float32),
+        "b_x": jnp.zeros((W,), jnp.float32),
+        "lambda_p": lam,
+        "w_out": _nrm(jax.random.fold_in(key, 7), (W, d),
+                      (W * 2 * cfg.n_layers) ** -0.5, dt),
+    }
+
+
+def _init_rwkv6_mix(key, cfg: ArchConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    p = {f"mu_{t}": jnp.full((d,), 0.5, jnp.float32)
+         for t in ("r", "k", "v", "g", "w")}
+    p.update({
+        "w_r": _nrm(ks[0], (d, d), s, dt),
+        "w_k": _nrm(ks[1], (d, d), s, dt),
+        "w_v": _nrm(ks[2], (d, d), s, dt),
+        "w_g": _nrm(ks[3], (d, d), s, dt),
+        "w_o": _nrm(ks[4], (d, d), (d * 2 * cfg.n_layers) ** -0.5, dt),
+        "w_dec_a": _nrm(ks[5], (d, 64), s, jnp.float32),
+        "w_dec_b": _nrm(ks[6], (64, d), 64 ** -0.5, jnp.float32),
+        "w_dec0": jnp.full((d,), 0.0, jnp.float32),   # w ~ exp(-1) decay
+        "u_bonus": _nrm(ks[7], (H, hd), 0.5, jnp.float32),
+        "gn_w": jnp.ones((H, hd), jnp.float32),
+        "gn_b": jnp.zeros((H, hd), jnp.float32),
+    })
+    return p
+
+
+def _init_rwkv6_cmix(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_ck": jnp.full((d,), 0.5, jnp.float32),
+        "mu_cr": jnp.full((d,), 0.5, jnp.float32),
+        "w_ck": _nrm(ks[0], (d, f), d ** -0.5, dt),
+        "w_cv": _nrm(ks[1], (f, d), (f * 2 * cfg.n_layers) ** -0.5, dt),
+        "w_cr": _nrm(ks[2], (d, d), d ** -0.5, dt),
+    }
+
+
+def _init_layer(key, cfg: ArchConfig, btype: str, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": _init_norm(cfg), "ln2": _init_norm(cfg)}
+    if btype in ("attn", "local_attn"):
+        p["mix"] = _init_attn(ks[0], cfg)
+    elif btype == "rglru":
+        p["mix"] = _init_rglru(ks[0], cfg)
+    elif btype == "rwkv6":
+        p["mix"] = _init_rwkv6_mix(ks[0], cfg)
+    else:
+        raise ValueError(btype)
+    if btype == "rwkv6":
+        p["ffn"] = _init_rwkv6_cmix(ks[1], cfg)
+    elif cfg.moe is not None:
+        p["ffn"] = _init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = _init_ffn(ks[1], cfg)
+    if cross:
+        p["lnx"] = _init_norm(cfg)
+        p["xattn"] = _init_attn(ks[2], cfg, cross=True)
+    return p
+
+
+def _stacked_layers(key, cfg: ArchConfig, pattern, count: int,
+                    cross: bool = False):
+    """Per-slot stacks: tuple over pattern slots, leaves (count, ...)."""
+    slots = []
+    for si, btype in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, si), count)
+        slots.append(jax.vmap(
+            lambda k: _init_layer(k, cfg, btype, cross))(keys))
+    return tuple(slots)
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = _dt(cfg)
+    p: Dict[str, Any] = {}
+    p["embed"] = _nrm(ks[0], (cfg.vocab, cfg.d_model),
+                      cfg.d_model ** -0.5, dt)
+    p["segments"] = tuple(
+        _stacked_layers(jax.random.fold_in(ks[1], i), cfg, pattern, count,
+                        cross=bool(cfg.encoder_layers))
+        for i, (pattern, count) in enumerate(segments_for(cfg)))
+    p["final_norm"] = _init_norm(cfg)
+    if not cfg.tie_embeddings:
+        p["unembed"] = _nrm(ks[2], (cfg.d_model, cfg.vocab),
+                            cfg.d_model ** -0.5, dt)
+    if cfg.pos_embed == "learned":
+        p["pos_embed"] = _nrm(ks[3], (cfg.learned_pos_max, cfg.d_model),
+                              0.02, dt)
+    if cfg.encoder_layers:
+        p["enc_segments"] = (_stacked_layers(ks[4], cfg, ("attn",),
+                                             cfg.encoder_layers),)
+        p["enc_final_norm"] = _init_norm(cfg)
+        p["enc_pos_embed"] = _nrm(ks[5], (cfg.encoder_ctx, cfg.d_model),
+                                  0.02, dt)
+    return p
+
+
+def radixify_params(params: dict, cfg: ArchConfig) -> dict:
+    """Quantize the serving-path weights (dense FFN matmuls + unembed) to
+    int8 levels + scales — the RadixQuantizedLinear weight format.  MoE
+    expert weights stay exact (DESIGN.md §Arch-applicability)."""
+    if cfg.quant != "radix":
+        return params
+    FFN_KEYS = ("w_gate", "w_up", "w_down")
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            routed = "router" in tree    # MoE expert dict: stays exact
+            out = {}
+            for k, v in tree.items():
+                if (k in FFN_KEYS and isinstance(v, jax.Array)
+                        and "ffn" in path and not routed):
+                    out[k] = radix_lib.quantize_weight(v)
+                else:
+                    out[k] = walk(v, path + (k,))
+            return out
+        if isinstance(tree, tuple):
+            return tuple(walk(v, path) for v in tree)
+        return tree
+
+    out = walk(params)
+    if not cfg.tie_embeddings and cfg.family != "moe":
+        out["unembed"] = radix_lib.quantize_weight(params["unembed"])
+    return out
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    fn = lambda: radixify_params(init_params(jax.random.PRNGKey(0), cfg), cfg)
+    return jax.eval_shape(fn)
+
+
+# ---------------------------------------------------------------------------
+# Sharding-constraint helper (Megatron-SP residual sharding).
+# ---------------------------------------------------------------------------
+
+
+def _constrain(h, mesh: Optional[Mesh], spec: Optional[P]):
+    if mesh is None or spec is None:
+        return h
+    return lax.with_sharding_constraint(h, NamedSharding(mesh, spec))
+
+
+def _resid_spec(cfg: ArchConfig, mesh: Optional[Mesh], seq_len: int):
+    if mesh is None or not cfg.seq_shard:
+        return None
+    dp = moe_lib.dp_axes(mesh)
+    if "model" in mesh.axis_names and seq_len % mesh.shape["model"] == 0 \
+            and seq_len >= mesh.shape["model"]:
+        return P(dp, "model", None)
+    return P(dp, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Layer application.
+# ---------------------------------------------------------------------------
+
+
+def _channel_mix(h, lp, cfg: ArchConfig, mesh, btype: str, mode: str,
+                 cm_state=None):
+    """Returns (delta, aux, new_cm_state)."""
+    hn = blocks.norm(h, lp["ln2"], cfg.norm)
+    if btype == "rwkv6":
+        if mode == "decode":
+            y, st = blocks.rwkv6_channel_mix(hn, lp["ffn"], state=cm_state)
+            return y, 0.0, st
+        if mode == "prefill":
+            y, st = blocks.rwkv6_channel_mix(hn, lp["ffn"], return_state=True)
+            return y, 0.0, st
+        return blocks.rwkv6_channel_mix(hn, lp["ffn"]), 0.0, None
+    if cfg.moe is not None:
+        y, aux = moe_lib.moe_ffn(hn, lp["ffn"], cfg, mesh,
+                                 decode=(mode == "decode"))
+        if cfg.moe.num_shared:
+            y = y + blocks.ffn(hn, lp["ffn"]["shared"], cfg)
+        return y, aux, None
+    return blocks.ffn(hn, lp["ffn"], cfg), 0.0, None
+
+
+def _apply_layer(h, lp, btype: str, cfg: ArchConfig, mesh, positions,
+                 mode: str, cache=None, pos=None, enc_h=None, rspec=None,
+                 max_len: int = 0, causal: bool = True):
+    """One block: temporal mix (+ optional cross-attn) + channel mix.
+
+    Cache structure by block type (prefill builds it, decode consumes it):
+      attn / local_attn : {"k","v"(,"k_scale","v_scale")}  length = max_len
+                          (window caches are ring buffers of length window)
+      rglru             : {"conv": (B,K-1,W), "h": (B,W)}
+      rwkv6             : {"mix": {"last_x","S"}, "cmix": {"last_x"}}
+      whisper decoder   : {"self": <attn>, "cross": {"k","v"}}
+    Returns (h, aux, new_cache).
+    """
+    window = cfg.window if btype == "local_attn" else 0
+    has_x = "xattn" in lp
+    hn = blocks.norm(h, lp["ln1"], cfg.norm)
+    new_mix = None
+
+    if btype in ("attn", "local_attn"):
+        if mode == "train":
+            mix = blocks.attention(hn, lp["mix"], cfg, positions,
+                                   window=window, causal=causal)
+        elif mode == "prefill":
+            mix, (k, v) = blocks.attention(hn, lp["mix"], cfg, positions,
+                                           window=window, return_kv=True)
+            L = min(window, max_len) if window else max_len
+            if k.shape[1] > L:          # windowed: keep the last L positions
+                k, v = k[:, -L:], v[:, -L:]
+            pad = L - k.shape[1]
+            if pad:
+                z = jnp.zeros((k.shape[0], pad) + k.shape[2:], k.dtype)
+                k = jnp.concatenate([k, z], 1)
+                v = jnp.concatenate([v, z], 1)
+            new_mix = radix_lib.encode_cache_bulk(
+                k.astype(_dt(cfg)), v.astype(_dt(cfg)), cfg, _dt(cfg))
+        else:
+            self_cache = cache["self"] if has_x else cache
+            mix, new_mix = blocks.decode_attention(
+                hn, lp["mix"], cfg, self_cache, pos, window=window)
+    elif btype == "rglru":
+        if mode == "train":
+            mix = blocks.rglru_block(hn, lp["mix"], cfg)
+        elif mode == "prefill":
+            mix, new_mix = blocks.rglru_block(hn, lp["mix"], cfg,
+                                              return_state=True)
+        else:
+            mix, new_mix = blocks.rglru_block(hn, lp["mix"], cfg, state=cache)
+    elif btype == "rwkv6":
+        if mode == "train":
+            mix = blocks.rwkv6_block(hn, lp["mix"], cfg, mesh=mesh)
+        elif mode == "prefill":
+            mix, new_mix = blocks.rwkv6_block(hn, lp["mix"], cfg,
+                                              return_state=True, mesh=mesh)
+        else:
+            mix, new_mix = blocks.rwkv6_block(hn, lp["mix"], cfg,
+                                              state=cache["mix"], mesh=mesh)
+    else:
+        raise ValueError(btype)
+    h = _constrain(h + mix, mesh, rspec)
+
+    # whisper decoder: cross-attention between self-attn and FFN
+    cross_cache = None
+    if has_x:
+        hx = blocks.norm(h, lp["lnx"], cfg.norm)
+        if mode in ("train", "prefill"):
+            k_enc = jnp.einsum("bsd,dhk->bshk", enc_h, lp["xattn"]["wk"])
+            v_enc = jnp.einsum("bsd,dhk->bshk", enc_h, lp["xattn"]["wv"])
+            xmix = blocks.attention(hx, lp["xattn"], cfg, positions,
+                                    cross_kv=(k_enc, v_enc))
+            if mode == "prefill":
+                cross_cache = {"k": k_enc.astype(_dt(cfg)),
+                               "v": v_enc.astype(_dt(cfg))}
+        else:
+            cross_cache = cache["cross"]
+            xmix, _ = blocks.decode_attention(hx, lp["xattn"], cfg,
+                                              cross_cache, pos, cross=True)
+        h = _constrain(h + xmix, mesh, rspec)
+
+    cm_state = cache["cmix"] if (btype == "rwkv6" and mode == "decode") else None
+    y, aux, new_cm = _channel_mix(h, lp, cfg, mesh, btype, mode, cm_state)
+    h = _constrain(h + y, mesh, rspec)
+
+    if mode == "train":
+        return h, aux, None
+    if btype == "rwkv6":
+        new_cache = {"mix": new_mix, "cmix": new_cm}
+    elif has_x and btype in ("attn", "local_attn"):
+        new_cache = {"self": new_mix, "cross": cross_cache}
+    else:
+        new_cache = new_mix
+    return h, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Backbone: scan over layer segments.
+# ---------------------------------------------------------------------------
+
+
+def _backbone(params, h, cfg: ArchConfig, mesh, positions, mode: str,
+              caches=None, pos=None, enc_h=None, max_len: int = 0,
+              segments_key: str = "segments", segments=None, causal=True):
+    """Run all layer segments.  Returns (h, aux_total, new_caches)."""
+    segments = segments or segments_for(cfg)
+    rspec = _resid_spec(cfg, mesh, h.shape[1]) if mode != "decode" else None
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+
+    for i, (pattern, count) in enumerate(segments):
+        seg_p = params[segments_key][i]
+        seg_c = caches[i] if caches is not None else None
+
+        def apply_slots(h, aux, lps, cs):
+            ncs = []
+            for si, btype in enumerate(pattern):
+                c_in = cs[si] if cs is not None else None
+                h, a, nc = _apply_layer(
+                    h, lps[si], btype, cfg, mesh, positions, mode,
+                    cache=c_in, pos=pos, enc_h=enc_h, rspec=rspec,
+                    max_len=max_len, causal=causal)
+                aux = aux + a
+                ncs.append(nc)
+            return h, aux, tuple(ncs)
+
+        if cfg.scan_layers and count > 1:
+            def body(carry, xs):
+                hh, aux = carry
+                lps = xs[0]
+                cs = xs[1] if len(xs) > 1 else None
+                hh, aux, ncs = apply_slots(hh, aux, lps, cs)
+                ys = ncs if mode != "train" else None
+                return (hh, aux), ys
+
+            if cfg.remat and mode == "train":
+                body = jax.checkpoint(body)
+            xs = (seg_p, seg_c) if mode == "decode" else (seg_p,)
+            (h, aux_total), ys = lax.scan(body, (h, aux_total), xs)
+            new_caches.append(ys)
+        else:
+            ncs_all = []
+            for j in range(count):
+                lps = jax.tree.map(lambda x: x[j], seg_p)
+                cs = (jax.tree.map(lambda x: x[j], seg_c)
+                      if seg_c is not None else None)
+                h, aux_total, ncs = apply_slots(h, aux_total, lps, cs)
+                ncs_all.append(ncs)
+            if mode != "train":
+                new_caches.append(jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *ncs_all))
+            else:
+                new_caches.append(None)
+
+    return h, aux_total, tuple(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head.
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg: ArchConfig):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def _lm_head(h, params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = radix_lib.maybe_radix_matmul(h, params["unembed"], cfg=cfg)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def _positions(cfg: ArchConfig, B: int, S: int):
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(pos[None], (3, B, S))  # text: t == h == w
+    return pos
+
+
+def _input_h(params, batch, cfg: ArchConfig):
+    """(h, labels) from a batch dict (tokens, or stub embeddings)."""
+    if cfg.embedding_inputs:
+        h = batch["embeds"].astype(_dt(cfg))
+        labels = batch["labels"]
+    else:
+        tokens = batch["tokens"]
+        h = _embed(params, tokens[:, :-1], cfg)
+        labels = tokens[:, 1:]
+    if cfg.pos_embed == "learned":
+        h = h + params["pos_embed"][: h.shape[1]][None].astype(h.dtype)
+    return h, labels
+
+
+def _encode_whisper(params, enc_embeds, cfg: ArchConfig, mesh):
+    h = enc_embeds.astype(_dt(cfg)) + params["enc_pos_embed"][None].astype(_dt(cfg))
+    pos = _positions(cfg, h.shape[0], h.shape[1])
+    h, _, _ = _backbone(params, h, cfg, mesh, pos, "train",
+                        segments_key="enc_segments",
+                        segments=((("attn",), cfg.encoder_layers),),
+                        causal=False)
+    return blocks.norm(h, params["enc_final_norm"], cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Training-path forward + loss.
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, batch, cfg: ArchConfig, mesh: Optional[Mesh] = None):
+    h, labels = _input_h(params, batch, cfg)
+    enc_h = None
+    if cfg.encoder_layers:
+        enc_h = _encode_whisper(params, batch["enc_embeds"], cfg, mesh)
+    positions = _positions(cfg, h.shape[0], h.shape[1])
+    h, aux, _ = _backbone(params, h, cfg, mesh, positions, "train",
+                          enc_h=enc_h)
+    h = blocks.norm(h, params["final_norm"], cfg.norm)
+    logits = _lm_head(h, params, cfg)
+    return logits, labels, aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig, mesh: Optional[Mesh] = None,
+            aux_weight: float = 0.01):
+    logits, labels, aux = forward_train(params, batch, cfg, mesh)
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=lf.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    ce = (lse - gold).mean()
+    loss = ce + aux_weight * aux
+    acc = (lf.argmax(-1) == labels).mean()
+    return loss, {"ce": ce, "aux": aux, "acc": acc}
+
+
+def make_train_step(cfg: ArchConfig, mesh: Optional[Mesh],
+                    opt: optim_lib.Optimizer, clip_norm: float = 1.0):
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``cfg.grad_accum`` > 1 scans over microbatches (sequential grad
+    accumulation), which is how the 1T-param cells bound activation memory.
+    state = {"params", "opt", "step"}.
+    """
+
+    def grads_of(params, batch):
+        (l, m), g = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, mesh), has_aux=True)(params)
+        return l, m, g
+
+    def step(state, batch):
+        params = state["params"]
+        A = cfg.grad_accum
+        if A == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def micro(acc, mb):
+                l, m, g = grads_of(params, mb)
+                gsum, lsum = acc
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), m
+
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), ms = lax.scan(micro, (zeros, 0.0), micro_batch)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            loss = lsum / A
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        if clip_norm:
+            grads, gnorm = optim_lib.clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = optim_lib.global_norm(grads)
+        updates, new_opt = opt.update(grads, state["opt"], params)
+        new_params = optim_lib.apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, decode.
+# ---------------------------------------------------------------------------
+
+
+def _cache_entry(cfg: ArchConfig, btype: str, B: int, max_len: int,
+                 has_x: bool):
+    dt = _dt(cfg)
+    if btype in ("attn", "local_attn"):
+        L = min(cfg.window, max_len) if btype == "local_attn" else max_len
+        e = radix_lib.init_cache_entry(cfg, B, L, dt)
+        if has_x:
+            kv = (B, cfg.encoder_ctx, cfg.n_kv_heads, cfg.hd)
+            e = {"self": e, "cross": {"k": jnp.zeros(kv, dt),
+                                      "v": jnp.zeros(kv, dt)}}
+        return e
+    if btype == "rglru":
+        W = cfg.lru_width or cfg.d_model
+        return {"conv": jnp.zeros((B, cfg.conv_width - 1, W), dt),
+                "h": jnp.zeros((B, W), jnp.float32)}
+    if btype == "rwkv6":
+        d = cfg.d_model
+        hd = cfg.rwkv_head_dim
+        H = d // hd
+        return {"mix": {"last_x": jnp.zeros((B, d), dt),
+                        "S": jnp.zeros((B, H, hd, hd), jnp.float32)},
+                "cmix": {"last_x": jnp.zeros((B, d), dt)}}
+    raise ValueError(btype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    has_x = bool(cfg.encoder_layers)
+    caches = []
+    for pattern, count in segments_for(cfg):
+        slots = []
+        for btype in pattern:
+            e = _cache_entry(cfg, btype, batch, max_len, has_x)
+            slots.append(jax.tree.map(
+                lambda a: jnp.zeros((count,) + a.shape, a.dtype), e))
+        caches.append(tuple(slots))
+    return tuple(caches)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def prefill(params, batch, cfg: ArchConfig, mesh: Optional[Mesh] = None,
+            max_len: int = 0):
+    """Process the prompt; returns (last-token logits (B, V), caches).
+
+    ``max_len`` sizes the decode cache (default: prompt length).
+    """
+    h, _ = _input_h(params, batch, cfg)
+    B, S = h.shape[0], h.shape[1]
+    max_len = max_len or S
+    enc_h = None
+    if cfg.encoder_layers:
+        enc_h = _encode_whisper(params, batch["enc_embeds"], cfg, mesh)
+    positions = _positions(cfg, B, S)
+    h, _, caches = _backbone(params, h, cfg, mesh, positions, "prefill",
+                             enc_h=enc_h, max_len=max_len)
+    # ring-buffer alignment: position p must live at slot p % window
+    caches = _roll_window_caches(caches, cfg, S)
+    h = blocks.norm(h[:, -1:, :], params["final_norm"], cfg.norm)
+    logits = _lm_head(h, params, cfg)[:, 0]
+    return logits, caches
+
+
+def _roll_window_caches(caches, cfg: ArchConfig, S: int):
+    """After prefill, windowed (ring) caches hold the last W positions in
+    order starting at index 0; decode expects position p at slot p % W."""
+    if "local_attn" not in cfg.layer_types:
+        return caches
+    segs = segments_for(cfg)
+    out = []
+    for (pattern, count), seg_c in zip(segs, caches):
+        slots = []
+        for btype, c in zip(pattern, seg_c):
+            if btype == "local_attn":
+                W = c["k"].shape[2] if c["k"].ndim == 5 else c["k"].shape[1]
+                # stacked leading dim (count, B, L, ...) -> roll axis 2
+                shift = S % W if S > W else 0
+                if shift:
+                    c = {k2: (jnp.roll(v, shift, axis=2)
+                              if v.ndim >= 3 else v) for k2, v in c.items()}
+            slots.append(c)
+        out.append(tuple(slots))
+    return tuple(out)
+
+
+def decode_step(params, caches, tokens, pos, cfg: ArchConfig,
+                mesh: Optional[Mesh] = None):
+    """One decode step.  tokens (B, 1) int32 (or embeds (B, 1, d) for
+    embedding-input archs); pos () int32 — the position being written.
+    Returns (logits (B, V), new caches)."""
+    if cfg.embedding_inputs:
+        h = tokens.astype(_dt(cfg))
+    else:
+        h = _embed(params, tokens, cfg)
+    if cfg.pos_embed == "learned":
+        h = h + lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, axis=0)[None].astype(h.dtype)
+    positions = None  # decode blocks use `pos` directly
+    h, _, new_caches = _backbone(params, h, cfg, mesh, positions, "decode",
+                                 caches=caches, pos=pos)
+    h = blocks.norm(h, params["final_norm"], cfg.norm)
+    logits = _lm_head(h, params, cfg)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,227 @@
+"""Radix quantization for LM serving — the paper's technique at LM scale.
+
+The paper's radix encoding makes a T-step binary spike train the exact T-bit
+binary expansion of an integer activation (core/encoding.py).  Here that is
+applied to the two dominant memory movers of LM inference:
+
+* **RadixQuantizedLinear** (``maybe_radix_matmul``): FFN / lm-head weights
+  stored as int8 levels (paper resolution: 3-bit symmetric) with per-out-
+  channel scales; activations radix-quantized on the fly to T-bit unsigned
+  levels against a per-token scale (exactly the paper's ReLU+requantize for
+  post-activation tensors; a shifted affine variant for signed residuals).
+  The integer matmul runs at int8 MXU rate (2x bf16) and reads half the
+  weight bytes — DESIGN.md §2's "multiplier-trivial" adaptation.  A Pallas
+  bit-serial kernel variant (kernels/radix_matmul.py) computes the identical
+  result plane-by-plane and is what a spike-native accelerator would run;
+  ``use_kernel=True`` dispatches to it (interpret-mode on CPU; tests assert
+  bit-equality of both paths).
+
+* **Radix KV cache** (``cache_update`` / ``cache_read``): K/V stored as T-bit
+  radix levels (uint8) of the affine-shifted value with one f32 scale per
+  (token, kv-head).  Decode attention reads 1 byte/element instead of 2 —
+  the memory-roofline lever for decode cells (§Perf cell 3).
+
+Training always runs exact bf16/f32; ``cfg.quant == "radix"`` switches the
+serving path.  Accuracy trend vs T mirrors the paper's Table I and is
+benchmarked in benchmarks/lm_radix_accuracy.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import encoding
+from repro.lm.config import ArchConfig
+
+__all__ = ["quantize_weight", "maybe_radix_matmul", "init_cache_entry",
+           "cache_update", "cache_read"]
+
+
+# ---------------------------------------------------------------------------
+# Weights: int8 levels + per-output-channel scale (paper: 3-bit symmetric).
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight(w: jax.Array, weight_bits: int = 8) -> dict:
+    """(..., d_in, d_out) float -> {"q": int8, "scale": (..., d_out) f32}.
+
+    Per-output-channel symmetric scales; leading (e.g. stacked-layer) dims
+    are preserved so scan-over-layers slices both q and scale together."""
+    qmax = 2 ** (weight_bits - 1) - 1
+    scale = jnp.max(jnp.abs(w), axis=-2) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(w / scale[..., None, :]), -qmax, qmax).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _radix_activation(x: jax.Array, num_steps: int):
+    """Signed activation -> (uint8 radix levels, per-token scale).
+
+    Residual-stream tensors are signed; the paper's unsigned radix train is
+    applied to the affine-shifted value (x/s + 1)/2 in [0, 1] — still a T-bit
+    spike train per value, with the shift folded out after the matmul using
+    the weight column sums (exact, no approximation beyond quantization).
+    """
+    lvl = encoding.max_level(num_steps)
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32) + 1e-9
+    u = (x.astype(jnp.float32) / s + 1.0) * 0.5                  # [0, 1]
+    q = jnp.clip(jnp.round(u * lvl), 0, lvl).astype(jnp.uint8)
+    return q, s
+
+
+def maybe_radix_matmul(x: jax.Array, w, *, cfg: ArchConfig,
+                       use_kernel: bool = False) -> jax.Array:
+    """x (..., d_in) @ w -> (..., d_out).
+
+    ``w`` is a plain array (exact mode) or a quantize_weight dict (radix
+    serving mode).  The radix path computes
+
+        y = (2/lvl * q_x - 1) s_x  @  q_w s_w
+          = s_x * s_w * (2/lvl * (q_x @ q_w) - colsum(q_w))
+
+    i.e. ONE int8 matmul over packed radix levels (the radix identity: the
+    packed level == the Horner sum of bit-planes) plus a rank-1 correction.
+    ``use_kernel=True`` runs the bit-serial Pallas kernel instead of the
+    fused int8 dot — same bits, paper-faithful dataflow.
+    """
+    if not isinstance(w, dict):
+        return jnp.einsum("...d,df->...f", x, w)
+    T = cfg.radix_steps
+    lvl = encoding.max_level(T)
+    qx, sx = _radix_activation(x, T)
+    qw, sw = w["q"], w["scale"]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        acc = kops.radix_matmul(qx, qw, None, T)                 # int32
+    else:
+        # int8 MXU path holds levels up to 127 (T <= 7); wider trains fall
+        # back to int32 accumulation (the paper uses T in [3, 6])
+        qx_c = qx.astype(jnp.int8 if lvl <= 127 else jnp.int32)
+        acc = lax.dot_general(
+            qx_c, qw,
+            (((qx.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    colsum = jnp.sum(qw.astype(jnp.int32), axis=-2)
+    y = (2.0 / lvl) * acc.astype(jnp.float32) - colsum.astype(jnp.float32)
+    y = y * sx * sw
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache: exact bf16 or radix uint8 levels + per-(token, head) scales.
+# ---------------------------------------------------------------------------
+
+
+def _radix_kv(cfg: ArchConfig) -> bool:
+    return cfg.quant == "radix" and cfg.radix_kv
+
+
+def _packed(cfg: ArchConfig) -> bool:
+    """Two T-bit levels per byte — the spike-train analogue of sub-byte
+    weight packing (paper Sec. III-C stores T-bit activations bit-packed in
+    BRAM; on TPU this halves KV HBM reads again for T <= 4)."""
+    return _radix_kv(cfg) and cfg.radix_kv_pack and cfg.radix_steps <= 4
+
+
+def init_cache_entry(cfg: ArchConfig, batch: int, length: int,
+                     dtype) -> dict:
+    """Zeros cache for one attention layer (length = S_max or window)."""
+    kv = (batch, length, cfg.n_kv_heads, cfg.hd)
+    if _packed(cfg):
+        kvp = kv[:3] + (cfg.hd // 2,)
+        return {
+            "k": jnp.zeros(kvp, jnp.uint8),
+            "v": jnp.zeros(kvp, jnp.uint8),
+            "k_scale": jnp.zeros(kv[:3], jnp.float32),
+            "v_scale": jnp.zeros(kv[:3], jnp.float32),
+        }
+    if _radix_kv(cfg):
+        return {
+            "k": jnp.zeros(kv, jnp.uint8),
+            "v": jnp.zeros(kv, jnp.uint8),
+            "k_scale": jnp.zeros(kv[:3], jnp.float32),
+            "v_scale": jnp.zeros(kv[:3], jnp.float32),
+        }
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+
+
+def _pack4(q: jax.Array) -> jax.Array:
+    """(..., hd) uint8 levels < 16 -> (..., hd//2): hi nibble = even idx."""
+    return (q[..., 0::2] << 4 | (q[..., 1::2] & 0xF)).astype(jnp.uint8)
+
+
+def _unpack4(p: jax.Array) -> jax.Array:
+    hi = (p >> 4) & 0xF
+    lo = p & 0xF
+    return jnp.stack([hi, lo], axis=-1).reshape(p.shape[:-1] + (-1,))
+
+
+def _encode_kv(x: jax.Array, num_steps: int):
+    """(B, S, H, hd) signed -> levels uint8 + scale (B, S, H)."""
+    lvl = encoding.max_level(num_steps)
+    s = jnp.max(jnp.abs(x), axis=-1).astype(jnp.float32) + 1e-9
+    u = (x.astype(jnp.float32) / s[..., None] + 1.0) * 0.5
+    q = jnp.clip(jnp.round(u * lvl), 0, lvl).astype(jnp.uint8)
+    return q, s
+
+
+def _decode_kv(q: jax.Array, s: jax.Array, num_steps: int, dtype):
+    lvl = encoding.max_level(num_steps)
+    x = (q.astype(jnp.float32) * (2.0 / lvl) - 1.0) * s[..., None]
+    return x.astype(dtype)
+
+
+def cache_update(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, cfg: ArchConfig, *, window: int = 0) -> dict:
+    """Write one token (B, 1, Hkv, hd) at ``pos`` (ring slot if windowed)."""
+    slot = (pos % window) if window else pos
+    slot = slot.astype(jnp.int32)
+
+    def put(buf, val):
+        return lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype),
+            (jnp.int32(0), slot, jnp.int32(0), jnp.int32(0)))
+
+    def put3(buf, val):
+        return lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype), (jnp.int32(0), slot, jnp.int32(0)))
+
+    if _radix_kv(cfg):
+        qk, sk = _encode_kv(k_new, cfg.radix_steps)
+        qv, sv = _encode_kv(v_new, cfg.radix_steps)
+        if _packed(cfg):
+            qk, qv = _pack4(qk), _pack4(qv)
+        return {"k": put(cache["k"], qk), "v": put(cache["v"], qv),
+                "k_scale": put3(cache["k_scale"], sk),
+                "v_scale": put3(cache["v_scale"], sv)}
+    return {"k": put(cache["k"], k_new), "v": put(cache["v"], v_new)}
+
+
+def cache_read(cache: dict, cfg: ArchConfig,
+               dtype=None) -> Tuple[jax.Array, jax.Array]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if _radix_kv(cfg):
+        qk, qv = cache["k"], cache["v"]
+        if _packed(cfg):
+            qk, qv = _unpack4(qk), _unpack4(qv)
+        k = _decode_kv(qk, cache["k_scale"], cfg.radix_steps, dtype)
+        v = _decode_kv(qv, cache["v_scale"], cfg.radix_steps, dtype)
+        return k, v
+    return cache["k"], cache["v"]
+
+
+def encode_cache_bulk(k: jax.Array, v: jax.Array, cfg: ArchConfig,
+                      dtype) -> dict:
+    """Prefill: whole-sequence K/V -> cache dict (radix or exact)."""
+    if _radix_kv(cfg):
+        qk, sk = _encode_kv(k, cfg.radix_steps)
+        qv, sv = _encode_kv(v, cfg.radix_steps)
+        if _packed(cfg):
+            qk, qv = _pack4(qk), _pack4(qv)
+        return {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+    return {"k": k.astype(dtype), "v": v.astype(dtype)}

@@ -1,0 +1,10 @@
+"""The paper's evaluation networks (ANN form, conversion-ready).
+
+Each module exposes ``static()`` (the conversion layer description) and
+``init(key)`` (float parameters), plus the input shape.  All three nets are
+the ones evaluated in the paper's Tables I-III.
+"""
+
+from repro.models import fang, lenet, vgg
+
+__all__ = ["lenet", "vgg", "fang"]

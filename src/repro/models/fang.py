@@ -1,0 +1,60 @@
+"""Fang et al. [11] CNN-2 — the cross-accelerator comparison network.
+
+28x28 - 32C3 - P2 - 32C3 - P2 - 256 - 10 (SAME-padded convs), deployed on
+our accelerator for the Table III head-to-head row.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INPUT_HW: Tuple[int, int, int] = (28, 28, 1)
+NUM_CLASSES = 10
+
+
+def static(pool_mode: str = "avg", width_mult: float = 1.0):
+    return (
+        ("conv", {"stride": 1, "padding": "SAME"}),
+        ("pool", {"window": 2, "mode": pool_mode}),
+        ("conv", {"stride": 1, "padding": "SAME"}),
+        ("pool", {"window": 2, "mode": pool_mode}),
+        ("flatten", {}),
+        ("linear", {}),
+        ("linear", {}),
+    ), (max(1, int(32 * width_mult)), max(1, int(32 * width_mult)),
+        max(1, int(256 * width_mult)))
+
+
+def init(key: jax.Array, width_mult: float = 1.0, num_classes: int = NUM_CLASSES):
+    _, (c1, c2, f1) = static(width_mult=width_mult)
+    shapes = [
+        ("conv", (3, 3, 1, c1)),
+        None,
+        ("conv", (3, 3, c1, c2)),
+        None,
+        None,
+        ("linear", (7 * 7 * c2, f1)),
+        ("linear", (f1, num_classes)),
+    ]
+    params = []
+    for spec in shapes:
+        if spec is None:
+            params.append(None)
+            continue
+        _, shp = spec
+        key, k1 = jax.random.split(key)
+        fan_in = math.prod(shp[:-1])
+        w = jax.random.normal(k1, shp, jnp.float32) * math.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros((shp[-1],), jnp.float32)})
+    return params
+
+
+def make(key: Optional[jax.Array] = None, pool_mode: str = "avg",
+         width_mult: float = 1.0, num_classes: int = NUM_CLASSES):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    st, _ = static(pool_mode, width_mult)
+    return st, init(key, width_mult, num_classes), INPUT_HW

@@ -1,0 +1,70 @@
+"""LeNet-5 — the paper's primary evaluation network (Tables I-III).
+
+Architecture (paper Sec. IV-A): 32x32x1 - 6C5 - P2 - 16C5 - P2 - 120C5 -
+120 - 84 - 10.  Pool mode "or" matches the paper's pooling unit (per-plane
+binary OR == max over binary spikes); "avg" is offered for ablations.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INPUT_HW: Tuple[int, int, int] = (32, 32, 1)
+NUM_CLASSES = 10
+
+
+def static(pool_mode: str = "avg", width_mult: float = 1.0):
+    """Conversion-format layer description.  ``width_mult`` scales channel
+    counts for reduced smoke-test configs."""
+    c = lambda n: max(1, int(round(n * width_mult)))
+    return (
+        ("conv", {"stride": 1, "padding": "VALID"}),        # 6C5
+        ("pool", {"window": 2, "mode": pool_mode}),
+        ("conv", {"stride": 1, "padding": "VALID"}),        # 16C5
+        ("pool", {"window": 2, "mode": pool_mode}),
+        ("conv", {"stride": 1, "padding": "VALID"}),        # 120C5
+        ("flatten", {}),
+        ("linear", {}),                                     # 120
+        ("linear", {}),                                     # 84
+        ("linear", {}),                                     # 10
+    ), (c(6), c(16), c(120), c(120), c(84))
+
+
+def init(key: jax.Array, width_mult: float = 1.0, num_classes: int = NUM_CLASSES):
+    """He-initialized float parameters matching :func:`static`."""
+    _, chans = static(width_mult=width_mult)
+    c1, c2, c3, f1, f2 = chans
+    shapes = [
+        ("conv", (5, 5, 1, c1)),
+        None,
+        ("conv", (5, 5, c1, c2)),
+        None,
+        ("conv", (5, 5, c2, c3)),
+        None,
+        ("linear", (c3, f1)),
+        ("linear", (f1, f2)),
+        ("linear", (f2, num_classes)),
+    ]
+    params = []
+    for spec in shapes:
+        if spec is None:
+            params.append(None)
+            continue
+        kind, shp = spec
+        key, k1 = jax.random.split(key)
+        fan_in = math.prod(shp[:-1])
+        w = jax.random.normal(k1, shp, jnp.float32) * math.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros((shp[-1],), jnp.float32)})
+    return params
+
+
+def make(key: Optional[jax.Array] = None, pool_mode: str = "avg",
+         width_mult: float = 1.0, num_classes: int = NUM_CLASSES):
+    """(static, params, input_hw) triple ready for train/ + conversion."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    st, _ = static(pool_mode, width_mult)
+    return st, init(key, width_mult, num_classes), INPUT_HW

@@ -1,0 +1,87 @@
+"""VGG-11 — the paper's scalability demonstrator (CIFAR-100, Table III).
+
+28.5 M parameters; 8 convs + 3 linears (the paper counts "11 convolution,
+pooling, or fully-connected layers" — the standard VGG-11 'A' configuration).
+``input_hw`` defaults to 224 (the resolution implied by the 4.5 MB ping-pong
+feature-map BRAM figure); 32 reproduces the CIFAR-native variant used for
+accuracy trends on the synthetic task.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NUM_CLASSES = 100
+CONV_CHANNELS = (64, 128, 256, 256, 512, 512, 512, 512)
+# pool after conv indices (VGG-11 'A'):
+POOL_AFTER = (0, 1, 3, 5, 7)
+
+
+def static(pool_mode: str = "avg", width_mult: float = 1.0):
+    layers = []
+    chans = []
+    for i in range(8):
+        layers.append(("conv", {"stride": 1, "padding": "SAME"}))
+        chans.append(max(1, int(CONV_CHANNELS[i] * width_mult)))
+        if i in POOL_AFTER:
+            layers.append(("pool", {"window": 2, "mode": pool_mode}))
+    layers.append(("flatten", {}))
+    layers += [("linear", {}), ("linear", {}), ("linear", {})]
+    chans += [max(1, int(4096 * width_mult)), max(1, int(4096 * width_mult))]
+    return tuple(layers), tuple(chans)
+
+
+def init(key: jax.Array, input_hw: Tuple[int, int, int] = (224, 224, 3),
+         width_mult: float = 1.0, num_classes: int = NUM_CLASSES):
+    st, chans = static(width_mult=width_mult)
+    h, w, c_in = input_hw
+    params = []
+    conv_i = 0
+    feat = None
+    for kind, cfg in st:
+        if kind == "conv":
+            c_out = chans[conv_i]
+            key, k1 = jax.random.split(key)
+            shp = (3, 3, c_in, c_out)
+            fan_in = math.prod(shp[:-1])
+            params.append({
+                "w": jax.random.normal(k1, shp, jnp.float32) * math.sqrt(2.0 / fan_in),
+                "b": jnp.zeros((c_out,), jnp.float32),
+            })
+            c_in = c_out
+            conv_i += 1
+        elif kind == "pool":
+            params.append(None)
+            h, w = h // 2, w // 2
+        elif kind == "flatten":
+            params.append(None)
+            feat = h * w * c_in
+        elif kind == "linear":
+            f_out = chans[conv_i] if conv_i < len(chans) else num_classes
+            conv_i += 1
+            key, k1 = jax.random.split(key)
+            shp = (feat, f_out)
+            params.append({
+                "w": jax.random.normal(k1, shp, jnp.float32) * math.sqrt(2.0 / shp[0]),
+                "b": jnp.zeros((f_out,), jnp.float32),
+            })
+            feat = f_out
+    return params
+
+
+def make(key: Optional[jax.Array] = None, pool_mode: str = "avg",
+         input_hw: Tuple[int, int, int] = (224, 224, 3),
+         width_mult: float = 1.0, num_classes: int = NUM_CLASSES):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    st, _ = static(pool_mode, width_mult)
+    return st, init(key, input_hw, width_mult, num_classes), input_hw
+
+
+def param_count(input_hw=(224, 224, 3), width_mult: float = 1.0,
+                num_classes: int = NUM_CLASSES) -> int:
+    params = init(jax.random.PRNGKey(0), input_hw, width_mult, num_classes)
+    return sum(int(p["w"].size + p["b"].size) for p in params if p is not None)

@@ -1,0 +1,7 @@
+"""Distribution: sharding rules, ZeRO state sharding, pipeline parallelism."""
+
+from repro.parallel.sharding import (param_specs, batch_specs, cache_specs,
+                                     opt_state_specs, shardings)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "opt_state_specs",
+           "shardings"]

@@ -1,0 +1,290 @@
+"""Logical-axis sharding rules -> PartitionSpecs (nothing hand-placed).
+
+The rules encode the DESIGN.md §5 layout:
+
+* **TP** over 'model': attention heads (fallback: head_dim, then replicate
+  when neither divides), FFN hidden f, expert dim E (EP), vocab.
+* **FSDP/ZeRO-3** over the data axes ('pod','data'): the d_model dim of
+  every large matrix — XLA all-gathers weights on use and reduce-scatters
+  gradients (the MoE shard_map does the same gather explicitly).
+* Norm vectors and other O(d) leaves are replicated.
+
+Every rule is validated against the actual leaf shape: a mesh axis that does
+not divide the dim falls back along the rule's candidate list (e.g. gemma's
+10 or 8 query heads cannot shard over model=16, so the 256-wide head_dim is
+sharded instead).  This is what lets ONE rule table cover all ten archs.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.lm.config import ArchConfig
+from repro.train.optim import AdamState, AdafactorState, _FactoredSlot
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "opt_state_specs",
+           "shardings", "sanitize"]
+
+
+def _dp(mesh: Mesh):
+    axes = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return mesh.shape[entry]
+
+
+def sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide their dim (per-dim fallback)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _first_valid(options: Sequence[P], shape, mesh: Mesh) -> P:
+    """First candidate whose every placed axis divides; else sanitize(first)."""
+    for opt in options:
+        entries = list(opt) + [None] * (len(shape) - len(opt))
+        if all(d % _axis_size(mesh, e) == 0 for d, e in zip(shape, entries)):
+            return P(*entries)
+    return sanitize(options[0], shape, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules.
+# ---------------------------------------------------------------------------
+
+
+def _leaf_rule(names: Tuple[str, ...], shape, cfg: ArchConfig,
+               mesh: Mesh) -> P:
+    """Spec for one leaf given its path names and UNSTACKED shape."""
+    dp = _dp(mesh)
+    last = names[-1]
+    has_model = "model" in mesh.axis_names
+    M = "model" if has_model else None
+    in_moe = cfg.moe is not None and "ffn" in names and "shared" not in names
+
+    # --- embeddings / head ---
+    if last == "embed":
+        return _first_valid([P(M, dp), P(None, M)], shape, mesh)
+    if last == "unembed" or (names[-2:] == ("unembed", "q")):
+        return _first_valid([P(dp, M), P(M, None)], shape, mesh)
+    if names[-2:] == ("unembed", "scale"):
+        return _first_valid([P(M)], shape, mesh)
+    if last in ("pos_embed", "enc_pos_embed"):
+        return _first_valid([P(None, M)], shape, mesh)
+
+    # --- norms & other vectors ---
+    if any(n in ("ln1", "ln2", "lnx", "final_norm", "enc_final_norm")
+           for n in names):
+        return P(*([None] * len(shape)))
+
+    # --- attention ---
+    if last == "wq":
+        return _first_valid([P(None, dp, M, None), P(None, dp, None, M),
+                             P(None, dp, None, None)], shape, mesh)
+    if last in ("wk", "wv"):
+        return _first_valid([P(None, dp, M, None), P(None, dp, None, M),
+                             P(None, dp, None, None)], shape, mesh)
+    if last == "wo":
+        return _first_valid([P(None, M, None, dp), P(None, None, M, dp),
+                             P(None, None, None, dp)], shape, mesh)
+
+    # --- MoE expert weights (L, E, d, f) / (L, E, f, d); router (L, d, E) ---
+    if in_moe and last == "router":
+        return P(None, None, None)
+    if in_moe and last in ("w_gate", "w_up", "w_down"):
+        ep = cfg.moe.num_experts % _axis_size(mesh, M or "model") == 0 \
+            if has_model else False
+        if ep:
+            # EP: experts over model, dim 2 (d for gate/up, f for down)
+            # FSDP over the data axes — matches moe.py's in_specs
+            return _first_valid([P(None, M, dp, None)], shape, mesh)
+        if last == "w_down":   # TP: f over model, d FSDP
+            return _first_valid([P(None, None, M, dp)], shape, mesh)
+        return _first_valid([P(None, None, dp, M)], shape, mesh)
+
+    # --- dense FFN (incl. shared experts, radix-quantized dicts) ---
+    if last in ("w_gate", "w_up", "w_ck", "w_cr", "w_gate_branch",
+                "w_rec_in", "w_r", "w_k", "w_v", "w_g", "w_dec_a"):
+        return _first_valid([P(None, dp, M), P(None, dp, None)], shape, mesh)
+    if last in ("w_down", "w_cv", "w_out", "w_o"):
+        return _first_valid([P(None, M, dp), P(None, None, dp)], shape, mesh)
+    if last == "scale":          # radix weight scale: follows out-channel dim
+        return _first_valid([P(None, M), P(None, None)], shape, mesh)
+    if last == "w_dec_b":
+        return _first_valid([P(None, None, M)], shape, mesh)
+
+    # --- RG-LRU per-channel leaves (W sharded over model) ---
+    if last in ("w_a", "w_x"):
+        return _first_valid([P(None, dp, M)], shape, mesh)
+    if last in ("b_a", "b_x", "lambda_p", "w_dec0"):
+        return _first_valid([P(None, M)], shape, mesh)
+    if last == "conv_w":
+        return _first_valid([P(None, None, M)], shape, mesh)
+
+    # --- RWKV heads ---
+    if last in ("u_bonus", "gn_w", "gn_b"):
+        return _first_valid([P(None, M, None), P(None, None, None)],
+                            shape, mesh)
+    if last.startswith("mu_"):
+        return P(*([None] * len(shape)))
+
+    # default: replicate
+    return P(*([None] * len(shape)))
+
+
+def _names_of(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"#{p.idx}")
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return tuple(out)
+
+
+def param_specs(abstract_params, cfg: ArchConfig, mesh: Mesh):
+    """PartitionSpec tree matching the (abstract) parameter tree."""
+
+    def rule(path, leaf):
+        names = tuple(n for n in _names_of(path) if not n.startswith("#"))
+        shape = tuple(leaf.shape)
+        spec = _leaf_rule(names, shape, cfg, mesh)
+        return _first_valid([spec], shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def batch_specs(batch_abstract, cfg: ArchConfig, mesh: Mesh,
+                seq_shard: bool = True):
+    """Input batch specs: batch dim over the data axes; long sequence dims of
+    embedding inputs over 'model' when divisible."""
+    dp = _dp(mesh)
+
+    def rule(path, leaf):
+        names = _names_of(path)
+        shape = tuple(leaf.shape)
+        if names and names[-1] in ("embeds", "enc_embeds") and len(shape) == 3:
+            if seq_shard:
+                return _first_valid([P(dp, "model", None), P(dp, None, None)],
+                                    shape, mesh)
+            return _first_valid([P(dp, None, None)], shape, mesh)
+        if len(shape) >= 1:
+            return _first_valid([P(*([dp] + [None] * (len(shape) - 1)))],
+                                shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, batch_abstract)
+
+
+def cache_specs(cache_abstract, cfg: ArchConfig, mesh: Mesh):
+    """KV-cache specs: batch over data axes, cache sequence dim over 'model'
+    (flash-decoding style SP); recurrent states: width/heads over 'model'.
+
+    Stacked layout reminder: attention leaves are (L, B, S, H, hd) (scales
+    (L, B, S, H)); rglru conv (L, B, K-1, W), h (L, B, W); rwkv S
+    (L, B, H, hd, hd)."""
+    dp = _dp(mesh)
+
+    def rule(path, leaf):
+        names = _names_of(path)
+        shape = tuple(leaf.shape)
+        last = names[-1]
+        if last in ("k", "v") and len(shape) == 5:
+            return _first_valid([P(None, dp, "model", None, None),
+                                 P(None, dp, None, None, None)], shape, mesh)
+        if last in ("k_scale", "v_scale") and len(shape) == 4:
+            return _first_valid([P(None, dp, "model", None),
+                                 P(None, dp, None, None)], shape, mesh)
+        if last == "h" and len(shape) == 3:           # rglru hidden (L,B,W)
+            return _first_valid([P(None, dp, "model")], shape, mesh)
+        if last == "conv" and len(shape) == 4:
+            return _first_valid([P(None, dp, None, "model")], shape, mesh)
+        if last == "S" and len(shape) == 5:           # rwkv state
+            return _first_valid([P(None, dp, "model", None, None)], shape, mesh)
+        if last == "last_x" and len(shape) == 3:
+            return _first_valid([P(None, dp, None)], shape, mesh)
+        # fallback: batch over dp on dim 1 (dim 0 is the layer stack)
+        cand = [None] * len(shape)
+        if len(shape) >= 2:
+            cand[1] = dp
+        return _first_valid([P(*cand)], shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_abstract)
+
+
+def opt_state_specs(pspecs, abstract_opt_state, mesh: Mesh):
+    """Optimizer-state specs derived from parameter specs.
+
+    Adafactor factored slots drop the last (vr) / second-to-last (vc) dim of
+    the parameter spec; full-sized slots (momentum, adam mu/nu) reuse the
+    parameter spec (= ZeRO: optimizer state is sharded wherever the param
+    is, including the FSDP data axes).  When the dropped dim carried the
+    data axes (e.g. vc of an FSDP-on-d matrix), they are re-placed on the
+    largest remaining unsharded dim so no slot stays dp-replicated
+    (ZeRO-2 for the factored statistics)."""
+    dp = _dp(mesh)
+    dp_size = _axis_size(mesh, dp)
+
+    def _replace_dp(entries, shape):
+        if dp is None or any(
+                e is not None and ("data" in (e if isinstance(e, tuple) else (e,))
+                                   or "pod" in (e if isinstance(e, tuple) else (e,)))
+                for e in entries):
+            return entries
+        dims = sorted(((d, i) for i, d in enumerate(shape)
+                       if entries[i] is None and d % dp_size == 0),
+                      reverse=True)
+        if dims:
+            entries = list(entries)
+            entries[dims[0][1]] = dp
+        return entries
+
+    def slot_spec(ps: P, slot):
+        if isinstance(slot, _FactoredSlot):
+            pe = list(ps)
+            vr_e = _replace_dp(pe[:-1], slot.vr.shape)
+            vc_e = _replace_dp(pe[:-2] + pe[-1:], slot.vc.shape)
+            return _FactoredSlot(vr=P(*vr_e), vc=P(*vc_e))
+        return ps
+
+    def state_spec(state):
+        if isinstance(state, AdafactorState):
+            slots = jax.tree.map(slot_spec, pspecs, state.slots,
+                                 is_leaf=lambda x: isinstance(x, _FactoredSlot))
+            mu = pspecs if state.mu != () else ()
+            return AdafactorState(step=P(), slots=slots, mu=mu)
+        if isinstance(state, AdamState):
+            return AdamState(step=P(), mu=pspecs, nu=pspecs)
+        if state == ():
+            return ()
+        return jax.tree.map(lambda _: P(), state)
+
+    return state_spec(abstract_opt_state)
+
+
+def shardings(spec_tree, mesh: Mesh):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,51 @@
+"""ZeRO utilities: push replicated state onto the data axes.
+
+The param rules in sharding.py already FSDP-shard every large matrix over
+('pod','data') — that *is* ZeRO-3 for params+grads under GSPMD (gather on
+use, reduce-scatter on grad).  What remains replicated are small leaves
+(norms, biases, routers) and any optimizer slots mirroring them;
+``zero_upgrade`` shards those over the data axes on their largest divisible
+dim, which matters when a model has millions of tiny leaves (it also
+demonstrates the ZeRO-1 layout for the Adam states used by the examples).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["zero_upgrade"]
+
+
+def _dp(mesh: Mesh):
+    axes = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def zero_upgrade(spec_tree, abstract_tree, mesh: Mesh):
+    """Shard fully-replicated leaves over the data axes (largest divisible
+    dim); leaves already touching a mesh axis are left alone."""
+    dp = _dp(mesh)
+    if dp is None:
+        return spec_tree
+    dp_size = int(np.prod([mesh.shape[a] for a in
+                           (dp if isinstance(dp, tuple) else (dp,))]))
+
+    def up(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        if any(e is not None for e in entries):
+            return spec
+        dims = [(d, i) for i, d in enumerate(leaf.shape) if d % dp_size == 0]
+        if not dims:
+            return spec
+        _, best = max(dims)
+        entries[best] = dp
+        return P(*entries)
+
+    return jax.tree.map(up, spec_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, P))

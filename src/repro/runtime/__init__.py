@@ -1,0 +1,7 @@
+"""Runtime fault tolerance: elastic re-sharding, stragglers, restart."""
+
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.elastic import reshard_checkpoint
+from repro.runtime.restart import RestartableRun
+
+__all__ = ["StragglerMonitor", "reshard_checkpoint", "RestartableRun"]

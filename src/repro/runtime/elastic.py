@@ -1,0 +1,55 @@
+"""Elastic re-scaling: restore a checkpoint onto a different topology.
+
+Checkpoints store global logical arrays (train/checkpoint.py), so moving a
+run from N to M chips is a pure re-sharding problem: rebuild the abstract
+state for the new mesh, derive the new sharding rules, and let every device
+read its slice.  The same machinery serves failure recovery (evict a host,
+resume on the shrunken mesh) and scale-up.
+
+``reshard_checkpoint`` is deliberately independent of how the checkpoint
+was produced — only the pytree structure must match (property-tested:
+save on mesh A, restore on mesh B, values identical).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.parallel import sharding as SH
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optim as optim_lib
+
+__all__ = ["reshard_checkpoint", "abstract_train_state"]
+
+
+def abstract_train_state(cfg, opt) -> dict:
+    from repro.lm import model as M
+    params = M.abstract_params(cfg)
+    return {
+        "params": params,
+        "opt": jax.eval_shape(opt.init, params),
+        "step": jax.ShapeDtypeStruct((), jax.numpy.int32),
+    }
+
+
+def train_state_shardings(cfg, opt, mesh: Mesh):
+    from jax.sharding import PartitionSpec as P
+    state_abs = abstract_train_state(cfg, opt)
+    pspecs = SH.param_specs(state_abs["params"], cfg, mesh)
+    specs = {"params": pspecs,
+             "opt": SH.opt_state_specs(pspecs, state_abs["opt"], mesh),
+             "step": P()}
+    return state_abs, SH.shardings(specs, mesh)
+
+
+def reshard_checkpoint(ckpt_dir: str, step: int, cfg, opt,
+                       new_mesh: Mesh) -> Tuple[Any, dict]:
+    """Load step ``step`` and place it sharded for ``new_mesh``.
+
+    The checkpoint may have been written from any previous mesh/chip count.
+    """
+    state_abs, shardings = train_state_shardings(cfg, opt, new_mesh)
+    return ckpt_lib.restore_resharded(ckpt_dir, step, state_abs, shardings)

@@ -1,0 +1,5 @@
+"""Training substrate: optimizers, checkpointing, gradient compression, trainers."""
+
+from repro.train import checkpoint, compression, optim, trainer
+
+__all__ = ["optim", "checkpoint", "compression", "trainer"]

@@ -1,0 +1,189 @@
+"""Checkpointing: topology-independent pytree save/restore (+ async writes).
+
+Design (what makes this work at pod scale and across topology changes):
+
+* **Layout independence** — checkpoints store *global* logical arrays (one
+  ``.npy`` per leaf, paths derived from the pytree structure), never
+  per-device shards.  Restoring onto a different mesh/shard count is then
+  just ``jax.make_array_from_callback`` with the new sharding, each device
+  reading only its slice (runtime/elastic.py builds on this).
+* **Async** — ``save_async`` snapshots to host memory (device_get) on the
+  caller's thread — the only part that must be consistent with the training
+  step — then writes files on a background thread so the train loop resumes
+  immediately.  ``wait()`` joins before the next save (single in-flight).
+* **Atomicity** — writes go to ``<dir>.tmp`` and are renamed into place, so
+  a crash mid-write never corrupts the latest checkpoint; ``latest_step``
+  scans only completed directories.  This is the restart contract used by
+  runtime/restart.py.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "restore_resharded",
+           "latest_step", "CheckpointManager"]
+
+_SEP = "__"
+
+
+def _flatten_with_paths(tree) -> Tuple[list, Any]:
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves_with_paths:
+        key = _SEP.join(_path_str(p) for p in path) or "leaf"
+        out.append((key, leaf))
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return re.sub(r"\W", "_", str(p))
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    """Synchronous checkpoint write.  Returns the final directory."""
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    return _write(ckpt_dir, step, host_tree, extra)
+
+
+def _write(ckpt_dir: str, step: int, host_tree, extra) -> str:
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, _ = _flatten_with_paths(host_tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        fname = f"{key}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree: Any,
+               extra: Optional[dict] = None) -> threading.Thread:
+    """Snapshot now, write in the background.  Join the returned thread (or
+    use CheckpointManager) before process exit."""
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    t = threading.Thread(target=_write, args=(ckpt_dir, step, host_tree, extra),
+                         daemon=False)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure (and shardings) of ``like``.
+
+    ``like`` may contain jax.Arrays (their shardings are reused),
+    ShapeDtypeStructs with ``.sharding``, or numpy arrays (host restore).
+    """
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    leaves, treedef = _flatten_with_paths(like)
+
+    out = []
+    for key, ref in leaves:
+        entry = by_key.get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(final, entry["file"]))
+        out.append(_place_like(arr, ref))
+    return jax.tree.unflatten(treedef, out), manifest["extra"]
+
+
+def _place_like(arr: np.ndarray, ref):
+    sharding = getattr(ref, "sharding", None)
+    if sharding is not None and isinstance(ref, jax.Array):
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch {arr.shape} vs {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        return jax.make_array_from_callback(arr.shape, sharding,
+                                            lambda idx: arr[idx])
+    if hasattr(ref, "dtype"):
+        arr = arr.astype(ref.dtype)
+    return arr
+
+
+def restore_resharded(ckpt_dir: str, step: int, shapes_tree: Any,
+                      shardings_tree: Any) -> Tuple[Any, dict]:
+    """Restore onto an arbitrary new topology: ``shapes_tree`` gives global
+    shapes/dtypes (ShapeDtypeStructs), ``shardings_tree`` the new shardings
+    (same structure).  Used by elastic re-scale (runtime/elastic.py)."""
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    leaves, treedef = _flatten_with_paths(shapes_tree)
+    shard_leaves = treedef.flatten_up_to(shardings_tree)
+
+    out = []
+    for (key, sds), sharding in zip(leaves, shard_leaves):
+        entry = by_key.get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(final, entry["file"])).astype(sds.dtype)
+        out.append(jax.make_array_from_callback(arr.shape, sharding,
+                                                lambda idx, a=arr: a[idx]))
+    return jax.tree.unflatten(treedef, out), manifest["extra"]
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints, one async write in flight."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._inflight: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        self._inflight = save_async(self.dir, step, tree, extra)
+        self._gc(inflight=step)
+
+    def wait(self):
+        if self._inflight is not None:
+            self._inflight.join()
+            self._inflight = None
+
+    def _gc(self, inflight: Optional[int] = None):
+        steps = sorted(set(
+            [int(m.group(1)) for d in os.listdir(self.dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+            + ([inflight] if inflight is not None else [])))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)

@@ -1,0 +1,108 @@
+"""Radix gradient compression — the paper's encoding reused as a
+distributed-training trick (beyond-paper; DESIGN.md §5).
+
+Cross-pod gradient all-reduce traffic is compressed with exactly the paper's
+radix scheme: each gradient block is mapped to a T-bit unsigned fixed-point
+level against a per-block scale (two's-complement-free: sign bit + magnitude
+level), i.e. a T-step radix spike train per value — 4-bit payloads instead of
+32/16-bit floats.  Stochastic rounding keeps the quantizer unbiased; an
+**error-feedback accumulator** (Seide et al., 2014; Karimireddy et al., 2019)
+carries the residual into the next step so convergence is preserved
+(property-tested: compressed-SGD matches exact SGD on a quadratic to <1e-2).
+
+The compressed representation is what would cross the ICI/DCN links; the
+roofline collective term for compressed training divides cross-pod bytes by
+32/(T+1) accordingly (launch/roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+
+__all__ = ["RadixCompressor", "compress", "decompress"]
+
+
+def _blockwise(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), pad
+
+
+def compress(g: jax.Array, num_steps: int, block: int, key: jax.Array):
+    """float grad -> (sign uint8, level uint8, per-block scale f32, meta).
+
+    level is the T-bit radix train (packed); sign is 1 bit conceptually
+    (uint8 here; the wire format packs 8/byte — byte accounting in
+    ``wire_bytes``).  Stochastic rounding: floor(x + u), u ~ U[0,1).
+    """
+    blocks, pad = _blockwise(g.astype(jnp.float32), block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) + 1e-12
+    lvl = encoding.max_level(num_steps)
+    mag = jnp.abs(blocks) / scale * lvl
+    u = jax.random.uniform(key, mag.shape)
+    q = jnp.clip(jnp.floor(mag + u), 0, lvl).astype(jnp.uint8)
+    sign = (blocks < 0).astype(jnp.uint8)
+    return (sign, q, scale.squeeze(1)), (g.shape, pad)
+
+
+def decompress(payload, meta, num_steps: int) -> jax.Array:
+    (sign, q, scale), (shape, pad) = payload, meta
+    lvl = encoding.max_level(num_steps)
+    vals = q.astype(jnp.float32) / lvl * scale[:, None]
+    vals = jnp.where(sign == 1, -vals, vals).reshape(-1)
+    if pad:
+        vals = vals[:-pad]
+    return vals.reshape(shape)
+
+
+def wire_bytes(numel: int, num_steps: int, block: int) -> int:
+    """Bytes on the link per tensor: (1 sign + T magnitude) bits/value,
+    + one f32 scale per block."""
+    bits = numel * (1 + num_steps)
+    return bits // 8 + (numel + block - 1) // block * 4
+
+
+@dataclasses.dataclass
+class RadixCompressor:
+    """Error-feedback compressed gradient exchange.
+
+    Usage inside a train step (grads already data-parallel-averaged within
+    the pod; this compresses the *cross-pod* exchange):
+
+        comp = RadixCompressor(num_steps=4, block=256)
+        ef = comp.init(params)
+        grads, ef = comp.roundtrip(grads, ef, key)   # quantize + residual
+    """
+
+    num_steps: int = 4
+    block: int = 256
+
+    def init(self, params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def roundtrip(self, grads, ef, key):
+        """Compress (with error feedback), decompress — what the receiving
+        pods see.  Returns (decompressed grads, new error accumulator)."""
+        leaves, treedef = jax.tree.flatten(grads)
+        ef_leaves = treedef.flatten_up_to(ef)
+        keys = jax.random.split(key, len(leaves))
+        out, new_ef = [], []
+        for g, e, k in zip(leaves, ef_leaves, keys):
+            target = g.astype(jnp.float32) + e
+            payload, meta = compress(target, self.num_steps, self.block, k)
+            recon = decompress(payload, meta, self.num_steps)
+            out.append(recon.astype(g.dtype))
+            new_ef.append(target - recon)
+        return (jax.tree.unflatten(treedef, out),
+                jax.tree.unflatten(treedef, new_ef))
+
+    def compression_ratio(self, dtype_bits: int = 32) -> float:
+        return dtype_bits / (1 + self.num_steps + 32 / self.block)

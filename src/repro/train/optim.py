@@ -1,0 +1,188 @@
+"""Optimizers, hand-rolled (no optax offline): SGD(+momentum), Adam, Adafactor.
+
+API (optax-like, pytree-generic, jit/pjit-friendly):
+
+    opt = adam(lr=1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Adafactor implements factored second moments (Shazeer & Stern, 2018) — the
+memory-honest choice for the ≥300 B-param architectures (DESIGN.md §5): for a
+(r, c) matrix it stores r + c statistics instead of r*c.  State pytrees keep
+the params' tree structure so GSPMD shards them with the same rules
+(parallel/zero.py additionally re-shards along the data axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adam", "adafactor", "apply_updates",
+           "global_norm", "clip_by_global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr * (momentum * m + g), new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            nu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        )
+
+    def update(grads, state: AdamState, params=None):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            upd = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: u(m, v, None), mu, nu)
+        else:
+            updates = jax.tree.map(u, mu, nu, params)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor — factored second moments; the pod-scale default.
+# ---------------------------------------------------------------------------
+
+
+class _FactoredSlot(NamedTuple):
+    vr: jax.Array     # row statistics  (shape[:-1])
+    vc: jax.Array     # col statistics  (shape[:-2] + shape[-1:])
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    slots: Any        # per-leaf _FactoredSlot or full nu for <2D leaves
+    mu: Any           # momentum (bf16) or () when disabled
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(lr: float, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, momentum: Optional[float] = None,
+              momentum_dtype=jnp.bfloat16) -> Optimizer:
+    """Adafactor with relative-step disabled (explicit lr), optional bf16
+    momentum.  Factored leaves store O(r + c) stats."""
+
+    def init(params):
+        def slot(p):
+            if _factored(p.shape):
+                return _FactoredSlot(
+                    vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                    vc=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return jnp.zeros_like(p, jnp.float32)
+
+        slots = jax.tree.map(slot, params)
+        mu = (jax.tree.map(lambda p: jnp.zeros_like(p, momentum_dtype), params)
+              if momentum else ())
+        return AdafactorState(jnp.zeros((), jnp.int32), slots, mu)
+
+    def update(grads, state: AdafactorState, params=None):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -decay
+
+        def upd_leaf(g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if isinstance(s, _FactoredSlot):
+                vr = beta * s.vr + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s.vc + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                rms = (vr / jnp.maximum(denom, eps))[..., None] * vc[..., None, :]
+                precond = g * jax.lax.rsqrt(jnp.maximum(rms, eps))
+                new_s = _FactoredSlot(vr, vc)
+            else:
+                nu = beta * s + (1 - beta) * g2
+                precond = g * jax.lax.rsqrt(jnp.maximum(nu, eps))
+                new_s = nu
+            # update clipping (Adafactor's RMS clip)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(precond)) + 1e-12)
+            precond = precond / jnp.maximum(1.0, rms_u / clip_threshold)
+            return -lr * precond, new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state.slots)
+        pairs = [upd_leaf(g, s) for g, s in zip(flat_g, flat_s)]
+        updates = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+        slots = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+
+        mu = state.mu
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, u: (momentum * m.astype(jnp.float32) + u).astype(momentum_dtype),
+                state.mu, updates)
+            updates = jax.tree.map(lambda m: m.astype(jnp.float32), mu)
+        return updates, AdafactorState(step, slots, mu)
+
+    return Optimizer(init, update)

@@ -1,0 +1,16 @@
+"""Test session setup.
+
+Distributed-correctness tests (MoE dispatch, sharding rules, pipeline,
+elastic resharding) need a small multi-device mesh, so the test session
+uses 8 placeholder CPU devices — NOT the dry-run's 512 (launch/dryrun.py
+sets that itself, in its own process).  Single-device tests are unaffected:
+unsharded computations place on device 0 only.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,127 @@
+"""ANN->SNN conversion + engine end-to-end exactness and hwmodel reproduction."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conversion, encoding, engine
+from repro.core.hwmodel import CostModel, HwConfig, LENET5, network_layers
+
+def _tiny_net(pool_mode="or"):
+    RNG = np.random.default_rng(7)  # fresh per call: test-order independence
+    static = (
+        ("conv", {"stride": 1, "padding": "VALID"}),
+        ("pool", {"window": 2, "mode": pool_mode}),
+        ("conv", {"stride": 1, "padding": "VALID"}),
+        ("flatten", {}),
+        ("linear", {}),
+        ("linear", {}),
+    )
+    params = [
+        {"w": jnp.asarray(RNG.normal(0, 0.4, (3, 3, 1, 4)), jnp.float32),
+         "b": jnp.asarray(RNG.normal(0, 0.05, (4,)), jnp.float32)},
+        None,
+        {"w": jnp.asarray(RNG.normal(0, 0.3, (3, 3, 4, 8)), jnp.float32),
+         "b": jnp.asarray(RNG.normal(0, 0.05, (8,)), jnp.float32)},
+        None,
+        {"w": jnp.asarray(RNG.normal(0, 0.3, (32, 16)), jnp.float32),
+         "b": jnp.asarray(RNG.normal(0, 0.05, (16,)), jnp.float32)},
+        {"w": jnp.asarray(RNG.normal(0, 0.3, (16, 5)), jnp.float32),
+         "b": jnp.asarray(RNG.normal(0, 0.05, (5,)), jnp.float32)},
+    ]
+    return static, params
+
+
+@pytest.fixture(scope="module")
+def x():
+    rng = np.random.default_rng(123)
+    return jnp.asarray(rng.uniform(0, 1, (8, 11, 11, 1)), jnp.float32)
+
+
+class TestConversion:
+    @pytest.mark.parametrize("pool_mode", ["or", "avg", "max"])
+    @pytest.mark.parametrize("T", [3, 4, 6])
+    def test_snn_packed_bitexact(self, x, pool_mode, T):
+        static, params = _tiny_net(pool_mode)
+        qnet = conversion.convert(static, params, x, num_steps=T, weight_bits=3)
+        lp = engine.run(qnet, x, mode="packed")
+        ls = engine.run(qnet, x, mode="snn")
+        np.testing.assert_array_equal(np.asarray(lp), np.asarray(ls))
+
+    def test_weight_bits_respected(self, x):
+        static, params = _tiny_net()
+        qnet = conversion.convert(static, params, x, num_steps=4, weight_bits=3)
+        for qp in qnet.qlayers:
+            if qp is not None:
+                w = np.asarray(qp["w_q"])
+                assert w.min() >= -3 and w.max() <= 3
+
+    def test_accuracy_improves_with_T(self, x):
+        """Table I trend: encoding error shrinks as T grows, so quantized
+        logits approach float logits monotonically (in aggregate)."""
+        static, params = _tiny_net()
+        ref = conversion.float_forward(static, params, x)
+        errs = []
+        for T in (2, 4, 6, 8):
+            qnet = conversion.convert(static, params, x, num_steps=T, weight_bits=8)
+            lq = engine.run(qnet, x, mode="packed")
+            errs.append(float(jnp.mean(jnp.abs(lq - ref))))
+        assert errs[-1] < errs[0]
+        assert errs[2] < errs[0]
+
+    def test_agreement_with_float_argmax(self, x):
+        static, params = _tiny_net()
+        ref = np.asarray(conversion.float_forward(static, params, x)).argmax(-1)
+        qnet = conversion.convert(static, params, x, num_steps=6, weight_bits=8)
+        got = np.asarray(engine.run(qnet, x, mode="packed")).argmax(-1)
+        assert (ref == got).mean() >= 0.75
+
+
+class TestMemoryReport:
+    def test_lenet_buffers(self, x):
+        static, params = _tiny_net()
+        qnet = conversion.convert(static, params, x, num_steps=4)
+        rep = engine.memory_report(qnet, (11, 11, 1))
+        assert rep.buf2d_bytes > 0 and rep.buf1d_bytes > 0
+        assert not rep.needs_dram
+        assert rep.total_param_bytes < 10_000
+
+
+class TestHwModel:
+    @pytest.fixture(scope="class")
+    def model(self):
+        return CostModel.calibrated()
+
+    def test_table1_fit(self, model):
+        for row in model.table1():
+            assert abs(row["err_pct"]) < 5.0, row
+
+    def test_table2_fit(self, model):
+        for row in model.table2():
+            assert abs(row["err_pct"]) < 10.0, row
+            assert abs(row["model_w"] - row["paper_w"]) < 0.1
+            assert abs(row["model_klut"] - row["paper_klut"]) < 2.0
+
+    def test_table3_validation(self, model):
+        rows = {r["net"]: r for r in model.table3()}
+        # LeNet row is a pure prediction (not in the fit set): < 10 % error.
+        assert abs(rows["lenet5"]["lat_err_pct"]) < 10.0
+        for r in rows.values():
+            assert abs(r["lat_err_pct"]) < 25.0, r
+            assert abs(r["model_w"] - r["paper_w"]) < 0.3
+
+    def test_latency_scales_linearly_with_T(self, model):
+        net = network_layers(*LENET5)
+        cfg = HwConfig(n_conv_units=2)
+        lat = [model.latency_us(net, cfg, t) for t in (3, 4, 5, 6)]
+        diffs = np.diff(lat)
+        assert np.allclose(diffs, diffs[0], rtol=0.01)  # paper: linear in T
+
+    def test_units_sublinear(self, model):
+        """Table II: doubling units does NOT halve latency (memory-bound
+        pool/linear part is not duplicated)."""
+        net = network_layers(*LENET5)
+        l1 = model.latency_us(net, HwConfig(n_conv_units=1), 3)
+        l8 = model.latency_us(net, HwConfig(n_conv_units=8), 3)
+        assert l1 / l8 < 8.0
+        assert l1 / l8 > 2.0

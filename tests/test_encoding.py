@@ -1,0 +1,87 @@
+"""Radix encoding invariants (unit + property tests)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("T", [1, 2, 3, 4, 5, 6, 8])
+    def test_encode_decode_exhaustive(self, T):
+        q = jnp.arange(encoding.max_level(T) + 1, dtype=jnp.int32)
+        planes = encoding.encode(q, T)
+        assert planes.shape == (T, q.shape[0])
+        assert planes.dtype == jnp.int8
+        assert bool(jnp.all((planes == 0) | (planes == 1)))
+        np.testing.assert_array_equal(np.asarray(encoding.decode(planes)), np.asarray(q))
+
+    def test_msb_first(self):
+        # value 0b100 at T=3: spike at t=0 only (earliest spike = MSB)
+        planes = encoding.encode(jnp.asarray([4], jnp.int32), 3)
+        np.testing.assert_array_equal(np.asarray(planes).ravel(), [1, 0, 0])
+
+    def test_pack_is_decode(self):
+        q = jnp.asarray(np.random.default_rng(0).integers(0, 16, (5, 7)), jnp.int32)
+        planes = encoding.encode(q, 4)
+        np.testing.assert_array_equal(
+            np.asarray(encoding.pack_planes(planes)), np.asarray(q).astype(np.uint8))
+
+
+class TestQuantize:
+    def test_clip_and_floor(self):
+        x = jnp.asarray([-0.5, 0.0, 0.49, 0.999, 1.0, 2.0])
+        q = encoding.quantize(x, 4, 1.0)  # levels 0..15, floor(x*16)
+        np.testing.assert_array_equal(np.asarray(q), [0, 0, 7, 15, 15, 15])
+
+    def test_scale(self):
+        x = jnp.asarray([2.0])
+        assert int(encoding.quantize(x, 3, 4.0)[0]) == 4  # 2/4*8
+
+    @given(st.floats(0.0, 1.0, allow_nan=False), st.integers(1, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_quant_error_bound(self, x, T):
+        """|dequant(quant(x)) - x| < scale / 2^T — the radix-encoding error
+        bound that drives the paper's accuracy-vs-T trade-off (Table I)."""
+        q = encoding.quantize(jnp.float32(x), T, 1.0)
+        err = abs(float(encoding.dequantize(q, T, 1.0)) - x)
+        assert err < 1.0 / (1 << T) + 1e-6
+
+
+class TestRadixVsRate:
+    def test_rate_needs_exponentially_more_steps(self):
+        """The paper's motivation: radix T=4 precision requires ~2^4 rate steps."""
+        x = jnp.asarray(np.linspace(0, 1, 101), jnp.float32)
+        radix_err = float(jnp.max(jnp.abs(
+            encoding.dequantize(encoding.quantize(x, 4), 4) - x)))
+        rate4 = encoding.rate_encode(x, 4)
+        rate16 = encoding.rate_encode(x, 16)
+        err4 = float(jnp.max(jnp.abs(encoding.rate_decode(rate4) - x)))
+        err16 = float(jnp.max(jnp.abs(encoding.rate_decode(rate16) - x)))
+        assert radix_err < err4          # same steps: radix strictly better
+        assert abs(err16 - radix_err) < 0.05  # rate needs 2^T steps to match
+
+    def test_rate_decode_counts(self):
+        planes = encoding.rate_encode(jnp.asarray([0.5]), 8)
+        assert abs(float(encoding.rate_decode(planes)[0]) - 0.5) <= 1 / 8
+
+
+@given(
+    st.lists(st.integers(0, 255), min_size=1, max_size=32),
+    st.integers(1, 8),
+)
+@settings(max_examples=100, deadline=None)
+def test_property_roundtrip_random(levels, T):
+    lvl = encoding.max_level(T)
+    q = jnp.asarray([min(v, lvl) for v in levels], jnp.int32)
+    assert np.array_equal(np.asarray(encoding.decode(encoding.encode(q, T))), np.asarray(q))
+
+
+@given(st.integers(1, 8))
+@settings(max_examples=8, deadline=None)
+def test_property_radix_weights_sum(T):
+    # sum of all weights == max level (all-ones train decodes to 2^T - 1)
+    w = encoding.radix_weights(T)
+    assert int(w.sum()) == encoding.max_level(T)

@@ -1,0 +1,113 @@
+"""SNN / quantized-ANN twin-pair exactness (the paper's core algebra)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding, layers
+
+RNG = np.random.default_rng(42)
+
+
+def _rand_levels(shape, T):
+    return jnp.asarray(RNG.integers(0, encoding.max_level(T) + 1, shape), jnp.uint8)
+
+
+def _rand_w(shape, bits=3):
+    qmax = 2 ** (bits - 1) - 1
+    return jnp.asarray(RNG.integers(-qmax, qmax + 1, shape), jnp.int8)
+
+
+class TestConvTwin:
+    @pytest.mark.parametrize("T", [1, 3, 4, 6])
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_snn_equals_packed(self, T, stride):
+        q = _rand_levels((2, 12, 12, 3), T)
+        w = _rand_w((3, 3, 3, 8))
+        b = jnp.asarray(RNG.integers(-50, 50, (8,)), jnp.int32)
+        acc_q = layers.q_conv2d(q, w, b, stride=stride)
+        acc_s = layers.snn_conv2d(encoding.encode(q, T), w, b, stride=stride)
+        np.testing.assert_array_equal(np.asarray(acc_q), np.asarray(acc_s))
+
+    def test_same_padding(self):
+        T = 4
+        q = _rand_levels((1, 8, 8, 2), T)
+        w = _rand_w((3, 3, 2, 4))
+        b = jnp.zeros((4,), jnp.int32)
+        acc_q = layers.q_conv2d(q, w, b, padding="SAME")
+        acc_s = layers.snn_conv2d(encoding.encode(q, T), w, b, padding="SAME")
+        assert acc_q.shape == (1, 8, 8, 4)
+        np.testing.assert_array_equal(np.asarray(acc_q), np.asarray(acc_s))
+
+
+class TestLinearTwin:
+    @pytest.mark.parametrize("T", [2, 4, 8])
+    def test_snn_equals_packed(self, T):
+        q = _rand_levels((5, 64), T)
+        w = _rand_w((64, 16))
+        b = jnp.asarray(RNG.integers(-10, 10, (16,)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(layers.q_linear(q, w, b)),
+            np.asarray(layers.snn_linear(encoding.encode(q, T), w, b)))
+
+
+class TestPoolTwins:
+    @pytest.mark.parametrize("T", [3, 5])
+    def test_avg_pool(self, T):
+        q = _rand_levels((2, 8, 8, 4), T)
+        np.testing.assert_array_equal(
+            np.asarray(layers.q_avg_pool(q, 2)),
+            np.asarray(layers.snn_avg_pool(encoding.encode(q, T), 2)))
+
+    @pytest.mark.parametrize("T", [3, 5])
+    def test_or_pool(self, T):
+        """Per-plane OR pooling == bitwise OR of packed levels."""
+        q = _rand_levels((2, 8, 8, 4), T)
+        pooled_planes = layers.snn_or_pool(encoding.encode(q, T), 2)
+        np.testing.assert_array_equal(
+            np.asarray(layers.q_or_pool(q, 2)).astype(np.int32),
+            np.asarray(encoding.decode(pooled_planes)))
+
+    @pytest.mark.parametrize("T", [3, 4])
+    def test_lexicographic_max_pool(self, T):
+        """Bit-plane lexicographic max == true max of radix-encoded values."""
+        q = _rand_levels((2, 8, 8, 3), T)
+        np.testing.assert_array_equal(
+            np.asarray(layers.q_max_pool(q, 2)).astype(np.int32),
+            np.asarray(layers.snn_max_pool(encoding.encode(q, T), 2)).astype(np.int32))
+
+    def test_or_pool_upper_bounds_max(self):
+        T = 4
+        q = _rand_levels((1, 6, 6, 2), T)
+        or_p = np.asarray(layers.q_or_pool(q, 2)).astype(np.int64)
+        mx_p = np.asarray(layers.q_max_pool(q, 2)).astype(np.int64)
+        assert (or_p >= mx_p).all()
+
+
+# --------------------------- property tests --------------------------------
+
+
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(2, 5))
+@settings(max_examples=25, deadline=None)
+def test_property_conv_linearity(T, cin, cout):
+    """Radix decomposition linearity: conv(sum_t 2^k s_t) == sum_t 2^k conv(s_t)."""
+    rng = np.random.default_rng(T * 100 + cin * 10 + cout)
+    q = jnp.asarray(rng.integers(0, 2 ** T, (1, 6, 6, cin)), jnp.uint8)
+    w = jnp.asarray(rng.integers(-3, 4, (3, 3, cin, cout)), jnp.int8)
+    b = jnp.zeros((cout,), jnp.int32)
+    acc_q = layers.q_conv2d(q, w, b)
+    acc_s = layers.snn_conv2d(encoding.encode(q, T), w, b)
+    assert np.array_equal(np.asarray(acc_q), np.asarray(acc_s))
+
+
+@given(st.integers(1, 8))
+@settings(max_examples=8, deadline=None)
+def test_property_requant_monotone(T):
+    """Requantization is monotone in the accumulator — spike trains preserve
+    activation ordering (needed for OR-pool to approximate max soundly)."""
+    acc = jnp.arange(-10, 300, 7, dtype=jnp.int32)
+    out = layers.q_requantize(acc, T, 0.05)
+    o = np.asarray(out).astype(np.int64)
+    assert (np.diff(o) >= 0).all()
+    assert o.min() >= 0 and o.max() <= encoding.max_level(T)

@@ -1,0 +1,133 @@
+"""Radix LM integration (the paper's technique as a serving feature)."""
+
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core import encoding
+from repro.lm import model as M, radix as radix_lib
+
+
+def _cfg(T=6, quant="radix"):
+    return dataclasses.replace(get_config("gemma_2b", smoke=True),
+                               quant=quant, radix_steps=T)
+
+
+def test_radix_matmul_error_decays_with_T():
+    """The paper's accuracy-vs-time-steps trend at the matmul level
+    (Table I analogue): quantization error shrinks ~2x per extra step."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) * 0.1
+    wq = radix_lib.quantize_weight(w)
+    exact = x @ w
+    errs = []
+    for T in (2, 3, 4, 5, 6):
+        y = radix_lib.maybe_radix_matmul(x, wq, cfg=_cfg(T))
+        errs.append(float(jnp.linalg.norm(y - exact) / jnp.linalg.norm(exact)))
+    assert all(e2 < e1 * 0.75 for e1, e2 in zip(errs, errs[1:])), errs
+    assert errs[-1] < 0.05
+
+
+def test_kernel_path_bit_equals_fused_path():
+    """Pallas bit-serial kernel == fused int8 dot inside the LM wrapper."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 48))
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 24))
+    wq = radix_lib.quantize_weight(w)
+    a = radix_lib.maybe_radix_matmul(x, wq, cfg=_cfg(4), use_kernel=False)
+    b = radix_lib.maybe_radix_matmul(x, wq, cfg=_cfg(4), use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(T=st.integers(2, 8), seed=st.integers(0, 2**16))
+def test_kv_roundtrip_error_bound(T, seed):
+    """Radix KV encode/decode error <= scale / (2^T - 1) elementwise."""
+    k = jax.random.normal(jax.random.PRNGKey(seed), (2, 3, 2, 8))
+    q, s = radix_lib._encode_kv(k, T)
+    back = radix_lib._decode_kv(q, s, T, jnp.float32)
+    bound = s[..., None] * (1.0 / (2 ** T - 1)) + 1e-6
+    assert bool(jnp.all(jnp.abs(back - k) <= bound))
+
+
+def test_radix_cache_decode_close_to_exact():
+    cfg = _cfg(T=6)
+    cfg_exact = dataclasses.replace(cfg, quant="none")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = M.radixify_params(params, cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab)
+    lt, _, _ = M.forward_train(params, {"tokens": tok}, cfg_exact, None)
+    last, caches = M.prefill(qparams, {"tokens": tok}, cfg, None, max_len=16)
+    corr = float(jnp.corrcoef(last.ravel(), lt[:, -1].ravel())[0, 1])
+    assert corr > 0.99, corr
+    lg, _ = M.decode_step(qparams, caches, tok[:, -1:], jnp.int32(8), cfg, None)
+    assert bool(jnp.isfinite(lg).all())
+
+
+def test_radixify_preserves_moe_experts_exact():
+    cfg = dataclasses.replace(get_config("kimi_k2_1t_a32b", smoke=True),
+                              quant="radix")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    q = M.radixify_params(params, cfg)
+    ffn = q["segments"][0][0]["ffn"]
+    assert isinstance(ffn["w_gate"], jax.Array)          # experts stay exact
+    assert isinstance(ffn["shared"]["w_gate"], dict)     # shared quantized
+
+
+def test_greedy_generation_radix_vs_exact_agreement():
+    """End-to-end: greedy tokens from the radix server mostly match the
+    exact server on a short horizon (T=6, paper's accuracy point)."""
+    from repro.launch.serve import generate
+    cfg = _cfg(T=6)
+    cfg_exact = dataclasses.replace(cfg, quant="none")
+    params = M.init_params(jax.random.PRNGKey(3), cfg)
+    qparams = M.radixify_params(params, cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, cfg.vocab)
+    out_exact = generate(cfg_exact, params, prompts, 8)
+    out_radix = generate(cfg, qparams, prompts, 8)
+    agree = float((out_exact[:, 8:] == out_radix[:, 8:]).mean())
+    assert agree >= 0.5, agree
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.integers(2, 7), m=st.integers(1, 5), n=st.integers(1, 5))
+def test_radix_activation_identity(T, m, n):
+    """Packed radix levels == Horner sum of their bit planes (the identity
+    maybe_radix_matmul's single int8 pass relies on)."""
+    x = jax.random.normal(jax.random.PRNGKey(T * 100 + m), (m, 8 * n))
+    q, s = radix_lib._radix_activation(x, T)
+    planes = encoding.encode(q.astype(jnp.int32), T)
+    repacked = encoding.decode(planes)
+    np.testing.assert_array_equal(np.asarray(repacked),
+                                  np.asarray(q.astype(jnp.int32)))
+
+
+def test_packed_kv_bit_exact_vs_unpacked():
+    """C2 (§Perf): two T=4 levels per byte — same bits as unpacked radix."""
+    import jax.numpy as jnp
+    q = jax.random.randint(jax.random.PRNGKey(0), (2, 3, 2, 8), 0, 16
+                           ).astype(jnp.uint8)
+    assert jnp.array_equal(radix_lib._unpack4(radix_lib._pack4(q)), q)
+
+    cfg_u = dataclasses.replace(get_config("gemma_2b", smoke=True),
+                                quant="radix", radix_steps=4)
+    cfg_p = dataclasses.replace(cfg_u, radix_kv_pack=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg_u)
+    qparams = M.radixify_params(params, cfg_u)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg_u.vocab)
+    outs = {}
+    for name, cfg in (("u", cfg_u), ("p", cfg_p)):
+        last, caches = M.prefill(qparams, {"tokens": tok}, cfg, None,
+                                 max_len=16)
+        lg, _ = M.decode_step(qparams, caches, tok[:, -1:], jnp.int32(8),
+                              cfg, None)
+        outs[name] = (last, lg)
+    for i in range(2):
+        np.testing.assert_array_equal(np.asarray(outs["p"][i]),
+                                      np.asarray(outs["u"][i]))
