@@ -1,21 +1,30 @@
 """Kernel micro-benches: radix paths vs dense float baseline.
 
 On this CPU container the Pallas kernels run in interpret mode (Python --
-not a performance mode), so the timed comparison is between the three
+not a performance mode), so the timed comparison is between the
 XLA-compiled execution strategies the accelerator design cares about:
 
-  dense_f32     float matmul (the ANN baseline)
-  radix_fused   ONE int matmul over packed levels (radix identity; the
-                TPU-native single-pass strategy; int8 MXU rate on TPU)
+  dense_f32            float matmul (the ANN baseline)
+  radix_fused          ONE int matmul over packed levels (radix identity;
+                       the TPU-native single-pass strategy; int8 MXU rate)
+  radix_fused_epilogue the same matmul with the paper's output logic fused
+                       in (bias + requantize + clamp) emitting packed uint8
+                       levels -- the DESIGN.md §2 fusion; its activation
+                       write is 1 byte/element instead of 4
   radix_bitserial_xla  T gated int matmuls + Horner (the paper-faithful
-                dataflow, compiled by XLA; what the FPGA executes)
+                       dataflow, compiled by XLA; what the FPGA executes)
 
-plus the HBM-traffic model per strategy (bytes moved), which is the number
-that transfers to TPU.  CSV: name,us_per_call,bytes_moved.
+plus the HBM-traffic model per strategy: total bytes moved and, separately,
+the inter-layer *activation write* bytes (the ping-pong buffer traffic the
+paper's output logic attacks).  Results go to stdout as CSV and to
+``BENCH_kernels.json`` at the repo root so the perf trajectory is
+machine-readable across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -24,10 +33,12 @@ import numpy as np
 
 from repro.kernels import ref
 
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+
 
 def _time(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    out = fn(*args)                 # single warmup call (compile + cache)
+    jax.block_until_ready(out)
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
@@ -35,32 +46,85 @@ def _time(fn, *args, iters=20):
     return (time.time() - t0) / iters * 1e6
 
 
-def run(log=print, m=512, k=512, n=512, T=4):
+def run(log=print, m=512, k=512, n=512, T=4, json_path=_JSON_PATH):
     rng = np.random.default_rng(0)
     x_f = jnp.asarray(rng.uniform(0, 1, (m, k)), jnp.float32)
     x_q = jnp.asarray(rng.integers(0, 2 ** T, (m, k)), jnp.uint8)
     w_f = jnp.asarray(rng.normal(0, 0.3, (k, n)), jnp.float32)
     w_q = jnp.asarray(rng.integers(-3, 4, (k, n)), jnp.int8)
+    b_q = jnp.asarray(rng.integers(-60, 60, (1, n)), jnp.int32)
+    mult = jnp.full((1, n), 0.017, jnp.float32)
 
     dense = jax.jit(lambda a, b: a @ b)
     fused = jax.jit(lambda a, b: jax.lax.dot_general(
         a.astype(jnp.int32), b.astype(jnp.int32),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32))
+    fused_epi = jax.jit(lambda a, b: ref.requantize_ref(
+        jax.lax.dot_general(
+            a.astype(jnp.int32), b.astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        + b_q, T, mult))
     bitserial = jax.jit(lambda a, b: ref.radix_matmul_ref(a, b, T))
 
+    # bytes model: (input reads + weight reads, activation writes)
     rows = [
-        ("dense_f32", _time(dense, x_f, w_f), (m * k + k * n) * 4 + m * n * 4),
-        ("radix_fused", _time(fused, x_q, w_q), m * k + k * n + m * n * 4),
+        # name, us/call, read bytes, activation write bytes
+        ("dense_f32", _time(dense, x_f, w_f),
+         (m * k + k * n) * 4, m * n * 4),
+        ("radix_fused", _time(fused, x_q, w_q),
+         m * k + k * n, m * n * 4),
+        ("radix_fused_epilogue", _time(fused_epi, x_q, w_q),
+         m * k + k * n, m * n * 1),
         ("radix_bitserial_xla", _time(bitserial, x_q, w_q),
-         T * (m * k + k * n) + m * n * 4),
+         T * (m * k + k * n), m * n * 4),
     ]
-    for name, us, bytes_ in rows:
-        log(f"kernel,{name},{us:.1f}us,{bytes_}B")
-    d = dict((r[0], r) for r in rows)
-    log(f"kernel,traffic_ratio_dense_over_fused="
-        f"{d['dense_f32'][2] / d['radix_fused'][2]:.2f}  # ~4x: the TPU "
-        f"adaptation's HBM win (1B packed levels vs 4B floats)")
+    for name, us, rd, wr in rows:
+        log(f"kernel,{name},{us:.1f}us,{rd + wr}B,act_write={wr}B")
+    d = {r[0]: r for r in rows}
+    total = lambda r: r[2] + r[3]
+    traffic_ratio = total(d["dense_f32"]) / total(d["radix_fused_epilogue"])
+    act_ratio = (d["radix_fused"][3] / d["radix_fused_epilogue"][3])
+    log(f"kernel,traffic_ratio_dense_over_fused_epilogue={traffic_ratio:.2f}"
+        f"  # ~4x: the TPU adaptation's HBM win (1B packed levels end to "
+        f"end vs 4B floats)")
+    log(f"kernel,act_write_ratio_int32_over_fused_epilogue={act_ratio:.2f}  "
+        f"# the output-logic fusion win: uint8 levels vs raw int32 "
+        f"accumulators in the ping-pong buffer")
+
+    # whole-network activation-traffic model from a compiled plan (LeNet-5)
+    plan_traffic = _plan_traffic()
+
+    payload = {
+        "bench": "kernels",
+        "config": {"m": m, "k": k, "n": n, "T": T,
+                   "backend": jax.default_backend()},
+        "rows": [
+            {"name": name, "us_per_call": round(us, 1),
+             "read_bytes": rd, "act_write_bytes": wr,
+             "bytes_moved": rd + wr}
+            for name, us, rd, wr in rows
+        ],
+        "traffic_ratio_dense_over_fused_epilogue": round(traffic_ratio, 3),
+        "act_write_ratio_int32_over_fused_epilogue": round(act_ratio, 3),
+        "plan_activation_traffic_lenet5": plan_traffic,
+    }
+    if json_path is not None:
+        pathlib.Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+        log(f"kernel,json={json_path}")
     return rows
+
+
+def _plan_traffic(T=4, batch=1):
+    """Per-layer inter-layer activation bytes for LeNet-5, fused vs int32."""
+    from repro.core import conversion, engine
+    from repro.models import lenet
+
+    static, params, input_hw = lenet.make(pool_mode="or")
+    rng = np.random.default_rng(1)
+    calib = jnp.asarray(rng.uniform(0, 1, (4,) + input_hw), jnp.float32)
+    qnet = conversion.convert(static, params, calib, num_steps=T)
+    plan = engine.compile_plan(qnet, (batch,) + input_hw)
+    return plan.activation_traffic()
 
 
 def main():

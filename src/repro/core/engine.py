@@ -11,8 +11,17 @@ Execution paths
   path: one tensor per layer, radix packing == integer activation.
 * ``mode="snn"``     — paper-faithful spike-plane path: (T, ...) binary
   planes, Horner accumulation per layer.  Bit-exact equal to "packed".
-* ``backend="kernels"`` — packed path dispatched through the Pallas kernels
-  (interpret-mode on CPU); ``backend="jnp"`` uses core/layers.py directly.
+* ``backend="kernels"`` — packed path dispatched through a
+  :func:`compile_plan` of fused-epilogue Pallas kernels (interpret-mode on
+  CPU); ``backend="jnp"`` uses core/layers.py directly.
+
+:func:`compile_plan` is the controller's program memory: a one-time pass
+that pre-pads every weight to block multiples, folds bias + requantization
+multiplier into per-layer epilogue row vectors, picks kernel block sizes,
+and returns a single jitted closure running the whole network with
+activations kept as **packed uint8 levels end-to-end** (DESIGN.md §2) — no
+per-call padding, no Python-level layer dispatch, no int32 accumulator ever
+leaving a kernel (except the final logits layer).
 
 The engine also produces :class:`MemoryReport` — the ping-pong buffer sizing
 and per-layer access counts the paper's memory system is built around (used
@@ -24,7 +33,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Literal, Optional, Tuple
+import weakref
+from typing import Callable, List, Literal, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +42,8 @@ import numpy as np
 
 from repro.core import conversion, encoding, layers
 
-__all__ = ["run", "MemoryReport", "memory_report"]
+__all__ = ["run", "compile_plan", "CompiledPlan", "PlanLayerInfo",
+           "MemoryReport", "memory_report"]
 
 
 # ---------------------------------------------------------------------------
@@ -50,15 +61,19 @@ def run(
     *,
     mode: Literal["packed", "snn"] = "packed",
     backend: Literal["jnp", "kernels"] = "jnp",
+    method: Literal["bitserial", "fused"] = "fused",
 ) -> jax.Array:
-    """Run the converted net on float input ``x`` (NHWC); returns float logits."""
+    """Run the converted net on float input ``x`` (NHWC); returns float logits.
+
+    ``backend="kernels"`` (packed mode) routes through a cached
+    :func:`compile_plan` — the whole layer sequence as one jitted closure of
+    fused-epilogue Pallas kernels; ``method`` picks the in-kernel dataflow.
+    """
+    if backend == "kernels" and mode == "packed":
+        return _cached_plan(qnet, x.shape, method)(x)
+
     T = qnet.num_steps
     q = encoding.quantize(x, T, qnet.input_scale)
-
-    if backend == "kernels":
-        from repro.kernels import ops as kops  # deferred: optional path
-    else:
-        kops = None
 
     if mode == "snn":
         state = encoding.encode(q, T)  # (T, N, H, W, C) binary planes
@@ -71,9 +86,6 @@ def run(
             if mode == "snn":
                 acc = layers.snn_conv2d(state, qp["w_q"], qp["b_int"],
                                         stride=stride, padding=padding)
-            elif kops is not None:
-                acc = kops.radix_conv2d(state, qp["w_q"], qp["b_int"], T,
-                                        stride=stride, padding=padding)
             else:
                 acc = layers.q_conv2d(state, qp["w_q"], qp["b_int"],
                                       stride=stride, padding=padding)
@@ -81,8 +93,6 @@ def run(
         elif kind == "linear":
             if mode == "snn":
                 acc = layers.snn_linear(state, qp["w_q"], qp["b_int"])
-            elif kops is not None:
-                acc = kops.radix_matmul(state, qp["w_q"], qp["b_int"], T)
             else:
                 acc = layers.q_linear(state, qp["w_q"], qp["b_int"])
             state = _requant_or_logits(acc, qp, qnet, mode)
@@ -127,6 +137,313 @@ def _pool(state, cfg, mode):
     if pool_mode == "max":
         return layers.q_max_pool(state, w)
     raise ValueError(pool_mode)
+
+
+# ---------------------------------------------------------------------------
+# Compiled execution plans — the controller's program memory.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PlanLayerInfo:
+    """Per-layer summary + the activation-traffic model (DESIGN.md §2)."""
+
+    name: str
+    out_shape: Tuple[int, ...]     # logical (unpadded) output, incl. batch
+    out_dtype: str                 # what the plan actually writes
+    act_write_bytes: int           # this plan (fused epilogue, packed uint8)
+    act_write_bytes_int32: int     # unfused baseline (raw int32 accumulator)
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """A whole-network jitted closure over pre-padded weights.
+
+    ``plan(x)`` maps float input (the plan's ``input_shape``) to float
+    logits, bit-exact equal to ``run(qnet, x, mode="packed",
+    backend="jnp")``.  All weight padding / bias+multiplier folding / block
+    selection happened at :func:`compile_plan` time; per call there is no
+    padding of parameters and no Python-level dispatch (the layer loop is
+    unrolled into one XLA program at trace time).
+    """
+
+    input_shape: Tuple[int, ...]
+    num_steps: int
+    method: str
+    layers: List[PlanLayerInfo]
+    _fn: Callable = dataclasses.field(repr=False)
+    _params: list = dataclasses.field(repr=False)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self._fn(self._params, x)
+
+    def activation_traffic(self) -> dict:
+        """Modeled inter-layer activation bytes written: fused vs unfused."""
+        fused = sum(l.act_write_bytes for l in self.layers)
+        unfused = sum(l.act_write_bytes_int32 for l in self.layers)
+        return {
+            "layers": [dataclasses.asdict(l) for l in self.layers],
+            "fused_write_bytes": fused,
+            "int32_write_bytes": unfused,
+            "traffic_ratio": unfused / max(fused, 1),
+        }
+
+
+def compile_plan(
+    qnet: conversion.QuantizedNet,
+    input_shape: Tuple[int, ...],
+    *,
+    method: Literal["bitserial", "fused"] = "fused",
+) -> CompiledPlan:
+    """Compile ``qnet`` into a single jitted fused-epilogue kernel pipeline.
+
+    One-time work (per (net, input shape)):
+
+    * weights pre-padded to kernel block multiples — conv in-channels to the
+      previous layer's padded out-channels, so activations stay physically
+      channel-padded between layers and are never re-padded per call;
+    * bias + requantization multiplier folded into per-layer epilogue row
+      vectors (padding lanes get ``mult = 0`` -> level 0, keeping the pad
+      lanes algebraically inert through pools and later layers);
+    * the linear layer following ``flatten`` gets its weight rows scattered
+      to the padded-channel flattened layout (the one re-indexing that
+      replaces all runtime gather/slice work);
+    * block sizes chosen per layer; the avg-pool carry (activations
+      temporarily wider than T bits, division folded into the next
+      multiplier) tracked so bit-serial extraction stays exact.
+
+    The returned plan keeps every inter-layer activation as packed uint8
+    levels (1 byte/element — the pong buffer's T-bit format) except where a
+    sum-pool carry exceeds 8 bits; only the final logits layer emits a raw
+    int32 accumulator.
+    """
+    from repro.kernels import ops as kops          # deferred: optional path
+    from repro.kernels.radix_conv import radix_conv2d_pallas
+    from repro.kernels.radix_matmul import radix_matmul_pallas
+
+    T = qnet.num_steps
+    if T > 8:
+        raise ValueError(f"packed uint8 plans require T <= 8, got {T}")
+    interp = kops._interpret()
+
+    if len(input_shape) == 4:
+        batch, h, w, c_real = input_shape
+        c_pad = c_real
+    elif len(input_shape) == 2:
+        batch, f_real = input_shape
+        f_pad = f_real
+        h = w = c_real = c_pad = None
+    else:
+        raise ValueError(f"input_shape must be NHWC or NF, got {input_shape}")
+    scatter: Optional[Tuple[int, int, int]] = None  # (spatial, c_real, c_pad)
+
+    mp, bm = kops._block(batch)
+    rows = batch                   # current physical row count (batch dim)
+    bits = T                       # integer bits carried by activations
+    steps: List[Tuple[Callable, dict]] = []
+    infos: List[PlanLayerInfo] = []
+    n_layers = len(qnet.static)
+
+    def _elems(shape) -> int:
+        return int(np.prod(shape))
+
+    for (kind, cfg), qp in zip(qnet.static, qnet.qlayers):
+        if kind == "conv":
+            kh, kw, cin, cout = qp["w_q"].shape
+            assert cin == c_real, (cin, c_real)
+            stride = cfg.get("stride", 1)
+            pads = None
+            if cfg.get("padding", "VALID") == "SAME":
+                pads = ((0, 0), kops.same_pads(h, kh, stride),
+                        kops.same_pads(w, kw, stride), (0, 0))
+            hp = h + (pads[1][0] + pads[1][1] if pads else 0)
+            wp = w + (pads[2][0] + pads[2][1] if pads else 0)
+            h = (hp - kh) // stride + 1
+            w = (wp - kw) // stride + 1
+            cop, bco = kops._block(cout)
+            w_p = jnp.pad(qp["w_q"],
+                          ((0, 0), (0, 0), (0, c_pad - cin), (0, cop - cout)))
+            last = qp["mult"] is None
+            if last:
+                p = {"w": w_p, "b": jnp.asarray(qp["b_int"], jnp.int32)}
+
+                def apply(state, p, *, pads=pads, stride=stride, bco=bco,
+                          in_bits=bits, cout=cout):
+                    if pads is not None:
+                        state = jnp.pad(state, pads)
+                    acc = radix_conv2d_pallas(
+                        state, p["w"], num_steps=in_bits, method=method,
+                        bco=bco, stride=stride, interpret=interp,
+                    )[..., :cout]
+                    return acc + p["b"]
+            else:
+                bias_row, mult_row = kops.epilogue_rows(
+                    qp["b_int"], qp["mult"], cout, cop)
+                p = {"w": w_p, "bias": bias_row, "mult": mult_row}
+
+                def apply(state, p, *, pads=pads, stride=stride, bco=bco,
+                          in_bits=bits):
+                    if pads is not None:
+                        state = jnp.pad(state, pads)
+                    return radix_conv2d_pallas(
+                        state, p["w"], num_steps=in_bits, method=method,
+                        bco=bco, stride=stride, interpret=interp,
+                        bias=p["bias"], mult=p["mult"], out_steps=T)
+
+            steps.append((apply, p))
+            out_shape = (batch, h, w, cout)
+            infos.append(PlanLayerInfo(
+                name=f"conv{kh}x{kw}x{cin}->{cout}" + (f"/s{stride}"
+                                                       if stride > 1 else ""),
+                out_shape=out_shape,
+                out_dtype="int32" if last else "uint8",
+                act_write_bytes=_elems(out_shape) * (4 if last else 1),
+                act_write_bytes_int32=_elems(out_shape) * 4,
+            ))
+            c_real, c_pad, bits = cout, cop, T
+
+        elif kind == "linear":
+            fin, fout = qp["w_q"].shape
+            assert fin == f_real, (fin, f_real)
+            w_q = qp["w_q"]
+            # rows up to the physically padded feature count (zeros: the
+            # extra activation lanes are level 0 by construction).  After a
+            # flatten of channel-padded maps the zeros interleave per
+            # spatial position -> scatter via reshape, not an end-pad.
+            if scatter is not None:
+                spatial, cr, cp = scatter
+                w_q = jnp.pad(w_q.reshape(spatial, cr, fout),
+                              ((0, 0), (0, cp - cr), (0, 0))
+                              ).reshape(spatial * cp, fout)
+                scatter = None
+            elif f_pad > fin:
+                w_q = jnp.pad(w_q, ((0, f_pad - fin), (0, 0)))
+            kp, bk = kops._block(f_pad)
+            if kp > f_pad:
+                w_q = jnp.pad(w_q, ((0, kp - f_pad), (0, 0)))
+            np_, bn = kops._block(fout)
+            w_p = jnp.pad(w_q, ((0, 0), (0, np_ - fout)))
+            row_pad = mp - rows
+            col_pad = kp - f_pad
+            last = qp["mult"] is None
+            if last:
+                p = {"w": w_p, "b": jnp.asarray(qp["b_int"], jnp.int32)}
+
+                def apply(state, p, *, bk=bk, bn=bn, in_bits=bits,
+                          row_pad=row_pad, col_pad=col_pad, fout=fout):
+                    if row_pad or col_pad:
+                        state = jnp.pad(state, ((0, row_pad), (0, col_pad)))
+                    acc = radix_matmul_pallas(
+                        state, p["w"], num_steps=in_bits, method=method,
+                        bm=bm, bk=bk, bn=bn, interpret=interp,
+                    )[:batch, :fout]
+                    return acc + p["b"]
+            else:
+                bias_row, mult_row = kops.epilogue_rows(
+                    qp["b_int"], qp["mult"], fout, np_)
+                p = {"w": w_p, "bias": bias_row, "mult": mult_row}
+
+                def apply(state, p, *, bk=bk, bn=bn, in_bits=bits,
+                          row_pad=row_pad, col_pad=col_pad):
+                    if row_pad or col_pad:
+                        state = jnp.pad(state, ((0, row_pad), (0, col_pad)))
+                    return radix_matmul_pallas(
+                        state, p["w"], num_steps=in_bits, method=method,
+                        bm=bm, bk=bk, bn=bn, interpret=interp,
+                        bias=p["bias"], mult=p["mult"], out_steps=T)
+
+            steps.append((apply, p))
+            out_shape = (batch, fout)
+            infos.append(PlanLayerInfo(
+                name=f"linear{fin}->{fout}",
+                out_shape=out_shape,
+                out_dtype="int32" if last else "uint8",
+                act_write_bytes=_elems(out_shape) * (4 if last else 1),
+                act_write_bytes_int32=_elems(out_shape) * 4,
+            ))
+            f_real, f_pad, bits = fout, np_, T
+            rows = mp if not last else batch
+
+        elif kind == "pool":
+            window, pool_mode = cfg["window"], cfg.get("mode", "or")
+            h, w = h // window, w // window
+            if pool_mode == "avg":
+                # sum-pool widens the carry; stays packed while it fits a byte
+                bits = layers.sum_pool_bits(bits, window)
+                packed = bits <= 8
+
+                def apply(state, p, *, window=window, packed=packed):
+                    out = layers.q_avg_pool(state, window)
+                    return out.astype(jnp.uint8) if packed else out
+            elif pool_mode in ("or", "max"):
+                fn = (layers.q_or_pool if pool_mode == "or"
+                      else layers.q_max_pool)
+
+                def apply(state, p, *, fn=fn, window=window):
+                    return fn(state, window)
+            else:
+                raise ValueError(pool_mode)
+            steps.append((apply, {}))
+            out_shape = (batch, h, w, c_real)
+            nbytes = 1 if bits <= 8 else 4
+            infos.append(PlanLayerInfo(
+                name=f"pool{window}/{pool_mode}",
+                out_shape=out_shape,
+                out_dtype="uint8" if nbytes == 1 else "int32",
+                act_write_bytes=_elems(out_shape) * nbytes,
+                act_write_bytes_int32=_elems(out_shape) * 4,
+            ))
+
+        elif kind == "flatten":
+            steps.append((lambda state, p: state.reshape(state.shape[0], -1),
+                          {}))
+            # the padded-channel layout becomes the padded feature layout;
+            # the NEXT linear scatters its weight rows to match (plan-time)
+            f_real = h * w * c_real
+            f_pad = h * w * c_pad
+            if c_pad > c_real:
+                scatter = (h * w, c_real, c_pad)
+        else:
+            raise ValueError(kind)
+
+    # plain locals, NOT qnet attribute reads: the jitted closure must not
+    # strongly reference the net, or the plan cache's weakref never dies
+    input_scale, logit_scale = qnet.input_scale, qnet.logit_scale
+
+    def forward(params, x):
+        state = encoding.quantize(x, T, input_scale)
+        for (apply, _), p in zip(steps, params):
+            state = apply(state, p)
+        return state.astype(jnp.float32) * logit_scale
+
+    params = [p for _, p in steps]
+    return CompiledPlan(
+        input_shape=tuple(input_shape),
+        num_steps=T,
+        method=method,
+        layers=infos,
+        _fn=jax.jit(forward),
+        _params=params,
+    )
+
+
+# plan cache: keyed by net identity + call signature, weakly referencing the
+# net so cache entries die with it.
+_PLAN_CACHE: dict = {}
+
+
+def _cached_plan(qnet, input_shape, method) -> CompiledPlan:
+    key = (id(qnet), tuple(input_shape), method)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None and hit[0]() is qnet:
+        return hit[1]
+    # drop entries whose net died (their ids may be recycled, and the plans
+    # pin padded weights + jitted executables)
+    for stale in [k for k, (r, _) in _PLAN_CACHE.items() if r() is None]:
+        del _PLAN_CACHE[stale]
+    plan = compile_plan(qnet, input_shape, method=method)
+    _PLAN_CACHE[key] = (weakref.ref(qnet), plan)
+    return plan
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,7 @@ __all__ = [
     "q_or_pool",
     "snn_or_pool",
     "q_requantize",
+    "sum_pool_bits",
 ]
 
 # integer conv/matmul helpers ------------------------------------------------
@@ -67,8 +68,26 @@ def _int_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
 
 
 def q_requantize(acc: jax.Array, num_steps: int, mult) -> jax.Array:
-    """Shared ReLU+requantize stage (== neuron.radix_fire)."""
+    """Shared ReLU+requantize stage (== neuron.radix_fire).
+
+    This is the semantic contract of the kernels' fused output-logic
+    epilogue (kernels/radix_matmul.py, kernels/radix_conv.py): the in-kernel
+    bias+multiply+clamp must be bit-exact against ``q_requantize(acc +
+    b_int, T, mult)`` — tests/test_fused_epilogue.py sweeps it.
+    """
     return neuron.radix_fire(acc, num_steps, mult)
+
+
+def sum_pool_bits(bits: int, window: int) -> int:
+    """Integer bits carried by a sum-pool output whose inputs use ``bits``.
+
+    The paper's pooling unit has no output requantizer, so an avg (sum) pool
+    widens activations from T to ``sum_pool_bits(T, window)`` bits until the
+    next layer's multiplier folds the window division back in (DESIGN.md
+    §2); engine.compile_plan uses this to decide whether the carry still
+    fits the packed byte format.
+    """
+    return max(1, int(((1 << bits) - 1) * window * window).bit_length())
 
 
 # convolution ----------------------------------------------------------------

@@ -4,17 +4,21 @@ Handles:
 * backend dispatch — compiled Pallas on TPU, ``interpret=True`` on CPU
   (the kernel body runs in Python for bit-exact validation),
 * padding to block multiples (kernels require aligned shapes),
-* layout conveniences (SAME padding, strides, bias) the raw kernels omit.
+* layout conveniences (SAME padding, strides, bias) the raw kernels omit,
+* the fused output-logic epilogue: passing ``mult`` makes conv/matmul emit
+  packed uint8 levels directly (bias + requantize + clamp fused in-kernel,
+  DESIGN.md §2) instead of raw int32 accumulators.
 
 The ``method`` flag selects the paper-faithful bit-serial dataflow
 ("bitserial") or the TPU-native fused int8 pass ("fused") — both bit-exact
-against kernels/ref.py oracles (tests/test_kernels.py sweeps shapes, T,
-methods).
+against kernels/ref.py oracles (tests/test_kernels.py and
+tests/test_fused_epilogue.py sweep shapes, T, strides, methods).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +27,13 @@ from repro.kernels.radix_conv import radix_conv2d_pallas
 from repro.kernels.radix_matmul import radix_matmul_pallas
 from repro.kernels.spike_encode import spike_encode_pallas
 
-__all__ = ["radix_matmul", "radix_conv2d", "radix_encode"]
+__all__ = [
+    "radix_matmul",
+    "radix_conv2d",
+    "radix_encode",
+    "epilogue_rows",
+    "same_pads",
+]
 
 
 def _interpret() -> bool:
@@ -42,6 +52,34 @@ def _block(dim: int, pref: int = 128, align: int = 8):
     return b, b
 
 
+def same_pads(size: int, k: int, stride: int) -> Tuple[int, int]:
+    """(lo, hi) explicit pads matching XLA "SAME" for one spatial dim."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return total // 2, total - total // 2
+
+
+def epilogue_rows(
+    b_int: Optional[jax.Array],
+    mult,
+    n: int,
+    n_pad: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fold (bias, requant multiplier) into kernel-epilogue row vectors.
+
+    Returns ``(bias, mult)`` of shape ``(1, n_pad)``; the padding lanes get
+    ``mult == 0`` so out-of-range output channels requantize to level 0 —
+    which is what lets a compiled plan keep activations channel-padded
+    between layers (core/engine.compile_plan)."""
+    bias = jnp.zeros((n,), jnp.int32) if b_int is None \
+        else jnp.asarray(b_int, jnp.int32).reshape(n)
+    mrow = jnp.broadcast_to(
+        jnp.asarray(mult, jnp.float32).reshape(-1), (n,))
+    bias = jnp.pad(bias, (0, n_pad - n)).reshape(1, n_pad)
+    mrow = jnp.pad(mrow, (0, n_pad - n)).reshape(1, n_pad)
+    return bias, mrow
+
+
 def radix_matmul(
     x_q: jax.Array,
     w_q: jax.Array,
@@ -49,8 +87,12 @@ def radix_matmul(
     num_steps: int,
     *,
     method: str = "bitserial",
+    mult=None,
 ) -> jax.Array:
-    """(..., K) packed levels @ (K, N) int8 (+bias) -> (..., N) int32."""
+    """(..., K) packed levels @ (K, N) int8 (+bias) -> (..., N).
+
+    ``mult=None``: raw int32 accumulator (+bias outside the kernel).
+    ``mult`` given: fused output-logic epilogue -> packed uint8 levels."""
     lead = x_q.shape[:-1]
     k = x_q.shape[-1]
     n = w_q.shape[-1]
@@ -62,11 +104,18 @@ def radix_matmul(
     np_, bn = _block(n)
     x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
     w2 = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
-    out = radix_matmul_pallas(
+    if mult is None:
+        out = radix_matmul_pallas(
+            x2, w2, num_steps=num_steps, method=method,
+            bm=bm, bk=bk, bn=bn, interpret=_interpret(),
+        )[:m, :n].reshape(*lead, n)
+        return out if b_int is None else out + b_int
+    bias_row, mult_row = epilogue_rows(b_int, mult, n, np_)
+    return radix_matmul_pallas(
         x2, w2, num_steps=num_steps, method=method,
         bm=bm, bk=bk, bn=bn, interpret=_interpret(),
+        bias=bias_row, mult=mult_row,
     )[:m, :n].reshape(*lead, n)
-    return out if b_int is None else out + b_int
 
 
 def radix_conv2d(
@@ -78,29 +127,36 @@ def radix_conv2d(
     stride: int = 1,
     padding: str = "VALID",
     method: str = "bitserial",
+    mult=None,
 ) -> jax.Array:
-    """NHWC packed levels * HWIO int8 -> NHWC int32 conv (+bias).
+    """NHWC packed levels * HWIO int8 -> NHWC conv (+bias).
 
-    SAME padding is pre-padded; stride > 1 computes the stride-1 result and
-    subsamples (the paper's networks are stride-1; this path is for
-    generality, not perf)."""
+    SAME padding is pre-padded (XLA-exact pads for any stride); stride > 1
+    subsamples *inside* the kernel grid — only the h_out x w_out surviving
+    outputs are ever computed.  ``mult`` turns on the fused output-logic
+    epilogue (packed uint8 levels out)."""
     kh, kw, cin, cout = w_q.shape
     if padding == "SAME":
-        ph, pw = kh - 1, kw - 1
-        x_q = jnp.pad(x_q, ((0, 0), (ph // 2, ph - ph // 2),
-                            (pw // 2, pw - pw // 2), (0, 0)))
+        ph = same_pads(x_q.shape[1], kh, stride)
+        pw = same_pads(x_q.shape[2], kw, stride)
+        x_q = jnp.pad(x_q, ((0, 0), ph, pw, (0, 0)))
     elif padding != "VALID":
         raise ValueError(padding)
 
     cop, bco = _block(cout)
     w_p = jnp.pad(w_q, ((0, 0), (0, 0), (0, 0), (0, cop - cout)))
-    out = radix_conv2d_pallas(
+    if mult is None:
+        out = radix_conv2d_pallas(
+            x_q, w_p, num_steps=num_steps, method=method, bco=bco,
+            stride=stride, interpret=_interpret(),
+        )[..., :cout]
+        return out if b_int is None else out + b_int
+    bias_row, mult_row = epilogue_rows(b_int, mult, cout, cop)
+    return radix_conv2d_pallas(
         x_q, w_p, num_steps=num_steps, method=method, bco=bco,
-        interpret=_interpret(),
+        stride=stride, interpret=_interpret(),
+        bias=bias_row, mult=mult_row,
     )[..., :cout]
-    if stride != 1:
-        out = out[:, ::stride, ::stride, :]
-    return out if b_int is None else out + b_int
 
 
 def radix_encode(

@@ -10,8 +10,18 @@ TPU adaptation of the paper's convolution unit (Fig. 2):
   are static unrolls around MXU matmuls over the input-channel dim; time
   steps Horner-merge in an int32 register tile.
 
-Grid: (batch, H_out blocks, C_out blocks).  Stride-1 VALID convs only (all
-of the paper's networks); striding/pooling is done outside.  The halo
+Strided convolutions subsample *inside* the kernel: each (kh, kw) tap
+gathers only the rows/columns that land on the stride grid, so the kernel
+computes exactly ``h_out x w_out`` outputs instead of materializing the
+stride-1 result and discarding (stride^2 - 1)/stride^2 of it.
+
+Fused epilogue (DESIGN.md §2): passing ``bias``/``mult`` runs the paper's
+output logic (bias + ``layers.q_requantize`` multiply + clamp to
+``[0, 2^T - 1]``) on the int32 register tile before the store, emitting
+packed uint8 levels — the raw accumulator never reaches HBM.  Without
+``mult`` the kernel emits int32 accumulators (logits-layer path).
+
+Grid: (batch, C_out blocks).  VALID convs (ops.py pre-pads SAME).  The halo
 (kernel_h - 1 rows) is handled by passing the full H dimension per block and
 slicing rows inside the kernel, which is exact for these feature-map sizes
 (<= 224 rows -> <= 3.2 MB VMEM per block at VGG scale).
@@ -20,36 +30,35 @@ slicing rows inside the kernel, which is exact for these feature-map sizes
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["radix_conv2d_kernel", "radix_conv2d_pallas"]
+__all__ = [
+    "radix_conv2d_kernel",
+    "radix_conv2d_epilogue_kernel",
+    "radix_conv2d_pallas",
+]
 
 
-def radix_conv2d_kernel(
-    x_ref, w_ref, o_ref, *, num_steps: int, method: str, kh: int, kw: int
-):
-    """x_ref: (1, H, W, Cin) packed levels; w_ref: (kh, kw, Cin, bco);
-    o_ref: (1, H_out, W_out, bco) int32."""
-    h_out, w_out = o_ref.shape[1], o_ref.shape[2]
-    cin = x_ref.shape[3]
-    bco = o_ref.shape[3]
+def _conv_acc(x, w_ref, h_out, w_out, bco, *, num_steps, method, kh, kw,
+              stride):
+    """Strided VALID conv of an (H, W, Cin) int32 block -> (h_out*w_out, bco).
 
-    x = x_ref[0].astype(jnp.int32)            # (H, W, Cin)
+    The (kh, kw) loops mirror the adder-array row/column iteration; each
+    tap is an MXU matmul over Cin (the FPGA's sequential input-channel
+    loop, parallelized on the MXU's contraction dim)."""
+    cin = x.shape[-1]
 
     def conv_planes(plane):
-        """Stride-1 VALID conv of one (H, W, Cin) int plane -> (H_out*W_out, bco).
-
-        The (kh, kw) loops mirror the adder-array row/column iteration; each
-        tap is an MXU matmul over Cin (the FPGA's sequential input-channel
-        loop, parallelized on the MXU's contraction dim)."""
         acc = jnp.zeros((h_out * w_out, bco), jnp.int32)
         for r in range(kh):
             for c in range(kw):
-                window = plane[r:r + h_out, c:c + w_out, :]      # row reuse
+                # rows/cols on the stride grid only — no discarded outputs
+                window = plane[r:r + (h_out - 1) * stride + 1:stride,
+                               c:c + (w_out - 1) * stride + 1:stride, :]
                 acc = acc + jax.lax.dot_general(
                     window.reshape(h_out * w_out, cin),
                     w_ref[r, c].astype(jnp.int32),
@@ -59,18 +68,50 @@ def radix_conv2d_kernel(
         return acc
 
     if method == "fused":
-        acc = conv_planes(x)                  # radix identity: one pass
-    else:
-        acc = jnp.zeros((h_out * w_out, bco), jnp.int32)
-        for t in range(num_steps):            # paper-faithful Horner loop
-            shift = num_steps - 1 - t
-            acc = (acc << 1) + conv_planes((x >> shift) & 1)
+        return conv_planes(x)                 # radix identity: one pass
+    acc = jnp.zeros((h_out * w_out, bco), jnp.int32)
+    for t in range(num_steps):                # paper-faithful Horner loop
+        shift = num_steps - 1 - t
+        acc = (acc << 1) + conv_planes((x >> shift) & 1)
+    return acc
 
+
+def radix_conv2d_kernel(
+    x_ref, w_ref, o_ref, *, num_steps: int, method: str, kh: int, kw: int,
+    stride: int,
+):
+    """x_ref: (1, H, W, Cin) packed levels; w_ref: (kh, kw, Cin, bco);
+    o_ref: (1, H_out, W_out, bco) int32."""
+    h_out, w_out = o_ref.shape[1], o_ref.shape[2]
+    bco = o_ref.shape[3]
+    x = x_ref[0].astype(jnp.int32)            # (H, W, Cin)
+    acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
+                    method=method, kh=kh, kw=kw, stride=stride)
     o_ref[0] = acc.reshape(h_out, w_out, bco)
 
 
+def radix_conv2d_epilogue_kernel(
+    x_ref, w_ref, bias_ref, mult_ref, o_ref, *, num_steps: int, method: str,
+    kh: int, kw: int, stride: int, out_level: int,
+):
+    """Fused-epilogue variant: output logic runs on the int32 register tile
+    and o_ref receives packed uint8 levels (1, H_out, W_out, bco)."""
+    h_out, w_out = o_ref.shape[1], o_ref.shape[2]
+    bco = o_ref.shape[3]
+    x = x_ref[0].astype(jnp.int32)
+    acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
+                    method=method, kh=kh, kw=kw, stride=stride)
+    # identical float ops to layers.q_requantize -> bit-exact twin
+    acc = acc + bias_ref[...]                      # (hw, bco) + (1, bco)
+    q = jnp.floor(acc.astype(jnp.float32) * mult_ref[...])
+    o_ref[0] = jnp.clip(q, 0, out_level).astype(jnp.uint8).reshape(
+        h_out, w_out, bco)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("num_steps", "method", "bco", "interpret"))
+    jax.jit,
+    static_argnames=("num_steps", "method", "bco", "stride", "interpret",
+                     "out_steps"))
 def radix_conv2d_pallas(
     x_q: jax.Array,
     w_q: jax.Array,
@@ -78,28 +119,62 @@ def radix_conv2d_pallas(
     num_steps: int,
     method: Literal["bitserial", "fused"] = "bitserial",
     bco: int = 128,
+    stride: int = 1,
     interpret: bool = False,
+    bias: Optional[jax.Array] = None,
+    mult: Optional[jax.Array] = None,
+    out_steps: Optional[int] = None,
 ) -> jax.Array:
-    """(N, H, W, Cin) uint8 @ (KH, KW, Cin, Cout) int8 -> VALID conv, int32.
+    """(N, H, W, Cin) uint8 @ (KH, KW, Cin, Cout) int8 -> VALID conv.
 
-    Cout must be a multiple of ``bco`` (ops.py pads)."""
+    Without ``mult``: int32 accumulators.  With ``mult`` (f32 ``(1, Cout)``)
+    and optional ``bias`` (int32 ``(1, Cout)``): fused output-logic epilogue,
+    packed uint8 levels out, clamped to ``[0, 2^out_steps - 1]``
+    (``out_steps`` defaults to ``num_steps``; it differs when inputs carry
+    extra integer bits, e.g. after a sum-pool).  Cout must be a multiple of
+    ``bco`` (ops.py pads); ``stride`` subsamples inside the kernel."""
     n, h, w, cin = x_q.shape
     kh, kw, cin2, cout = w_q.shape
     assert cin == cin2, (x_q.shape, w_q.shape)
     assert cout % bco == 0, (cout, bco)
-    h_out, w_out = h - kh + 1, w - kw + 1
+    h_out = (h - kh) // stride + 1
+    w_out = (w - kw) // stride + 1
 
     grid = (n, cout // bco)
+    in_specs = [
+        pl.BlockSpec((1, h, w, cin), lambda b, co: (b, 0, 0, 0)),
+        pl.BlockSpec((kh, kw, cin, bco), lambda b, co: (0, 0, 0, co)),
+    ]
+    o_spec = pl.BlockSpec((1, h_out, w_out, bco), lambda b, co: (b, 0, 0, co))
+
+    if mult is None:
+        kernel = functools.partial(
+            radix_conv2d_kernel, num_steps=num_steps, method=method,
+            kh=kh, kw=kw, stride=stride)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), jnp.int32),
+            interpret=interpret,
+        )(x_q, w_q)
+
+    out_steps = num_steps if out_steps is None else out_steps
+    assert out_steps <= 8, "packed uint8 epilogue requires T <= 8"
+    if bias is None:
+        bias = jnp.zeros((1, cout), jnp.int32)
+    assert bias.shape == (1, cout) and mult.shape == (1, cout), (
+        bias.shape, mult.shape)
+    row_spec = pl.BlockSpec((1, bco), lambda b, co: (0, co))
     kernel = functools.partial(
-        radix_conv2d_kernel, num_steps=num_steps, method=method, kh=kh, kw=kw)
+        radix_conv2d_epilogue_kernel, num_steps=num_steps, method=method,
+        kh=kh, kw=kw, stride=stride, out_level=(1 << out_steps) - 1)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, h, w, cin), lambda b, co: (b, 0, 0, 0)),
-            pl.BlockSpec((kh, kw, cin, bco), lambda b, co: (0, 0, 0, co)),
-        ],
-        out_specs=pl.BlockSpec((1, h_out, w_out, bco), lambda b, co: (b, 0, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), jnp.int32),
+        in_specs=in_specs + [row_spec, row_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), jnp.uint8),
         interpret=interpret,
-    )(x_q, w_q)
+    )(x_q, w_q, bias, mult.astype(jnp.float32))

@@ -17,20 +17,55 @@ Two in-kernel strategies, selected statically:
   optimization the FPGA cannot make (no multipliers) but the MXU gets for
   free — the central hardware-adaptation insight of this reproduction.
 
+Fused epilogue (DESIGN.md §2)
+-----------------------------
+Passing ``bias``/``mult`` turns on the in-kernel *output logic*: on the
+last K-grid step the int32 accumulator (kept in a VMEM scratch tile, never
+written to HBM) gets bias-add, the requantization multiply
+(``layers.q_requantize`` semantics, bit-exact), and a clamp to
+``[0, 2^T - 1]`` — and the kernel emits **packed uint8 levels** directly.
+This is the TPU twin of the paper's output unit writing T-bit activations
+straight into the pong buffer: inter-layer HBM traffic drops 4×
+(1 byte/element instead of a 4-byte raw accumulator), and the separate
+bias/requantize/re-encode XLA ops (each a fresh HBM round trip) disappear.
+The epilogue-free int32 path remains for the final logits layer.
+
 Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics) accumulating
-into the output block, which Pallas keeps revisiting in VMEM.
+into a VMEM tile which Pallas keeps revisiting.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["radix_matmul_kernel", "radix_matmul_pallas"]
+__all__ = [
+    "radix_matmul_kernel",
+    "radix_matmul_epilogue_kernel",
+    "radix_matmul_pallas",
+]
+
+
+def _accumulate_tile(x, w, *, num_steps: int, method: str) -> jax.Array:
+    """(bm, bk) x (bk, bn) int32 partial product, bit-serial or single-pass."""
+    if method == "fused":
+        # radix identity: one int MXU pass over packed levels
+        return jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    # paper-faithful bit-serial Horner loop (T static, unrolled)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    for t in range(num_steps):
+        shift = num_steps - 1 - t
+        plane = (x >> shift) & 1               # gate: spike present or not
+        acc = (acc << 1) + jax.lax.dot_general(
+            plane, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    return acc
 
 
 def radix_matmul_kernel(x_ref, w_ref, o_ref, *, num_steps: int, method: str):
@@ -43,27 +78,38 @@ def radix_matmul_kernel(x_ref, w_ref, o_ref, *, num_steps: int, method: str):
 
     x = x_ref[...].astype(jnp.int32)          # (bm, bk) packed levels
     w = w_ref[...].astype(jnp.int32)          # (bk, bn) int weights
+    o_ref[...] += _accumulate_tile(x, w, num_steps=num_steps, method=method)
 
-    if method == "fused":
-        # radix identity: one int MXU pass over packed levels
-        acc = jax.lax.dot_general(
-            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
-    else:
-        # paper-faithful bit-serial Horner loop (T static, unrolled)
-        acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
-        for t in range(num_steps):
-            shift = num_steps - 1 - t
-            plane = (x >> shift) & 1           # gate: spike present or not
-            acc = (acc << 1) + jax.lax.dot_general(
-                plane, w, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
 
-    o_ref[...] += acc
+def radix_matmul_epilogue_kernel(
+    x_ref, w_ref, bias_ref, mult_ref, o_ref, acc_ref,
+    *, num_steps: int, method: str, out_level: int,
+):
+    """Fused-epilogue tile: int32 accumulation lives in the ``acc_ref`` VMEM
+    scratch; on the final K step the output logic (bias + requant multiply +
+    clamp) runs in-register and only the packed uint8 level reaches o_ref."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += _accumulate_tile(x, w, num_steps=num_steps, method=method)
+
+    @pl.when(k_idx == pl.num_programs(2) - 1)
+    def _epilogue():
+        # identical float ops to layers.q_requantize -> bit-exact twin
+        acc = acc_ref[...] + bias_ref[...]            # (bm,bn) + (1,bn)
+        q = jnp.floor(acc.astype(jnp.float32) * mult_ref[...])
+        o_ref[...] = jnp.clip(q, 0, out_level).astype(jnp.uint8)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_steps", "method", "bm", "bk", "bn", "interpret"),
+    static_argnames=("num_steps", "method", "bm", "bk", "bn", "interpret",
+                     "out_steps"),
 )
 def radix_matmul_pallas(
     x_q: jax.Array,
@@ -75,8 +121,19 @@ def radix_matmul_pallas(
     bk: int = 128,
     bn: int = 128,
     interpret: bool = False,
+    bias: Optional[jax.Array] = None,
+    mult: Optional[jax.Array] = None,
+    out_steps: Optional[int] = None,
 ) -> jax.Array:
-    """(M, K) uint8 levels @ (K, N) int8 -> (M, N) int32.
+    """(M, K) uint8 levels @ (K, N) int8 -> (M, N).
+
+    Without ``mult``: raw int32 accumulators (the logits-layer path).
+    With ``mult`` (f32 ``(1, N)``) and optional ``bias`` (int32 ``(1, N)``):
+    the fused output-logic epilogue runs in-kernel and the result is packed
+    uint8 levels in ``[0, 2^out_steps - 1]``.  ``num_steps`` governs the
+    bit-serial input extraction; ``out_steps`` (default ``num_steps``) the
+    output clamp — they differ when inputs carry extra integer bits, e.g.
+    after a sum-pool whose division is folded into ``mult``.
 
     Shapes must be multiples of the block sizes (ops.py pads).
     Block sizes default to MXU-aligned 128s; VMEM footprint per step is
@@ -89,16 +146,38 @@ def radix_matmul_pallas(
         f"shapes {(m, k, n)} not multiples of blocks {(bm, bk, bn)}")
 
     grid = (m // bm, n // bn, k // bk)
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+
+    if mult is None:
+        kernel = functools.partial(
+            radix_matmul_kernel, num_steps=num_steps, method=method)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+            interpret=interpret,
+        )(x_q, w_q)
+
+    out_steps = num_steps if out_steps is None else out_steps
+    assert out_steps <= 8, "packed uint8 epilogue requires T <= 8"
+    if bias is None:
+        bias = jnp.zeros((1, n), jnp.int32)
+    assert bias.shape == (1, n) and mult.shape == (1, n), (bias.shape,
+                                                          mult.shape)
+    row_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
     kernel = functools.partial(
-        radix_matmul_kernel, num_steps=num_steps, method=method)
+        radix_matmul_epilogue_kernel, num_steps=num_steps, method=method,
+        out_level=(1 << out_steps) - 1)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        in_specs=[x_spec, w_spec, row_spec, row_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint8),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q)
+    )(x_q, w_q, bias, mult.astype(jnp.float32))

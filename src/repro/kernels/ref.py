@@ -10,7 +10,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["radix_matmul_ref", "radix_conv2d_ref", "spike_encode_ref"]
+__all__ = [
+    "radix_matmul_ref",
+    "radix_conv2d_ref",
+    "spike_encode_ref",
+    "requantize_ref",
+    "radix_matmul_epilogue_ref",
+    "radix_conv2d_epilogue_ref",
+]
 
 
 def radix_matmul_ref(
@@ -61,3 +68,47 @@ def spike_encode_ref(x: jax.Array, num_steps: int, scale: float) -> jax.Array:
     lvl = (1 << num_steps) - 1
     q = jnp.floor(x / scale * (lvl + 1))
     return jnp.clip(q, 0, lvl).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue oracles: the paper's output logic (bias + requantize
+# multiplier + clamp) spelled out on top of the raw accumulator oracles.
+# Float ops match core/layers.q_requantize exactly -> kernels must be
+# bit-exact against the (oracle + q_requantize) composition.
+# ---------------------------------------------------------------------------
+
+
+def requantize_ref(acc: jax.Array, num_steps: int, mult) -> jax.Array:
+    """Output-logic requantizer: ``clip(floor(acc * mult), 0, 2^T - 1)``."""
+    lvl = (1 << num_steps) - 1
+    q = jnp.floor(acc.astype(jnp.float32) * jnp.asarray(mult, jnp.float32))
+    return jnp.clip(q, 0, lvl).astype(jnp.uint8)
+
+
+def radix_matmul_epilogue_ref(
+    x_q: jax.Array, w_q: jax.Array, bias: jax.Array, mult,
+    num_steps: int,
+) -> jax.Array:
+    """Bit-serial matmul + fused output logic -> packed uint8 levels."""
+    acc = radix_matmul_ref(x_q, w_q, num_steps) + bias.astype(jnp.int32)
+    return requantize_ref(acc, num_steps, mult)
+
+
+def radix_conv2d_epilogue_ref(
+    x_q: jax.Array, w_q: jax.Array, bias: jax.Array, mult,
+    num_steps: int, *, stride: int = 1,
+) -> jax.Array:
+    """Bit-serial strided VALID conv + fused output logic -> uint8 levels."""
+    x = x_q.astype(jnp.int32)
+    acc = None
+    for t in range(num_steps):
+        shift = num_steps - 1 - t
+        plane = ((x >> shift) & 1).astype(jnp.int32)
+        part = jax.lax.conv_general_dilated(
+            plane, w_q.astype(jnp.int32),
+            window_strides=(stride, stride), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32,
+        )
+        acc = part if acc is None else (acc << 1) + part
+    return requantize_ref(acc + bias.astype(jnp.int32), num_steps, mult)

@@ -7,7 +7,7 @@ placeholder devices (launch/dryrun.py lines 1-2).
 
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
@@ -19,16 +19,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 4, pod: int = 0):
     """Small CPU mesh for tests (requires xla_force_host_platform_device_count)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

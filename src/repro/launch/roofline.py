@@ -26,6 +26,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro import compat
 from repro.launch import hlo_analysis
 
 __all__ = ["HW", "RooflineReport", "roofline", "format_row"]
@@ -84,7 +85,7 @@ class RooflineReport:
 def roofline(arch: str, cell: str, mesh_name: str, chips: int,
              compiled, model_flops: float, hw: HW = HW()) -> RooflineReport:
     cost = hlo_analysis.analyze(compiled.as_text())
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled) or {}
     mem = compiled.memory_analysis()
     mem_d = None
     if mem is not None:

@@ -40,8 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.lm.config import ArchConfig, MoEConfig
 
 __all__ = ["moe_ffn", "router_aux_loss", "pick_impl", "dp_axes"]

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh
 from repro.data.pipeline import Prefetcher, ShardedLoader
 from repro.data.synthetic import SyntheticVision, synthetic_tokens
 from repro.train import optim as optim_lib
@@ -35,8 +36,7 @@ def test_synthetic_tokens_deterministic_structured():
 
 
 def test_sharded_loader_and_prefetcher():
-    mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((jax.device_count(),), ("data",))
     loader = ShardedLoader(
         lambda s: (synthetic_tokens(s, 8, 16, 128),), mesh, [P("data", None)])
     seen = []

@@ -1,0 +1,191 @@
+"""Fused-epilogue kernels + compiled engine plans vs the jnp twins.
+
+Two contracts:
+
+1. The in-kernel output logic (bias + requantize multiplier + clamp,
+   emitting packed uint8) is bit-exact against the ``ref.py`` oracle +
+   ``layers.q_requantize`` composition across T, stride, padding, method —
+   for both the matmul and the conv kernel.
+2. ``engine.compile_plan`` (whole-network fused-kernel closure, activations
+   packed uint8 end-to-end) equals ``engine.run(backend="jnp")`` exactly on
+   the paper's LeNet-5 and Fang CNN-2 configurations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conversion, engine, layers
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _levels(shape, T):
+    return jnp.asarray(RNG.integers(0, 2 ** T, size=shape), jnp.uint8)
+
+
+def _weights(shape, bits=3):
+    q = 2 ** (bits - 1) - 1
+    return jnp.asarray(RNG.integers(-q, q + 1, size=shape), jnp.int8)
+
+
+def _bias(n):
+    return jnp.asarray(RNG.integers(-60, 60, size=(n,)), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level bit-exactness sweeps.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["bitserial", "fused"])
+@pytest.mark.parametrize("T", [1, 2, 4, 8])
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (13, 27, 10), (128, 128, 128)])
+def test_matmul_epilogue_vs_requantize(method, T, m, k, n):
+    x = _levels((m, k), T)
+    w = _weights((k, n))
+    b = _bias(n)
+    mult = jnp.float32(0.029)
+    got = ops.radix_matmul(x, w, b, T, method=method, mult=mult)
+    want = layers.q_requantize(ref.radix_matmul_ref(x, w, T) + b, T, mult)
+    assert got.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("method", ["bitserial", "fused"])
+@pytest.mark.parametrize("T", [1, 2, 4, 8])
+def test_matmul_epilogue_per_channel_mult(method, T):
+    x = _levels((9, 33), T)
+    w = _weights((33, 12))
+    b = _bias(12)
+    mult = jnp.asarray(RNG.uniform(0.005, 0.08, (12,)), jnp.float32)
+    got = ops.radix_matmul(x, w, b, T, method=method, mult=mult)
+    want = layers.q_requantize(ref.radix_matmul_ref(x, w, T) + b, T, mult)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul_epilogue_oracle_agrees_with_composition():
+    x = _levels((6, 16), 4)
+    w = _weights((16, 8))
+    b = _bias(8)
+    a = ref.radix_matmul_epilogue_ref(x, w, b, 0.03, 4)
+    bq = layers.q_requantize(ref.radix_matmul_ref(x, w, 4) + b, 4, 0.03)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(bq))
+
+
+@pytest.mark.parametrize("method", ["bitserial", "fused"])
+@pytest.mark.parametrize("T", [1, 2, 4, 8])
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["VALID", "SAME"])
+def test_conv_epilogue_sweep(method, T, stride, padding):
+    x = _levels((2, 9, 9, 3), T)
+    w = _weights((3, 3, 3, 5))
+    b = _bias(5)
+    mult = jnp.asarray(RNG.uniform(0.005, 0.06, (5,)), jnp.float32)
+    got = ops.radix_conv2d(x, w, b, T, stride=stride, padding=padding,
+                           method=method, mult=mult)
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32) + b
+    want = layers.q_requantize(acc, T, mult)
+    assert got.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("method", ["bitserial", "fused"])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_epilogue_vs_ref_oracle(method, stride):
+    x = _levels((1, 8, 10, 2), 4)
+    w = _weights((3, 3, 2, 6))
+    b = _bias(6)
+    got = ops.radix_conv2d(x, w, b, 4, stride=stride, method=method,
+                           mult=0.02)
+    want = ref.radix_conv2d_epilogue_ref(x, w, b, 0.02, 4, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("hw", [8, 9])  # even dim exercises asymmetric pads
+def test_strided_same_conv_matches_xla(hw):
+    """In-kernel stride subsampling must land on XLA's SAME grid exactly
+    (the old subsample-after-the-fact path was off by one on even dims)."""
+    x = _levels((2, hw, hw, 3), 4)
+    w = _weights((3, 3, 3, 5))
+    got = ops.radix_conv2d(x, w, None, 4, stride=2, padding="SAME")
+    want = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32), (2, 2), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: compiled plan == jnp engine on the paper's networks.
+# ---------------------------------------------------------------------------
+
+
+def _converted(maker, pool_mode, T, batch=4, width_mult=0.25):
+    from repro.models import fang, lenet  # noqa: F401 (maker passed in)
+    static, params, input_hw = maker.make(pool_mode=pool_mode,
+                                          width_mult=width_mult)
+    x = jnp.asarray(RNG.uniform(0, 1, (batch,) + input_hw), jnp.float32)
+    qnet = conversion.convert(static, params, x, num_steps=T, weight_bits=3)
+    return qnet, x
+
+
+@pytest.mark.parametrize("pool_mode", ["or", "avg", "max"])
+@pytest.mark.parametrize("T", [3, 4])
+def test_compile_plan_lenet_matches_jnp(pool_mode, T):
+    from repro.models import lenet
+    qnet, x = _converted(lenet, pool_mode, T)
+    ref_logits = engine.run(qnet, x, mode="packed", backend="jnp")
+    for method in ("fused", "bitserial"):
+        plan = engine.compile_plan(qnet, x.shape, method=method)
+        np.testing.assert_array_equal(np.asarray(plan(x)),
+                                      np.asarray(ref_logits))
+
+
+@pytest.mark.parametrize("pool_mode", ["or", "avg"])
+def test_compile_plan_fang_matches_jnp(pool_mode):
+    from repro.models import fang
+    qnet, x = _converted(fang, pool_mode, 4)
+    ref_logits = engine.run(qnet, x, mode="packed", backend="jnp")
+    plan = engine.compile_plan(qnet, x.shape)
+    np.testing.assert_array_equal(np.asarray(plan(x)),
+                                  np.asarray(ref_logits))
+
+
+def test_engine_run_kernels_backend_routes_through_plan():
+    from repro.models import lenet
+    qnet, x = _converted(lenet, "or", 4)
+    a = engine.run(qnet, x, mode="packed", backend="kernels")
+    b = engine.run(qnet, x, mode="packed", backend="jnp")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # same (qnet, shape, method) hits the plan cache
+    k = (id(qnet), x.shape, "fused")
+    assert k in engine._PLAN_CACHE
+    plan = engine._PLAN_CACHE[k][1]
+    assert engine._cached_plan(qnet, x.shape, "fused") is plan
+
+
+def test_plan_avg_pool_wide_carry_T8():
+    """T=8 + sum pool: carry exceeds a byte -> plan falls back to int32 for
+    that edge while staying bit-exact."""
+    from repro.models import fang
+    qnet, x = _converted(fang, "avg", 8, batch=2)
+    ref_logits = engine.run(qnet, x, mode="packed", backend="jnp")
+    plan = engine.compile_plan(qnet, x.shape)
+    np.testing.assert_array_equal(np.asarray(plan(x)),
+                                  np.asarray(ref_logits))
+    assert layers.sum_pool_bits(8, 2) > 8
+
+
+def test_plan_activation_traffic_model():
+    from repro.models import lenet
+    qnet, x = _converted(lenet, "or", 4, batch=1)
+    traffic = engine.compile_plan(qnet, x.shape).activation_traffic()
+    # every inter-layer tensor is packed uint8 except the final logits acc
+    dtypes = [l["out_dtype"] for l in traffic["layers"]]
+    assert dtypes[-1] == "int32" and set(dtypes[:-1]) == {"uint8"}
+    assert traffic["traffic_ratio"] >= 3.0

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.launch import hlo_analysis as HA
 
 
@@ -24,7 +25,7 @@ def test_scan_trip_count_multiplies_flops():
     assert N * one <= cost.flops <= N * one * 1.2, (cost.flops, N * one)
     assert any(t == N for _, t in cost.loops), cost.loops
     # raw cost_analysis counts the body once — the analyzer must exceed it
-    raw = c.cost_analysis()["flops"]
+    raw = compat.cost_analysis(c)["flops"]
     assert cost.flops > 3 * raw
 
 
@@ -47,14 +48,13 @@ def test_nested_scan_multiplier():
 
 @pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 devices")
 def test_collective_bytes_ring_model():
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("model",))
 
     def f(x):
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(mesh, P(None, None))).sum()
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         c = jax.jit(f, in_shardings=NamedSharding(mesh, P("model", None))) \
             .lower(jax.ShapeDtypeStruct((64, 32), jnp.float32)).compile()
     cost = HA.analyze(c.as_text())

@@ -2,13 +2,11 @@
 
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.configs import get_config
 from repro.core import encoding

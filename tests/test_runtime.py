@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.runtime.restart import FaultInjected, RestartableRun
 from repro.runtime.straggler import MitigationPolicy, StragglerMonitor
 from repro.train import checkpoint as ckpt_lib
@@ -93,10 +94,8 @@ def test_restart_bit_identical(tmp_path):
 @pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 devices")
 def test_elastic_reshard_across_meshes(tmp_path):
     """Save sharded on a 2x4 mesh, restore onto 4x2 and 1x8 — identical."""
-    mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = compat.make_mesh((2, 4), ("data", "model"))
+    mesh_b = compat.make_mesh((4, 2), ("data", "model"))
     w = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
     wa = jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))
     ckpt_lib.save(str(tmp_path), 1, {"w": wa})
@@ -209,7 +208,7 @@ def test_elastic_training_continues_across_topologies(tmp_path):
 
     # reference: 4 steps on mesh A only
     mesh_a = make_test_mesh(data=2, model=4)
-    with jax.set_mesh(mesh_a):
+    with compat.set_mesh(mesh_a):
         st = place(state0, mesh_a)
         step_a = jax.jit(make_step(mesh_a))
         for _ in range(4):
@@ -217,14 +216,14 @@ def test_elastic_training_continues_across_topologies(tmp_path):
     ref_loss = float(m_ref["loss"])
 
     # elastic: 2 steps on A -> checkpoint -> restore on B (4x2) -> 2 steps
-    with jax.set_mesh(mesh_a):
+    with compat.set_mesh(mesh_a):
         st = place(state0, mesh_a)
         for _ in range(2):
             st, _ = step_a(st, batch)
     ckpt_lib.save(str(tmp_path), 2, st)
 
     mesh_b = make_test_mesh(data=4, model=2)
-    with jax.set_mesh(mesh_b):
+    with compat.set_mesh(mesh_b):
         st_b = place(jax.tree.map(np.asarray, st), mesh_b)  # structure donor
         restored, _ = ckpt_lib.restore(str(tmp_path), 2, st_b)
         step_b = jax.jit(make_step(mesh_b))

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import LM_ARCHS, get_config
@@ -20,8 +21,7 @@ pytestmark = pytest.mark.skipif(
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 4), ("data", "model"))
 
 
 def _axis_size(mesh, e):
@@ -78,7 +78,7 @@ def test_sharded_train_matches_single_device(arch, mesh):
                   "opt": SH.opt_state_specs(
                       pspecs, jax.eval_shape(lambda: state["opt"]), mesh),
                   "step": P()}
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             st = jax.device_put(state, SH.shardings(sspecs, mesh))
             jstep = jax.jit(step, in_shardings=(SH.shardings(sspecs, mesh),
                                                 SH.shardings(SH.batch_specs(
@@ -108,7 +108,7 @@ def test_sharded_decode_matches_single_device(mesh):
                                  max_len=16)
     lg_1, _ = M.decode_step(params, caches_1, tok[:, -1:], jnp.int32(8),
                             cfg, None)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         last_m, caches_m = jax.jit(
             lambda p, b: M.prefill(p, b, cfg, mesh, max_len=16))(
                 params, {"tokens": tok})
