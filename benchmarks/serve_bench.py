@@ -1,0 +1,126 @@
+"""Batched serving benchmark: bucket-ladder latency + mixed-size streams.
+
+Two measurements per architecture (lenet5 / fang_cnn / vgg11-smoke), both
+over the fused-epilogue kernel plans (DESIGN.md §3):
+
+* **per-bucket steady state** — the pre-compiled plan for each batch bucket
+  timed directly: p50/p95 latency per call and images/sec.  This is the
+  throughput ceiling of the ladder (no queue wait, no padding waste).
+* **mixed-size request stream** — random request sizes through the
+  micro-batching queue.  Requests pad to buckets; the cache stats prove the
+  steady state never recompiles (the serving-stack contract the tests pin
+  down in tests/test_serve.py).
+
+On this CPU container the Pallas kernels run in interpret mode, so absolute
+numbers are not TPU performance; the bench tracks the *serving* overheads
+(bucketing waste, queue latency, dispatch) which are real on any backend.
+Results go to stdout as CSV and to ``BENCH_serve.json`` at the repo root so
+the trajectory is machine-readable across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import engine
+from repro.launch import serve_cnn
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+
+ARCHS = ("lenet5", "fang_cnn", "vgg11")
+
+
+def _bucket_rows(server, arch, buckets, iters, rng, log):
+    """Steady-state per-bucket latency: direct plan calls, no queue."""
+    rows = []
+    for b in buckets:
+        plan = server.cache.plan_for(server.qnet, b, server.item_shape)
+        x = np.asarray(rng.uniform(0, 1, (b,) + server.item_shape),
+                       np.float32)
+        jax.block_until_ready(plan(x))          # warm the executable
+        lat = []
+        for _ in range(iters):
+            t0 = time.monotonic()
+            jax.block_until_ready(plan(x))
+            lat.append((time.monotonic() - t0) * 1e3)
+        p50, p95 = serve_cnn._percentiles(lat)
+        ips = b / (np.median(lat) / 1e3)
+        log(f"serve,{arch},bucket={b},p50={p50:.1f}ms,p95={p95:.1f}ms,"
+            f"{ips:.1f}img/s,dp={plan.data_parallel}")
+        rows.append({"bucket": b, "p50_ms": round(p50, 2),
+                     "p95_ms": round(p95, 2), "images_per_s": round(ips, 1),
+                     "data_parallel": plan.data_parallel})
+    return rows
+
+
+def _stream_row(server, arch, n_requests, max_request, rng, log):
+    """Mixed-size stream through the micro-batch queue."""
+    compiles_before = server.cache.stats.compiles
+    queue = serve_cnn.MicroBatchQueue(server, timeout_s=0.002)
+    sizes = rng.integers(1, max_request + 1, n_requests)
+    t0 = time.monotonic()
+    tickets = serve_cnn.run_request_stream(queue, sizes, seed=int(rng.integers(1 << 30)))
+    wall = time.monotonic() - t0
+    lat = [t.latency_s * 1e3 for t in tickets]
+    p50, p95 = serve_cnn._percentiles(lat)
+    images = int(sum(t.size for t in tickets))
+    stats = server.cache.stats
+    recompiles = stats.compiles - compiles_before
+    log(f"serve,{arch},stream,n={n_requests},p50={p50:.1f}ms,"
+        f"p95={p95:.1f}ms,{images / wall:.1f}img/s,"
+        f"recompiles={recompiles},padded_rows={stats.padded_rows},"
+        f"flushes={queue.flushes}")
+    return {"requests": n_requests, "images": images,
+            "p50_ms": round(p50, 2), "p95_ms": round(p95, 2),
+            "images_per_s": round(images / wall, 1),
+            "steady_state_recompiles": recompiles,
+            "padded_rows": stats.padded_rows, "flushes": queue.flushes}
+
+
+def run(log=print, archs=ARCHS, buckets=(1, 4, 8), iters=5,
+        n_requests=24, max_request=6, T=4, pool_mode="or", seed=0,
+        json_path=_JSON_PATH):
+    rng = np.random.default_rng(seed)
+    per_arch = {}
+    for arch in archs:
+        qnet, item = serve_cnn.build_qnet(arch, smoke=True,
+                                          pool_mode=pool_mode, num_steps=T,
+                                          seed=seed)
+        server = serve_cnn.CNNServer(qnet, item, buckets=buckets)
+        server.warmup()
+        per_arch[arch] = {
+            "item_shape": list(item),
+            "buckets": _bucket_rows(server, arch, buckets, iters, rng, log),
+            "stream": _stream_row(server, arch, n_requests, max_request,
+                                  rng, log),
+            "cache_stats": server.cache.stats.as_dict(),
+        }
+
+    payload = {
+        "bench": "serve",
+        "config": {"buckets": list(buckets), "iters": iters,
+                   "n_requests": n_requests, "max_request": max_request,
+                   "T": T, "pool_mode": pool_mode,
+                   "backend": jax.default_backend(),
+                   "devices": len(jax.devices()),
+                   "default_bucket_ladder": list(engine.DEFAULT_BUCKETS)},
+        "archs": per_arch,
+    }
+    if json_path is not None:
+        pathlib.Path(json_path).write_text(json.dumps(payload, indent=2)
+                                           + "\n")
+        log(f"serve,json={json_path}")
+    return payload
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

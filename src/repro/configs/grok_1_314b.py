@@ -2,7 +2,7 @@
 64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072.
 
 num_experts (8) < model-axis size (16), so the MoE runs in 'tp' dispatch
-(expert d_ff tensor-parallel) — see lm/moe.py and DESIGN.md §5.
+(expert d_ff tensor-parallel) — see lm/moe.py and DESIGN.md §6.
 """
 
 import dataclasses

@@ -5,7 +5,7 @@ positional embeddings, LayerNorm, GELU MLP.
 The conv frontend is a STUB per the assignment: input_specs() provides 1500
 precomputed frame embeddings (B, 1500, d) for the encoder.  Decoder seq
 lengths beyond Whisper's native 448 are config-driven extrapolation
-(DESIGN.md §4)."""
+(DESIGN.md §5)."""
 
 import dataclasses
 
@@ -25,7 +25,7 @@ ARCH = ArchConfig(
     norm="layernorm",
     pos_embed="learned",
     learned_pos_max=32_768,     # Whisper caps at 448; extrapolated for the
-                                # 32k shape cells (DESIGN.md §4)
+                                # 32k shape cells (DESIGN.md §5)
     encoder_layers=24,
     encoder_ctx=1500,
     tie_embeddings=True,

@@ -33,16 +33,19 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 import weakref
-from typing import Callable, List, Literal, Optional, Tuple
+from typing import Callable, List, Literal, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import conversion, encoding, layers
 
 __all__ = ["run", "compile_plan", "CompiledPlan", "PlanLayerInfo",
+           "PlanCache", "PlanCacheStats", "DEFAULT_BUCKETS",
            "MemoryReport", "memory_report"]
 
 
@@ -61,16 +64,40 @@ def run(
     *,
     mode: Literal["packed", "snn"] = "packed",
     backend: Literal["jnp", "kernels"] = "jnp",
-    method: Literal["bitserial", "fused"] = "fused",
+    method: Optional[Literal["bitserial", "fused"]] = None,
 ) -> jax.Array:
     """Run the converted net on float input ``x`` (NHWC); returns float logits.
 
     ``backend="kernels"`` (packed mode) routes through a cached
     :func:`compile_plan` — the whole layer sequence as one jitted closure of
-    fused-epilogue Pallas kernels; ``method`` picks the in-kernel dataflow.
+    fused-epilogue Pallas kernels; ``method`` picks the in-kernel dataflow
+    (default "fused") and is meaningful for that backend only.
+
+    Invalid combinations fail loudly instead of silently taking a slower
+    path: ``mode="snn"`` is the paper-faithful spike-plane oracle and only
+    exists on the ``jnp`` backend, and ``method`` without
+    ``backend="kernels"`` has nothing to select.
     """
-    if backend == "kernels" and mode == "packed":
-        return _cached_plan(qnet, x.shape, method)(x)
+    if mode not in ("packed", "snn"):
+        raise ValueError(f"mode must be 'packed' or 'snn', got {mode!r}")
+    if backend not in ("jnp", "kernels"):
+        raise ValueError(
+            f"backend must be 'jnp' or 'kernels', got {backend!r}")
+    if method not in (None, "bitserial", "fused"):
+        raise ValueError(
+            f"method must be 'bitserial' or 'fused', got {method!r}")
+    if backend == "kernels":
+        if mode == "snn":
+            raise ValueError(
+                "backend='kernels' executes the packed-level path only; "
+                "mode='snn' (spike planes) is the jnp oracle — run it with "
+                "backend='jnp'")
+        return _cached_plan(qnet, x.shape, method or "fused")(x)
+    if method is not None:
+        warnings.warn(
+            f"method={method!r} selects the in-kernel dataflow and is "
+            "ignored with backend='jnp'; pass backend='kernels' to use it",
+            UserWarning, stacklevel=2)
 
     T = qnet.num_steps
     q = encoding.quantize(x, T, qnet.input_scale)
@@ -173,6 +200,7 @@ class CompiledPlan:
     layers: List[PlanLayerInfo]
     _fn: Callable = dataclasses.field(repr=False)
     _params: list = dataclasses.field(repr=False)
+    data_parallel: int = 1         # batch shards (shard_map over devices)
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return self._fn(self._params, x)
@@ -194,6 +222,7 @@ def compile_plan(
     input_shape: Tuple[int, ...],
     *,
     method: Literal["bitserial", "fused"] = "fused",
+    data_parallel: int = 1,
 ) -> CompiledPlan:
     """Compile ``qnet`` into a single jitted fused-epilogue kernel pipeline.
 
@@ -216,7 +245,17 @@ def compile_plan(
     levels (1 byte/element — the pong buffer's T-bit format) except where a
     sum-pool carry exceeds 8 bits; only the final logits layer emits a raw
     int32 accumulator.
+
+    ``data_parallel=k`` (k > 1) compiles the plan for a per-device batch of
+    ``input_shape[0] / k`` and wraps it in a ``shard_map`` over the batch
+    axis (weights replicated, activations batch-sharded) — the serving
+    stack's scale-out lever (DESIGN.md §3).  Bit-exact equal to the
+    single-device plan.
     """
+    if data_parallel < 1:
+        raise ValueError(f"data_parallel must be >= 1, got {data_parallel}")
+    if data_parallel > 1:
+        return _data_parallel_plan(qnet, input_shape, method, data_parallel)
     from repro.kernels import ops as kops          # deferred: optional path
     from repro.kernels.radix_conv import radix_conv2d_pallas
     from repro.kernels.radix_matmul import radix_matmul_pallas
@@ -432,18 +471,222 @@ def compile_plan(
 _PLAN_CACHE: dict = {}
 
 
-def _cached_plan(qnet, input_shape, method) -> CompiledPlan:
-    key = (id(qnet), tuple(input_shape), method)
-    hit = _PLAN_CACHE.get(key)
+def _weakref_cache_get(cache: dict, key, qnet) -> Optional[CompiledPlan]:
+    """Live-entry lookup: the id(qnet) in ``key`` may be recycled, so a hit
+    only counts if the weakref still resolves to this exact net."""
+    hit = cache.get(key)
     if hit is not None and hit[0]() is qnet:
         return hit[1]
-    # drop entries whose net died (their ids may be recycled, and the plans
-    # pin padded weights + jitted executables)
-    for stale in [k for k, (r, _) in _PLAN_CACHE.items() if r() is None]:
-        del _PLAN_CACHE[stale]
+    return None
+
+
+def _weakref_cache_prune(cache: dict) -> int:
+    """Drop entries whose net died (their plans pin padded weights +
+    jitted executables); returns the number dropped."""
+    stale = [k for k, (r, _) in cache.items() if r() is None]
+    for k in stale:
+        del cache[k]
+    return len(stale)
+
+
+def _cached_plan(qnet, input_shape, method) -> CompiledPlan:
+    key = (id(qnet), tuple(input_shape), method)
+    plan = _weakref_cache_get(_PLAN_CACHE, key, qnet)
+    if plan is not None:
+        return plan
+    _weakref_cache_prune(_PLAN_CACHE)
     plan = compile_plan(qnet, input_shape, method=method)
     _PLAN_CACHE[key] = (weakref.ref(qnet), plan)
     return plan
+
+
+def _data_parallel_plan(qnet, input_shape, method, data_parallel):
+    """shard_map a per-device plan over the batch axis (DESIGN.md §3)."""
+    from jax.sharding import PartitionSpec as P
+
+    batch = int(input_shape[0])
+    ndev = len(jax.devices())
+    if batch % data_parallel:
+        raise ValueError(
+            f"batch {batch} not divisible by data_parallel={data_parallel}")
+    if data_parallel > ndev:
+        raise ValueError(
+            f"data_parallel={data_parallel} exceeds {ndev} visible devices")
+    inner = compile_plan(
+        qnet, (batch // data_parallel,) + tuple(input_shape[1:]),
+        method=method)
+    mesh = compat.make_mesh((data_parallel,), ("batch",))
+    # weights replicated, input/output sharded along batch; no collectives
+    # cross shards, so replication checking is moot (and trips over
+    # pallas_call on some jax versions) -> disabled.
+    fn = compat.shard_map(inner._fn, mesh=mesh,
+                          in_specs=(P(), P("batch")), out_specs=P("batch"),
+                          check_vma=False)
+    infos = [dataclasses.replace(
+        l,
+        out_shape=(l.out_shape[0] * data_parallel,) + l.out_shape[1:],
+        act_write_bytes=l.act_write_bytes * data_parallel,
+        act_write_bytes_int32=l.act_write_bytes_int32 * data_parallel,
+    ) for l in inner.layers]
+    return CompiledPlan(
+        input_shape=tuple(input_shape),
+        num_steps=inner.num_steps,
+        method=method,
+        layers=infos,
+        _fn=jax.jit(fn),
+        _params=inner._params,
+        data_parallel=data_parallel,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch-bucketing plan cache — the serving hot path (DESIGN.md §3).
+# ---------------------------------------------------------------------------
+
+
+DEFAULT_BUCKETS: Tuple[int, ...] = (1, 8, 32, 128)
+
+
+@dataclasses.dataclass
+class PlanCacheStats:
+    """Counters proving steady-state serving never recompiles."""
+
+    hits: int = 0            # plan served from cache
+    compiles: int = 0        # compile_plan invocations (cache misses)
+    pruned: int = 0          # entries dropped after their net was GC'd
+    executions: int = 0      # plan calls (chunks count individually)
+    padded_rows: int = 0     # bucket-padding rows executed and sliced off
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanCache:
+    """Batch-bucketing :func:`compile_plan` cache.
+
+    A serving deployment sees arbitrary request batch sizes; compiling one
+    plan per size would make every novel size a multi-second stall.  The
+    cache instead pre-compiles plans for a fixed ascending **bucket ladder**
+    (paper-twin reading: the controller's program memory holds a few batch
+    programs, not one per request).  A request of ``n`` images
+
+    * pads up to the smallest bucket ``>= n`` (zero rows — sliced off after
+      the call, and junk lanes never escape: the plan's final slice keeps
+      logits rows ``[:bucket]`` and the pad rows are discarded here),
+    * or, when ``n`` exceeds the top bucket, chunks into top-bucket pieces
+      plus one bucketed tail.
+
+    Plans are keyed by (net identity, bucket, item shape, method), hold the
+    net only via ``weakref`` (entries die with the ``QuantizedNet``), and
+    ``data_parallel`` shards each bucket over the visible devices when it
+    divides evenly (``gcd(bucket, n_devices)`` shards; single-device
+    buckets — e.g. bucket 1 — fall back transparently).
+
+    ``stats`` counts hits/compiles/executions/padding so tests and the
+    serving loop can assert zero steady-state recompiles.
+    """
+
+    def __init__(
+        self,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        *,
+        method: Literal["bitserial", "fused"] = "fused",
+        data_parallel: Optional[int] = None,
+    ):
+        bs = tuple(sorted({int(b) for b in buckets}))
+        if not bs or bs[0] < 1:
+            raise ValueError(f"bucket ladder must be positive, got {buckets}")
+        if data_parallel is not None and data_parallel < 1:
+            raise ValueError(
+                f"data_parallel must be >= 1 (or None for auto), got "
+                f"{data_parallel}")
+        self.buckets = bs
+        self.method = method
+        self.data_parallel = data_parallel   # None -> auto (gcd with devices)
+        self.stats = PlanCacheStats()
+        self._plans: dict = {}   # key -> (weakref(qnet), CompiledPlan)
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket >= n (top bucket for oversize chunk tails)."""
+        if n < 1:
+            raise ValueError(f"batch size must be >= 1, got {n}")
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def prune(self) -> int:
+        """Drop entries whose ``QuantizedNet`` was garbage-collected.  Runs
+        automatically on every cache miss; returns the number dropped."""
+        n = _weakref_cache_prune(self._plans)
+        self.stats.pruned += n
+        return n
+
+    def _shards_for(self, bucket: int) -> int:
+        avail = len(jax.devices())
+        want = avail if self.data_parallel is None else min(
+            self.data_parallel, avail)
+        return math.gcd(bucket, want)
+
+    def plan_for(self, qnet: conversion.QuantizedNet, bucket: int,
+                 item_shape: Tuple[int, ...]) -> CompiledPlan:
+        """Cached plan for one bucket (compiles on first use)."""
+        key = (id(qnet), int(bucket), tuple(item_shape), self.method)
+        plan = _weakref_cache_get(self._plans, key, qnet)
+        if plan is not None:
+            self.stats.hits += 1
+            return plan
+        self.prune()
+        plan = compile_plan(qnet, (int(bucket),) + tuple(item_shape),
+                            method=self.method,
+                            data_parallel=self._shards_for(int(bucket)))
+        self._plans[key] = (weakref.ref(qnet), plan)
+        self.stats.compiles += 1
+        return plan
+
+    def warmup(self, qnet: conversion.QuantizedNet,
+               item_shape: Tuple[int, ...]) -> List[CompiledPlan]:
+        """Pre-compile the whole ladder so serving never compiles on the
+        hot path.  Each plan is also executed once on zeros: building a
+        plan pads weights and folds epilogues, but the jitted closure
+        itself XLA-compiles on first call — without this, the first
+        request per bucket would still pay the compile stall."""
+        plans = [self.plan_for(qnet, b, item_shape) for b in self.buckets]
+        for b, plan in zip(self.buckets, plans):
+            x0 = jnp.zeros((b,) + tuple(item_shape), jnp.float32)
+            jax.block_until_ready(plan(x0))
+        return plans
+
+    def run(self, qnet: conversion.QuantizedNet, x: jax.Array) -> jax.Array:
+        """Arbitrary-batch inference: pad to the nearest bucket / chunk by
+        the top bucket, slice the logits back to the request size."""
+        n = x.shape[0]
+        item = tuple(x.shape[1:])
+        top = self.buckets[-1]
+        outs = []
+        off = 0
+        while n - off > top:                     # oversize: full top chunks
+            outs.append(self.plan_for(qnet, top, item)(x[off:off + top]))
+            self.stats.executions += 1
+            off += top
+        rem = n - off
+        bucket = self.bucket_for(rem)
+        tail = x[off:]
+        if bucket > rem:
+            tail = jnp.pad(tail, ((0, bucket - rem),) + ((0, 0),) * len(item))
+            self.stats.padded_rows += bucket - rem
+        outs.append(self.plan_for(qnet, bucket, item)(tail)[:rem])
+        self.stats.executions += 1
+        if len(outs) == 1:
+            return outs[0]
+        # chunk logits may carry different shardings (per-bucket
+        # data_parallel differs) -> gather to one device to concatenate
+        dev0 = jax.devices()[0]
+        return jnp.concatenate([jax.device_put(o, dev0) for o in outs],
+                               axis=0)
 
 
 # ---------------------------------------------------------------------------

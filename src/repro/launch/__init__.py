@@ -1,1 +1,6 @@
-"""Launch layer: production mesh, dry-run, roofline, train/serve drivers."""
+"""Launch layer: production mesh, dry-run, roofline, train/serve drivers.
+
+Serving entry points: ``serve`` (LM decode loop, radix KV cache) and
+``serve_cnn`` (batched CNN inference over bucketed compiled plans,
+DESIGN.md §3).
+"""

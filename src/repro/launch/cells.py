@@ -6,7 +6,7 @@ builds the abstract inputs (ShapeDtypeStructs — no allocation), the
 in/out shardings, and the jit-lowered computation for any cell on any mesh.
 
 ``long_500k`` is defined only for the sub-quadratic archs (rwkv6-3b,
-recurrentgemma-2b); pure full-attention archs skip it (DESIGN.md §4) — a
+recurrentgemma-2b); pure full-attention archs skip it (DESIGN.md §5) — a
 524288-token dense KV decode is O(S) per token per layer and the assignment
 directs the skip.  Encoder-decoder whisper runs decode against its decoder
 self-cache + fixed cross-cache.

@@ -1,0 +1,333 @@
+"""Batched SNN/CNN inference serving over compiled fused-kernel plans.
+
+The paper deploys single images on the FPGA; the production twin has to
+survive *traffic*: arbitrary request sizes arriving continuously.  This
+driver stacks three layers (DESIGN.md §3):
+
+1. **Bucketed plan cache** (``engine.PlanCache``): plans pre-compiled for a
+   bucket ladder; requests pad to the nearest bucket, so no request size
+   ever recompiles on the hot path.
+2. **Data-parallel plans**: each bucket's plan is ``shard_map``-ped over
+   the batch axis across visible devices (weights replicated), with
+   transparent single-device fallback.
+3. **Micro-batching queue** (:class:`MicroBatchQueue`): requests collect
+   until the batch is full or the oldest request times out, then flush as
+   one plan call — amortizing dispatch without unbounded latency.
+
+Usage:
+  python -m repro.launch.serve_cnn --arch vgg11 --smoke
+  python -m repro.launch.serve_cnn --arch lenet5 --requests 64 --buckets 1,4,8
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import importlib
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conversion, engine
+
+__all__ = [
+    "ARCHS",
+    "build_qnet",
+    "CNNServer",
+    "MicroBatchQueue",
+    "Ticket",
+    "run_request_stream",
+    "main",
+]
+
+
+# ---------------------------------------------------------------------------
+# Architecture registry (the paper's three CNNs).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    """``make()`` kwargs for the full config and the CPU smoke config.
+
+    ``smoke``/``full`` are either kwargs dicts or the name of a dict
+    attribute on ``module`` (resolved at :func:`build_qnet` time, keeping
+    the registry import-lazy while presets live next to their model)."""
+
+    module: str
+    full: "dict | str" = dataclasses.field(default_factory=dict)
+    smoke: "dict | str" = dataclasses.field(default_factory=dict)
+
+
+ARCHS = {
+    "lenet5": ArchSpec("repro.models.lenet",
+                       smoke={"width_mult": 0.25}),
+    "fang_cnn": ArchSpec("repro.models.fang",
+                         smoke={"width_mult": 0.25}),
+    "vgg11": ArchSpec("repro.models.vgg",
+                      full={"input_hw": (224, 224, 3)},
+                      smoke="SMOKE_KWARGS"),
+}
+
+
+def build_qnet(
+    arch: str,
+    *,
+    smoke: bool = False,
+    pool_mode: str = "or",
+    num_steps: int = 4,
+    weight_bits: int = 3,
+    calib_batch: int = 4,
+    seed: int = 0,
+) -> Tuple[conversion.QuantizedNet, Tuple[int, int, int]]:
+    """(converted net, item shape) for an arch id, synthetic calibration."""
+    spec = ARCHS[arch.replace("-", "_")]
+    maker = importlib.import_module(spec.module)
+    preset = spec.smoke if smoke else spec.full
+    if isinstance(preset, str):
+        preset = getattr(maker, preset)
+    kwargs = dict(preset)
+    static, params, input_hw = maker.make(
+        key=jax.random.PRNGKey(seed), pool_mode=pool_mode, **kwargs)
+    rng = np.random.default_rng(seed)
+    calib = jnp.asarray(rng.uniform(0, 1, (calib_batch,) + tuple(input_hw)),
+                        jnp.float32)
+    qnet = conversion.convert(static, params, calib, num_steps=num_steps,
+                              weight_bits=weight_bits)
+    return qnet, tuple(input_hw)
+
+
+# ---------------------------------------------------------------------------
+# Server: plan cache + request entry point.
+# ---------------------------------------------------------------------------
+
+
+class CNNServer:
+    """One converted net behind a bucketed plan cache."""
+
+    def __init__(
+        self,
+        qnet: conversion.QuantizedNet,
+        item_shape: Tuple[int, ...],
+        *,
+        buckets: Sequence[int] = engine.DEFAULT_BUCKETS,
+        method: str = "fused",
+        data_parallel: Optional[int] = None,
+        cache: Optional[engine.PlanCache] = None,
+    ):
+        self.qnet = qnet
+        self.item_shape = tuple(item_shape)
+        self.cache = cache if cache is not None else engine.PlanCache(
+            buckets, method=method, data_parallel=data_parallel)
+
+    def warmup(self) -> None:
+        """Compile every bucket up front (serving never compiles again)."""
+        self.cache.warmup(self.qnet, self.item_shape)
+
+    def infer(self, x) -> jax.Array:
+        """(n,) + item_shape float images -> (n, classes) float logits."""
+        x = jnp.asarray(x, jnp.float32)
+        if tuple(x.shape[1:]) != self.item_shape:
+            raise ValueError(
+                f"request item shape {tuple(x.shape[1:])} != server's "
+                f"{self.item_shape}")
+        return self.cache.run(self.qnet, x)
+
+
+# ---------------------------------------------------------------------------
+# Micro-batching request queue.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Handle returned by :meth:`MicroBatchQueue.submit`."""
+
+    size: int
+    t_submit: float
+    result: Optional[jax.Array] = None
+    latency_s: Optional[float] = None     # submit -> results materialized
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class MicroBatchQueue:
+    """Collect-until-full-or-timeout micro-batcher in front of a server.
+
+    Requests (single images or small batches) accumulate; the queue flushes
+    as **one** batched ``server.infer`` call when either
+
+    * the pending image count reaches ``max_batch`` (one top-bucket plan
+      call, zero padding waste), or
+    * the oldest pending request has waited ``timeout_s`` (bounded latency
+      under trickle load — the batch pads up to its bucket instead).
+
+    Single-threaded and event-driven: callers drive time via
+    :meth:`submit` / :meth:`poll` (``clock`` injectable, so tests are
+    deterministic).  Latency recorded per ticket spans submit -> logits
+    materialized (device-synchronized), i.e. queue wait + padded-bucket
+    compute — the number a serving SLO cares about.
+    """
+
+    def __init__(
+        self,
+        server: CNNServer,
+        *,
+        max_batch: Optional[int] = None,
+        timeout_s: float = 0.005,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.server = server
+        self.max_batch = int(max_batch or server.cache.buckets[-1])
+        self.timeout_s = float(timeout_s)
+        self.clock = clock
+        self._pending: List[Tuple[np.ndarray, Ticket]] = []
+        self._count = 0
+        self.flushes = 0
+
+    @property
+    def pending_images(self) -> int:
+        return self._count
+
+    def submit(self, x) -> Ticket:
+        """Enqueue one request (item or (n,)+item batch); may flush.
+
+        Shape-validates here, not at flush time: a malformed request must
+        fail its own submit, never poison the co-batched tickets already
+        queued."""
+        x = np.asarray(x, np.float32)
+        if x.ndim == len(self.server.item_shape):
+            x = x[None]
+        if tuple(x.shape[1:]) != self.server.item_shape:
+            raise ValueError(
+                f"request item shape {tuple(x.shape[1:])} != server's "
+                f"{self.server.item_shape}")
+        if x.shape[0] == 0:
+            raise ValueError("empty request (0 images)")
+        ticket = Ticket(size=x.shape[0], t_submit=self.clock())
+        self._pending.append((x, ticket))
+        self._count += x.shape[0]
+        self.poll()
+        return ticket
+
+    def poll(self, now: Optional[float] = None) -> bool:
+        """Flush if full or the oldest request timed out; True if flushed."""
+        if not self._pending:
+            return False
+        now = self.clock() if now is None else now
+        oldest = self._pending[0][1].t_submit
+        if self._count >= self.max_batch or now - oldest >= self.timeout_s:
+            self.flush()
+            return True
+        return False
+
+    def flush(self) -> None:
+        """Run everything pending as one batched call; resolve tickets."""
+        if not self._pending:
+            return
+        pending, self._pending, self._count = self._pending, [], 0
+        batch = np.concatenate([x for x, _ in pending], axis=0)
+        try:
+            logits = self.server.infer(batch)
+            jax.block_until_ready(logits)
+        except Exception:
+            # restore the queue so co-batched tickets are not orphaned by
+            # a transient infer failure (callers may retry the flush)
+            self._pending = pending + self._pending
+            self._count += batch.shape[0]
+            raise
+        done = self.clock()
+        self.flushes += 1
+        off = 0
+        for x, ticket in pending:
+            ticket.result = logits[off:off + x.shape[0]]
+            ticket.latency_s = done - ticket.t_submit
+            off += x.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Request-stream driver (CLI + benchmarks/serve_bench.py).
+# ---------------------------------------------------------------------------
+
+
+def run_request_stream(
+    queue: MicroBatchQueue,
+    sizes: Sequence[int],
+    *,
+    seed: int = 0,
+    drain: bool = True,
+) -> List[Ticket]:
+    """Submit a stream of random requests of the given sizes; returns the
+    resolved tickets (drains the queue at the end)."""
+    rng = np.random.default_rng(seed)
+    item = queue.server.item_shape
+    tickets = [queue.submit(rng.uniform(0, 1, (int(n),) + item)
+                            .astype(np.float32)) for n in sizes]
+    if drain:
+        queue.flush()
+    return tickets
+
+
+def _percentiles(latencies_ms: Sequence[float]) -> Tuple[float, float]:
+    return (float(np.percentile(latencies_ms, 50)),
+            float(np.percentile(latencies_ms, 95)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--pool-mode", default="or", choices=["or", "avg", "max"])
+    ap.add_argument("--num-steps", type=int, default=4)
+    ap.add_argument("--buckets", default="1,8,32",
+                    help="comma-separated batch bucket ladder")
+    ap.add_argument("--method", default="fused",
+                    choices=["fused", "bitserial"])
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-request", type=int, default=8,
+                    help="request sizes drawn uniformly from [1, this]")
+    ap.add_argument("--timeout-ms", type=float, default=2.0)
+    ap.add_argument("--data-parallel", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    qnet, item = build_qnet(args.arch, smoke=args.smoke,
+                            pool_mode=args.pool_mode,
+                            num_steps=args.num_steps, seed=args.seed)
+    server = CNNServer(qnet, item, buckets=buckets, method=args.method,
+                       data_parallel=args.data_parallel)
+    print(f"[serve_cnn] {args.arch} item={item} buckets={buckets} "
+          f"devices={len(jax.devices())}")
+    t0 = time.monotonic()
+    server.warmup()
+    print(f"[serve_cnn] warmed {len(buckets)} bucket plans in "
+          f"{time.monotonic() - t0:.1f}s; "
+          f"compiles={server.cache.stats.compiles}")
+
+    queue = MicroBatchQueue(server, timeout_s=args.timeout_ms / 1e3)
+    rng = np.random.default_rng(args.seed)
+    sizes = rng.integers(1, args.max_request + 1, args.requests)
+    t0 = time.monotonic()
+    tickets = run_request_stream(queue, sizes, seed=args.seed)
+    wall = time.monotonic() - t0
+    lat = [t.latency_s * 1e3 for t in tickets]
+    p50, p95 = _percentiles(lat)
+    images = int(sum(t.size for t in tickets))
+    stats = server.cache.stats
+    print(f"[serve_cnn] {len(tickets)} requests / {images} images in "
+          f"{wall:.2f}s -> {images / wall:.1f} img/s; "
+          f"latency p50={p50:.1f}ms p95={p95:.1f}ms")
+    print(f"[serve_cnn] cache: hits={stats.hits} compiles={stats.compiles} "
+          f"(steady-state recompiles="
+          f"{stats.compiles - len(server.cache.buckets)}) "
+          f"padded_rows={stats.padded_rows} flushes={queue.flushes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -189,7 +189,7 @@ def decode_attention(x: jax.Array, p: dict, cfg: ArchConfig, cache: dict,
     The KV sequence axis is sharded over the 'model' mesh axis at pod scale
     (flash-decoding style sequence parallelism): scores and the probability-
     weighted value sum contract over the sharded axis, and GSPMD inserts the
-    small (B, H, hd) all-reduce — DESIGN.md §5 'SP'.
+    small (B, H, hd) all-reduce — DESIGN.md §6 'SP'.
     """
     from repro.lm import radix as radix_lib
 

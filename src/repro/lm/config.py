@@ -15,7 +15,7 @@ Block pattern
 Every block is followed by its channel-mixing layer (FFN / MoE / RWKV
 channel-mix) per ``ffn`` settings.  Layers are grouped into scan *segments*
 of whole pattern periods (plus a remainder segment), so an 80-layer model
-compiles one scan body, not 80 copies (DESIGN.md §5).
+compiles one scan body, not 80 copies (DESIGN.md §6).
 """
 
 from __future__ import annotations
@@ -64,7 +64,7 @@ class ArchConfig:
     rope_theta: float = 10_000.0
     pos_embed: str = "rope"        # rope | learned | none (rwkv)
     learned_pos_max: int = 8192    # learned-pos table size (whisper: 32k
-                                   # extrapolated per DESIGN.md §4)
+                                   # extrapolated per DESIGN.md §5)
     mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
     tie_embeddings: bool = False
     embed_scale: bool = False      # gemma: scale embeddings by sqrt(d)

@@ -20,6 +20,13 @@ CONV_CHANNELS = (64, 128, 256, 256, 512, 512, 512, 512)
 # pool after conv indices (VGG-11 'A'):
 POOL_AFTER = (0, 1, 3, 5, 7)
 
+# CPU smoke preset (serving stack + kernel-path tests): CIFAR-shaped input;
+# width 0.1 deliberately yields non-8-aligned channel counts
+# (6, 12, 25, 51, ...) so the compiled plan's channel-padding carry is
+# exercised across all 8 convs, 5 pools and the flatten boundary.
+SMOKE_KWARGS = {"input_hw": (32, 32, 3), "width_mult": 0.1,
+                "num_classes": 10}
+
 
 def static(pool_mode: str = "avg", width_mult: float = 1.0):
     layers = []

@@ -6,7 +6,7 @@ with ``lax.ppermute`` boundary transfers (the collective_permute schedule a
 TPU pod runs between pods), and the classic GPipe bubble of (P-1) ticks
 shows up explicitly in the tick loop.
 
-This is the optional PP mode of DESIGN.md §5: the default multi-pod layout
+This is the optional PP mode of DESIGN.md §6: the default multi-pod layout
 uses the pod axis for data parallelism, but the launcher exposes
 ``--pipeline`` and tests exercise this executor on small CPU meshes against
 the sequential reference (exact equality).

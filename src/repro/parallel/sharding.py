@@ -1,6 +1,6 @@
 """Logical-axis sharding rules -> PartitionSpecs (nothing hand-placed).
 
-The rules encode the DESIGN.md §5 layout:
+The rules encode the DESIGN.md §6 layout:
 
 * **TP** over 'model': attention heads (fallback: head_dim, then replicate
   when neither divides), FFN hidden f, expert dim E (EP), vocab.

@@ -1,5 +1,5 @@
 """Radix gradient compression — the paper's encoding reused as a
-distributed-training trick (beyond-paper; DESIGN.md §5).
+distributed-training trick (beyond-paper; DESIGN.md §6).
 
 Cross-pod gradient all-reduce traffic is compressed with exactly the paper's
 radix scheme: each gradient block is mapped to a T-bit unsigned fixed-point

@@ -8,7 +8,7 @@ API (optax-like, pytree-generic, jit/pjit-friendly):
     params = apply_updates(params, updates)
 
 Adafactor implements factored second moments (Shazeer & Stern, 2018) — the
-memory-honest choice for the ≥300 B-param architectures (DESIGN.md §5): for a
+memory-honest choice for the ≥300 B-param architectures (DESIGN.md §6): for a
 (r, c) matrix it stores r + c statistics instead of r*c.  State pytrees keep
 the params' tree structure so GSPMD shards them with the same rules
 (parallel/zero.py additionally re-shards along the data axis).

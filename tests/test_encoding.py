@@ -85,3 +85,26 @@ def test_property_radix_weights_sum(T):
     # sum of all weights == max level (all-ones train decodes to 2^T - 1)
     w = encoding.radix_weights(T)
     assert int(w.sum()) == encoding.max_level(T)
+
+
+@given(
+    st.integers(1, 8),                        # T
+    st.integers(1, 6), st.integers(1, 6),     # shape (rows, cols)
+    st.floats(0.05, 8.0, allow_nan=False),    # scale
+    st.integers(0, 2 ** 31 - 1),              # data seed
+)
+@settings(max_examples=100, deadline=None)
+def test_property_quantize_encode_spikesum_roundtrip(T, rows, cols, scale,
+                                                     seed):
+    """quantize -> encode -> weighted spike sum recovers the quantized
+    levels exactly: the spike train of length T *is* the binary expansion,
+    so sum_t spikes[t] * 2^(T-1-t) == q for every input, shape and scale."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-scale, 2 * scale, (rows, cols)), jnp.float32)
+    q = encoding.quantize(x, T, scale)
+    planes = encoding.encode(q, T)
+    weights = encoding.radix_weights(T).reshape((T, 1, 1))
+    spike_sum = (planes.astype(jnp.int32) * weights).sum(axis=0)
+    np.testing.assert_array_equal(np.asarray(spike_sum),
+                                  np.asarray(q, dtype=np.int32))
+    assert int(jnp.max(q)) <= encoding.max_level(T)

@@ -1,0 +1,193 @@
+"""Batch-bucketing plan cache + engine.run argument validation.
+
+The serving contract (DESIGN.md §3): arbitrary request sizes never
+recompile on the hot path.  Requests pad up to a pre-compiled bucket (or
+chunk by the top bucket), results slice back bit-exactly, cache entries
+die with their ``QuantizedNet``, and the stats counters prove all of it.
+"""
+
+import gc
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conversion, engine
+from repro.models import lenet
+
+RNG = np.random.default_rng(3)
+
+
+def _qnet(T=4, width_mult=0.25, pool_mode="or"):
+    static, params, input_hw = lenet.make(pool_mode=pool_mode,
+                                          width_mult=width_mult)
+    calib = jnp.asarray(RNG.uniform(0, 1, (4,) + input_hw), jnp.float32)
+    return conversion.convert(static, params, calib, num_steps=T), input_hw
+
+
+def _x(batch, input_hw):
+    return jnp.asarray(RNG.uniform(0, 1, (batch,) + input_hw), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Bucket ladder.
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_ladder_selection():
+    cache = engine.PlanCache(buckets=(8, 1, 32))     # unsorted on purpose
+    assert cache.buckets == (1, 8, 32)
+    assert cache.bucket_for(1) == 1
+    assert cache.bucket_for(2) == 8
+    assert cache.bucket_for(8) == 8
+    assert cache.bucket_for(9) == 32
+    assert cache.bucket_for(33) == 32                # oversize -> top bucket
+    with pytest.raises(ValueError):
+        cache.bucket_for(0)
+    with pytest.raises(ValueError):
+        engine.PlanCache(buckets=())
+    with pytest.raises(ValueError):
+        engine.PlanCache(buckets=(0, 4))
+    with pytest.raises(ValueError, match="data_parallel"):
+        engine.PlanCache(buckets=(1,), data_parallel=0)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 8, 11, 19])
+def test_pad_slice_roundtrip_bit_exact(n):
+    """Any request size through the ladder == the direct jnp path; padding
+    rows never leak into the sliced-back logits."""
+    qnet, input_hw = _qnet()
+    cache = engine.PlanCache(buckets=(1, 4, 8))
+    x = _x(n, input_hw)
+    ref = engine.run(qnet, x, mode="packed", backend="jnp")
+    got = cache.run(qnet, x)
+    assert got.shape == ref.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_cache_hit_on_repeated_shapes():
+    qnet, input_hw = _qnet()
+    cache = engine.PlanCache(buckets=(1, 4))
+    cache.run(qnet, _x(3, input_hw))
+    compiles = cache.stats.compiles
+    hits = cache.stats.hits
+    cache.run(qnet, _x(3, input_hw))
+    cache.run(qnet, _x(2, input_hw))     # same bucket (4)
+    assert cache.stats.compiles == compiles
+    assert cache.stats.hits == hits + 2
+
+
+def test_no_recompiles_across_mixed_sizes_after_warmup():
+    qnet, input_hw = _qnet()
+    cache = engine.PlanCache(buckets=(1, 4, 8))
+    cache.warmup(qnet, input_hw)
+    assert cache.stats.compiles == 3
+    for n in (5, 1, 3, 8, 2, 17, 4, 7):              # 17 chunks via top
+        cache.run(qnet, _x(n, input_hw))
+    assert cache.stats.compiles == 3                 # zero steady-state
+    assert cache.stats.padded_rows > 0
+    assert cache.stats.executions > 8                # chunking ran extra
+
+
+def test_oversize_request_chunks_by_top_bucket():
+    qnet, input_hw = _qnet()
+    cache = engine.PlanCache(buckets=(2, 4))
+    x = _x(11, input_hw)                             # 4 + 4 + pad(3->4)
+    ref = engine.run(qnet, x, mode="packed", backend="jnp")
+    execs = cache.stats.executions
+    got = cache.run(qnet, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert cache.stats.executions == execs + 3
+    assert cache.stats.padded_rows == 1
+
+
+def test_weakref_pruning_on_net_gc():
+    cache = engine.PlanCache(buckets=(1,))
+    qnet, input_hw = _qnet()
+    cache.run(qnet, _x(1, input_hw))
+
+    def scoped():
+        q2, hw = _qnet(width_mult=0.125)
+        cache.run(q2, _x(1, hw))
+
+    scoped()
+    gc.collect()
+    assert len(cache) == 2                           # dead entry still held
+    assert cache.prune() == 1                        # explicit prune drops it
+    assert len(cache) == 1 and cache.stats.pruned == 1
+    # pruning also happens automatically on the next miss
+    def scoped2():
+        q3, hw = _qnet(width_mult=0.5)
+        cache.run(q3, _x(1, hw))
+    scoped2()
+    gc.collect()
+    q4, hw = _qnet(T=3)
+    cache.run(q4, _x(1, hw))                         # miss -> auto-prune
+    assert cache.stats.pruned == 2
+    assert all(r() is not None for r, _ in cache._plans.values())
+
+
+def test_data_parallel_bucket_plans_match(monkeypatch):
+    """Buckets shard over devices (gcd fallback) and stay bit-exact; the
+    test session runs with 8 placeholder CPU devices (conftest.py)."""
+    qnet, input_hw = _qnet()
+    ndev = len(jax.devices())
+    cache = engine.PlanCache(buckets=(1, 8))
+    plans = cache.warmup(qnet, input_hw)
+    assert plans[0].data_parallel == 1               # bucket 1: fallback
+    assert plans[1].data_parallel == np.gcd(8, ndev)
+    x = _x(6, input_hw)
+    ref = engine.run(qnet, x, mode="packed", backend="jnp")
+    np.testing.assert_array_equal(np.asarray(cache.run(qnet, x)),
+                                  np.asarray(ref))
+
+
+def test_data_parallel_validation():
+    qnet, input_hw = _qnet()
+    with pytest.raises(ValueError, match="not divisible"):
+        engine.compile_plan(qnet, (3,) + input_hw, data_parallel=2)
+    with pytest.raises(ValueError, match="devices"):
+        engine.compile_plan(qnet, (1024,) + input_hw,
+                            data_parallel=512)
+    with pytest.raises(ValueError, match="data_parallel"):
+        engine.compile_plan(qnet, (4,) + input_hw, data_parallel=0)
+
+
+# ---------------------------------------------------------------------------
+# engine.run argument validation (previously silent fall-throughs).
+# ---------------------------------------------------------------------------
+
+
+class TestRunArgValidation:
+    def test_snn_on_kernels_backend_raises(self):
+        qnet, input_hw = _qnet()
+        with pytest.raises(ValueError, match="packed-level path only"):
+            engine.run(qnet, _x(1, input_hw), mode="snn", backend="kernels")
+
+    def test_unknown_mode_backend_method_raise(self):
+        qnet, input_hw = _qnet()
+        x = _x(1, input_hw)
+        with pytest.raises(ValueError, match="mode"):
+            engine.run(qnet, x, mode="spiking")
+        with pytest.raises(ValueError, match="backend"):
+            engine.run(qnet, x, backend="xla")
+        with pytest.raises(ValueError, match="method"):
+            engine.run(qnet, x, backend="kernels", method="horner")
+
+    def test_method_on_jnp_backend_warns(self):
+        qnet, input_hw = _qnet()
+        x = _x(1, input_hw)
+        with pytest.warns(UserWarning, match="ignored with backend='jnp'"):
+            engine.run(qnet, x, backend="jnp", method="bitserial")
+
+    def test_default_combinations_stay_silent(self):
+        qnet, input_hw = _qnet()
+        x = _x(1, input_hw)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            engine.run(qnet, x)
+            engine.run(qnet, x, mode="snn")
+            engine.run(qnet, x, backend="kernels")
+            engine.run(qnet, x, backend="kernels", method="bitserial")

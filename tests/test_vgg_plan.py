@@ -1,0 +1,85 @@
+"""VGG-11 (smoke width) on the kernel path — the paper's scalability net.
+
+The paper's headline deployment is VGG on hardware; this suite pins the
+compiled fused-kernel plan to the jnp packed path and the paper-faithful
+spike-plane oracle at VGG-11 depth: 8 SAME convs + 5 pools + 3 linears,
+with width_mult=0.1 deliberately producing non-8-aligned channel counts
+(6, 12, 25, 51, ...) so the channel-padding carry is exercised across the
+whole stack.  Batch sizes {1, 3, 8} are non-bucket-aligned on purpose.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conversion, engine
+from repro.models import vgg
+
+RNG = np.random.default_rng(11)
+
+
+def _vgg_qnet(pool_mode, batch, T=4, input_hw=(32, 32, 3), width_mult=0.1):
+    static, params, input_hw = vgg.make(
+        pool_mode=pool_mode, input_hw=input_hw, width_mult=width_mult,
+        num_classes=10)
+    x = jnp.asarray(RNG.uniform(0, 1, (batch,) + input_hw), jnp.float32)
+    qnet = conversion.convert(static, params, x, num_steps=T, weight_bits=3)
+    return qnet, x
+
+
+@pytest.mark.parametrize("pool_mode", ["or", "avg"])
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_vgg11_plan_matches_jnp(pool_mode, batch):
+    """kernels backend == jnp packed path, bit-exact, both pool modes."""
+    qnet, x = _vgg_qnet(pool_mode, batch)
+    ref = engine.run(qnet, x, mode="packed", backend="jnp")
+    got = engine.run(qnet, x, mode="packed", backend="kernels")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("pool_mode", ["or", "avg"])
+def test_vgg11_packed_matches_snn_oracle(pool_mode):
+    """jnp packed path == paper-faithful spike-plane path at VGG-11 depth."""
+    qnet, x = _vgg_qnet(pool_mode, batch=2)
+    a = engine.run(qnet, x, mode="packed", backend="jnp")
+    b = engine.run(qnet, x, mode="snn", backend="jnp")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_vgg11_plan_bitserial_method():
+    """The paper-faithful in-kernel dataflow agrees at VGG depth too."""
+    qnet, x = _vgg_qnet("or", batch=2)
+    ref = engine.run(qnet, x, mode="packed", backend="jnp")
+    plan = engine.compile_plan(qnet, x.shape, method="bitserial")
+    np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(ref))
+
+
+def test_vgg11_plan_packed_uint8_end_to_end():
+    """Every inter-layer activation stays packed uint8 (or-pool VGG);
+    only the logits layer emits int32 — DESIGN.md §2 at VGG scale."""
+    qnet, x = _vgg_qnet("or", batch=1)
+    plan = engine.compile_plan(qnet, x.shape)
+    dtypes = [l.out_dtype for l in plan.layers]
+    assert dtypes[-1] == "int32" and set(dtypes[:-1]) == {"uint8"}
+    assert plan.activation_traffic()["traffic_ratio"] >= 3.0
+
+
+@pytest.mark.slow
+def test_vgg11_plan_nontrivial_flatten_boundary():
+    """64x64 input leaves a 2x2 spatial extent at flatten, so the first
+    linear's weight rows scatter to the channel-padded interleaved layout
+    (the 'large flatten boundary' case)."""
+    qnet, x = _vgg_qnet("or", batch=2, input_hw=(64, 64, 3))
+    ref = engine.run(qnet, x, mode="packed", backend="jnp")
+    got = engine.run(qnet, x, mode="packed", backend="kernels")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.slow
+def test_vgg11_avg_pool_carry_T6():
+    """T=6 + sum pools: the widened carry (8 bits) still fits a byte and
+    stays bit-exact across all five pool stages."""
+    qnet, x = _vgg_qnet("avg", batch=2, T=6)
+    ref = engine.run(qnet, x, mode="packed", backend="jnp")
+    plan = engine.compile_plan(qnet, x.shape)
+    np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(ref))
