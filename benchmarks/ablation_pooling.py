@@ -21,14 +21,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import conversion, engine
+from repro import api
+from repro.core import conversion
 from repro.data.synthetic import SyntheticVision
 from repro.models import lenet
 from repro.train.trainer import TrainConfig, train_ann
 
 
 def _acc(qnet, data, batches=4, batch=256):
-    fwd = jax.jit(lambda x: engine.run(qnet, x))
+    fwd = api.Accelerator(backend="jnp").compile(
+        qnet, data.batch(0, 1)[0].shape[1:], buckets=(batch,))
     c = 0
     for i in range(batches):
         x, y = data.batch(20_000 + i, batch)

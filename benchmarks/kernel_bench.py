@@ -116,15 +116,17 @@ def run(log=print, m=512, k=512, n=512, T=4, json_path=_JSON_PATH):
 
 def _plan_traffic(T=4, batch=1):
     """Per-layer inter-layer activation bytes for LeNet-5, fused vs int32."""
-    from repro.core import conversion, engine
+    from repro import api
+    from repro.core import conversion
     from repro.models import lenet
 
     static, params, input_hw = lenet.make(pool_mode="or")
     rng = np.random.default_rng(1)
     calib = jnp.asarray(rng.uniform(0, 1, (4,) + input_hw), jnp.float32)
     qnet = conversion.convert(static, params, calib, num_steps=T)
-    plan = engine.compile_plan(qnet, (batch,) + input_hw)
-    return plan.activation_traffic()
+    exe = api.Accelerator(backend="kernels").compile(qnet, input_hw,
+                                                     buckets=(batch,))
+    return exe.traffic()
 
 
 def main():

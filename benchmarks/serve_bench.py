@@ -1,15 +1,15 @@
 """Batched serving benchmark: bucket-ladder latency + mixed-size streams.
 
 Two measurements per architecture (lenet5 / fang_cnn / vgg11-smoke), both
-over the fused-epilogue kernel plans (DESIGN.md §3):
+over ``repro.api`` executables (fused-epilogue kernel plans, DESIGN.md §3):
 
 * **per-bucket steady state** — the pre-compiled plan for each batch bucket
   timed directly: p50/p95 latency per call and images/sec.  This is the
   throughput ceiling of the ladder (no queue wait, no padding waste).
 * **mixed-size request stream** — random request sizes through the
-  micro-batching queue.  Requests pad to buckets; the cache stats prove the
-  steady state never recompiles (the serving-stack contract the tests pin
-  down in tests/test_serve.py).
+  micro-batching queue.  Requests pad to buckets; the ``Executable.stats()``
+  counters prove the steady state never recompiles (asserted here AND
+  pinned by tests/test_serve.py — a recompile regression fails the bench).
 
 On this CPU container the Pallas kernels run in interpret mode, so absolute
 numbers are not TPU performance; the bench tracks the *serving* overheads
@@ -39,7 +39,7 @@ def _bucket_rows(server, arch, buckets, iters, rng, log):
     """Steady-state per-bucket latency: direct plan calls, no queue."""
     rows = []
     for b in buckets:
-        plan = server.cache.plan_for(server.qnet, b, server.item_shape)
+        plan = server.exe.plan_for(b)
         x = np.asarray(rng.uniform(0, 1, (b,) + server.item_shape),
                        np.float32)
         jax.block_until_ready(plan(x))          # warm the executable
@@ -50,17 +50,18 @@ def _bucket_rows(server, arch, buckets, iters, rng, log):
             lat.append((time.monotonic() - t0) * 1e3)
         p50, p95 = serve_cnn._percentiles(lat)
         ips = b / (np.median(lat) / 1e3)
+        dp = getattr(plan, "data_parallel", 1)
         log(f"serve,{arch},bucket={b},p50={p50:.1f}ms,p95={p95:.1f}ms,"
-            f"{ips:.1f}img/s,dp={plan.data_parallel}")
+            f"{ips:.1f}img/s,dp={dp}")
         rows.append({"bucket": b, "p50_ms": round(p50, 2),
                      "p95_ms": round(p95, 2), "images_per_s": round(ips, 1),
-                     "data_parallel": plan.data_parallel})
+                     "data_parallel": dp})
     return rows
 
 
 def _stream_row(server, arch, n_requests, max_request, rng, log):
     """Mixed-size stream through the micro-batch queue."""
-    compiles_before = server.cache.stats.compiles
+    compiles_before = server.stats()["compiles"]
     queue = serve_cnn.MicroBatchQueue(server, timeout_s=0.002)
     sizes = rng.integers(1, max_request + 1, n_requests)
     t0 = time.monotonic()
@@ -69,17 +70,22 @@ def _stream_row(server, arch, n_requests, max_request, rng, log):
     lat = [t.latency_s * 1e3 for t in tickets]
     p50, p95 = serve_cnn._percentiles(lat)
     images = int(sum(t.size for t in tickets))
-    stats = server.cache.stats
-    recompiles = stats.compiles - compiles_before
+    stats = server.stats()
+    recompiles = stats["compiles"] - compiles_before
+    # the serving contract: a warmed ladder NEVER recompiles on the hot
+    # path — a regression here is a multi-second stall per novel size.
+    assert recompiles == 0, (
+        f"{arch}: {recompiles} steady-state recompiles (plan-cache "
+        "contract violated)")
     log(f"serve,{arch},stream,n={n_requests},p50={p50:.1f}ms,"
         f"p95={p95:.1f}ms,{images / wall:.1f}img/s,"
-        f"recompiles={recompiles},padded_rows={stats.padded_rows},"
+        f"recompiles={recompiles},padded_rows={stats['padded_rows']},"
         f"flushes={queue.flushes}")
     return {"requests": n_requests, "images": images,
             "p50_ms": round(p50, 2), "p95_ms": round(p95, 2),
             "images_per_s": round(images / wall, 1),
             "steady_state_recompiles": recompiles,
-            "padded_rows": stats.padded_rows, "flushes": queue.flushes}
+            "padded_rows": stats["padded_rows"], "flushes": queue.flushes}
 
 
 def run(log=print, archs=ARCHS, buckets=(1, 4, 8), iters=5,
@@ -98,7 +104,7 @@ def run(log=print, archs=ARCHS, buckets=(1, 4, 8), iters=5,
             "buckets": _bucket_rows(server, arch, buckets, iters, rng, log),
             "stream": _stream_row(server, arch, n_requests, max_request,
                                   rng, log),
-            "cache_stats": server.cache.stats.as_dict(),
+            "cache_stats": server.stats(),
         }
 
     payload = {

@@ -19,16 +19,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import conversion, engine
+from repro import api
+from repro.core import conversion
 from repro.core.hwmodel import CostModel, HwConfig, LENET5, PAPER_TABLE1, network_layers
 from repro.data.synthetic import SyntheticVision
 from repro.models import lenet
 from repro.train.trainer import TrainConfig, train_ann
 
 
-def _accuracy(qnet, data, batches=4, batch=256, mode="packed"):
+def _accuracy(qnet, data, batches=4, batch=256):
     correct = total = 0
-    fwd = jax.jit(lambda x: engine.run(qnet, x, mode=mode))
+    fwd = api.Accelerator(backend="jnp").compile(
+        qnet, data.batch(0, 1)[0].shape[1:], buckets=(batch,))
     for i in range(batches):
         x, y = data.batch(20_000 + i, batch)
         pred = np.asarray(fwd(jnp.asarray(x))).argmax(-1)
@@ -54,8 +56,8 @@ def run(log=print, steps: int = 300):
         qnet = conversion.convert(static, params, calib, num_steps=T)
         acc = _accuracy(qnet, data)
         # SNN spike-plane path == packed quantized-ANN path, bit-exact:
-        a = engine.run(qnet, jnp.asarray(x_check), mode="packed")
-        b = engine.run(qnet, jnp.asarray(x_check), mode="snn")
+        a = api.oracle(qnet, jnp.asarray(x_check), mode="packed")
+        b = api.oracle(qnet, jnp.asarray(x_check), mode="snn")
         exact = bool(jnp.array_equal(a, b))
         lat = model.latency_us(net, HwConfig(n_conv_units=2), T)
         rows.append(dict(

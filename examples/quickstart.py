@@ -1,9 +1,10 @@
 """Quickstart: the paper's full pipeline in miniature (~1 minute on CPU).
 
   1. train a float ANN (LeNet-family) on the procedural dataset,
-  2. ANN -> radix-SNN conversion (3-bit weights, T time steps),
+  2. ANN -> radix-SNN conversion (3-bit weights, T time steps) with the
+     encoding as a first-class spec (repro.api.RadixEncoding),
   3. verify the central contract: the spiking (bit-plane Horner) path is
-     BIT-EXACT against the packed quantized-ANN path,
+     BIT-EXACT against the compiled packed executable,
   4. classify with both + report the calibrated-FPGA latency the paper's
      hardware would need (Table I analogue).
 
@@ -14,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import conversion, engine
+from repro import api
 from repro.core.hwmodel import CostModel, HwConfig, LENET5, network_layers
 from repro.data.synthetic import SyntheticVision
 from repro.models import lenet
@@ -33,12 +34,15 @@ def main():
 
     print(f"== 2. convert to radix SNN (T={T}, 3-bit weights) ==")
     calib = jnp.asarray(data.calibration_batch(256))
-    qnet = conversion.convert(static, params, calib, num_steps=T)
+    qnet = api.convert(static, params, calib,
+                       encoding=api.RadixEncoding(T))
 
-    print("== 3. spiking path == packed path (bit-exact) ==")
+    print("== 3. compiled executable == spiking oracle (bit-exact) ==")
     x, y = data.batch(999, 64)
-    out_packed = engine.run(qnet, jnp.asarray(x), mode="packed")
-    out_snn = engine.run(qnet, jnp.asarray(x), mode="snn")
+    exe = api.Accelerator(backend="jnp").compile(qnet, input_hw,
+                                                 buckets=(64,))
+    out_packed = exe(jnp.asarray(x))
+    out_snn = api.oracle(qnet, jnp.asarray(x), mode="snn")
     assert jnp.array_equal(out_packed, out_snn), "radix identity violated!"
     print("bit-exact: True")
 

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import conversion, engine
+from repro import api
+from repro.core import conversion
 from repro.core.hwmodel import CostModel, HwConfig, LENET5, network_layers
 from repro.data.synthetic import SyntheticVision
 from repro.models import lenet
@@ -40,9 +41,8 @@ def main():
                               jnp.asarray(data.calibration_batch(256)),
                               num_steps=args.time_steps)
 
-    serve = jax.jit(lambda x: engine.run(qnet, x, backend=args.backend))
-    # warmup (compile)
-    serve(jnp.zeros((args.batch, 32, 32, 1), jnp.float32)).block_until_ready()
+    serve = api.Accelerator(backend=args.backend).compile(
+        qnet, (32, 32, 1), buckets=(args.batch,)).warmup()
 
     lat, correct, total = [], 0, 0
     for r in range(args.requests):

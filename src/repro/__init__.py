@@ -1,0 +1,11 @@
+# The paper's primary contribution: radix neural encoding and the
+# accelerator-equivalent execution semantics (bit-exact SNN / quantized-ANN
+# twin pair), plus the calibrated FPGA hardware cost model (hwmodel).
+from repro.core import conversion, encoding, engine, layers, neuron  # noqa: F401
+# Pallas TPU kernels for the paper's compute hot spots (bit-serial radix
+# matmul/conv + spike encoder), with jnp oracles in ref.py and jit'd
+# wrappers in ops.py.  Validated in interpret mode on CPU; TPU is the target.
+from repro.kernels import ops, ref  # noqa: F401
+# The public execution surface: EncodingSpec (radix / rate / your scheme)
+# + Accelerator.compile(...) -> Executable.  Start here.
+from repro import api  # noqa: F401

@@ -1,0 +1,275 @@
+"""repro.api — the one public execution surface.
+
+The paper's accelerator claims to support *emerging neural encodings*
+generically; this module makes the claim concrete in software.  The
+encoding is a first-class, swappable component
+(:class:`~repro.core.encoding.EncodingSpec`: :class:`RadixEncoding`,
+:class:`RateEncoding`, subclass for differential/temporal schemes), and
+execution is one facade::
+
+    from repro import api
+
+    qnet = api.convert(static, params, calib,
+                       encoding=api.RadixEncoding(4))     # or num_steps=4
+    exe = api.Accelerator(backend="kernels").compile(
+        qnet, item_shape, buckets=(1, 8, 32))
+    logits = exe(images)                                  # any batch size
+    exe.traffic(), exe.memory(), exe.stats()
+
+:class:`Accelerator` owns the *where/how* (backend, in-kernel dataflow);
+the spec owns the *what* (quantize/encode/decode/requantize semantics and
+which backends/dataflows/pool modes preserve them); ``compile`` validates
+the pairing and returns an :class:`Executable` — a batch-polymorphic
+callable over a bucketed plan cache (pad-to-bucket, top-bucket chunking,
+data-parallel shard_map, zero steady-state recompiles; DESIGN.md §3).
+
+:func:`oracle` is the un-jitted reference forward (``mode="packed"`` or
+the paper-faithful ``mode="snn"`` spike-plane path) that every compiled
+path is bit-exact against.
+
+This facade subsumes the former ``engine.run(mode=, backend=, method=)``
+/ ``engine.compile_plan`` / ``PlanCache`` kwarg sprawl; those survive
+only as deprecation shims forwarding here (see DESIGN.md "API" for the
+migration table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conversion, engine
+from repro.core.conversion import convert
+from repro.core.encoding import EncodingSpec, RadixEncoding, RateEncoding
+
+__all__ = [
+    "EncodingSpec",
+    "RadixEncoding",
+    "RateEncoding",
+    "Accelerator",
+    "Executable",
+    "convert",
+    "oracle",
+]
+
+BACKENDS = ("kernels", "jnp")
+
+
+def _resolve_spec(
+    qnet: conversion.QuantizedNet,
+    encoding: Optional[EncodingSpec],
+) -> EncodingSpec:
+    """The spec a net runs under; an explicit override must agree with the
+    algebra the net's multipliers were folded for (same levels / steps)."""
+    if encoding is None:
+        return qnet.spec
+    if qnet.encoding is not None and encoding != qnet.encoding:
+        raise ValueError(
+            f"net was converted for {qnet.encoding}; cannot execute it as "
+            f"{encoding} — reconvert with convert(..., encoding=...)")
+    if (encoding.num_steps != qnet.num_steps
+            or encoding.levels != qnet.spec.levels):
+        raise ValueError(
+            f"{encoding} ({encoding.levels} levels) does not match the "
+            f"net's folded multipliers ({qnet.spec.levels} levels, "
+            f"T={qnet.num_steps}) — reconvert with convert(..., "
+            f"encoding=...)")
+    return encoding
+
+
+def oracle(
+    qnet: conversion.QuantizedNet,
+    x,
+    *,
+    mode: str = "snn",
+    encoding: Optional[EncodingSpec] = None,
+) -> jax.Array:
+    """Un-jitted reference forward on the jnp backend.
+
+    ``mode="snn"`` is the paper-faithful spike-plane path (per-plane
+    integer layers, reduced by the encoding's ``reduce_planes``);
+    ``mode="packed"`` is the quantized-ANN twin.  Every
+    :class:`Executable` is bit-exact against both.
+    """
+    if mode not in ("packed", "snn"):
+        raise ValueError(f"mode must be 'packed' or 'snn', got {mode!r}")
+    spec = _resolve_spec(qnet, encoding)
+    return engine._forward(qnet, jnp.asarray(x, jnp.float32), spec, mode)
+
+
+class Executable:
+    """A compiled, batch-polymorphic deployment of one converted net.
+
+    Produced by :meth:`Accelerator.compile`; do not construct directly.
+
+    ``exe(x)`` maps float images of any batch size to float logits:
+    requests pad up to the smallest pre-declared bucket (pad rows sliced
+    off) or chunk by the top bucket, so no request size ever recompiles
+    on the hot path.  Introspection:
+
+    * :meth:`traffic`  — modeled inter-layer activation bytes (fused
+      packed-uint8 plan vs unfused int32 baseline); kernels backend only.
+    * :meth:`memory`   — ping-pong buffer sizing / access counts
+      (:class:`~repro.core.engine.MemoryReport`).
+    * :meth:`stats`    — plan-cache counters (hits / compiles /
+      executions / padded_rows / pruned) proving zero steady-state
+      recompiles.
+    """
+
+    def __init__(
+        self,
+        qnet: conversion.QuantizedNet,
+        item_shape: Tuple[int, ...],
+        encoding: EncodingSpec,
+        backend: str,
+        dataflow: Optional[str],
+        parallel: Optional[int],
+        buckets: Sequence[int],
+    ):
+        self.qnet = qnet                     # strong ref: exe keeps net alive
+        self.item_shape = tuple(int(d) for d in item_shape)
+        self.encoding = encoding
+        self.backend = backend
+        self.dataflow = dataflow
+        self.parallel = parallel
+        if backend == "kernels":
+            self._cache = engine.PlanCache(
+                buckets, method=dataflow, data_parallel=parallel,
+                encoding=encoding)
+        else:
+            spec = encoding
+
+            def compile_fn(qnet, shape):
+                return jax.jit(
+                    lambda x: engine._forward(qnet, x, spec, "packed"))
+
+            self._cache = engine.PlanCache(
+                buckets, method="jnp", encoding=encoding,
+                compile_fn=compile_fn)
+        self.buckets = self._cache.buckets
+
+    def __repr__(self) -> str:
+        return (f"Executable({self.encoding}, backend={self.backend!r}, "
+                f"dataflow={self.dataflow!r}, item={self.item_shape}, "
+                f"buckets={self.buckets})")
+
+    @property
+    def num_steps(self) -> int:
+        return self.encoding.num_steps
+
+    def __call__(self, x) -> jax.Array:
+        """(n,) + item_shape float images -> (n, classes) float logits."""
+        x = jnp.asarray(x, jnp.float32)
+        if tuple(x.shape[1:]) != self.item_shape:
+            raise ValueError(
+                f"request item shape {tuple(x.shape[1:])} != executable's "
+                f"{self.item_shape}")
+        return self._cache.run(self.qnet, x)
+
+    def warmup(self) -> "Executable":
+        """Compile + XLA-warm every bucket so serving never compiles on
+        the hot path; returns self for chaining."""
+        self._cache.warmup(self.qnet, self.item_shape)
+        return self
+
+    def plan_for(self, bucket: int):
+        """The underlying per-bucket plan callable (compiles on first
+        use) — benchmark hook for timing one bucket without queue/pad
+        overhead."""
+        return self._cache.plan_for(self.qnet, bucket, self.item_shape)
+
+    def stats(self) -> dict:
+        return self._cache.stats.as_dict()
+
+    def traffic(self) -> dict:
+        """Modeled inter-layer activation bytes, fused packed-uint8 plan
+        vs the unfused int32 baseline, for one ``buckets[0]``-sized batch
+        (compile with ``buckets=(1, ...)`` for per-item figures; the
+        fused/int32 ratio is batch-invariant either way)."""
+        if self.backend != "kernels":
+            raise NotImplementedError(
+                "the activation-traffic model describes compiled kernel "
+                "plans; compile with Accelerator(backend='kernels')")
+        return self.plan_for(self.buckets[0]).activation_traffic()
+
+    def memory(self, **kwargs) -> engine.MemoryReport:
+        """Ping-pong buffer sizing + access counts (paper Sec. III-C)."""
+        if len(self.item_shape) != 3:
+            raise ValueError(
+                "memory() models (H, W, C) image nets, item_shape="
+                f"{self.item_shape}")
+        return engine.memory_report(self.qnet, self.item_shape, **kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class Accelerator:
+    """The execution target: which backend runs plans, with which
+    in-kernel dataflow.
+
+    * ``backend="kernels"`` — fused-epilogue Pallas kernel plans
+      (interpret-mode on CPU, compiled on TPU); ``dataflow`` picks the
+      in-kernel schedule among the encoding's declared
+      ``kernel_dataflows`` (radix: "fused" default, "bitserial" for the
+      paper-faithful schedule).
+    * ``backend="jnp"``     — per-bucket jitted XLA closures of the
+      reference path; the only backend for encodings without a kernel
+      dataflow (e.g. :class:`RateEncoding`).
+
+    ``compile`` validates the (backend, dataflow, encoding, net) pairing
+    loudly at compile time — no silent fall-through to a slower or
+    semantically wrong path.
+    """
+
+    backend: str = "kernels"
+    dataflow: Optional[str] = None   # None -> encoding's default
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}")
+        if self.dataflow is not None and self.backend != "kernels":
+            raise ValueError(
+                f"dataflow={self.dataflow!r} selects the in-kernel "
+                "schedule and requires backend='kernels'")
+
+    def compile(
+        self,
+        qnet: conversion.QuantizedNet,
+        input_spec: Sequence[int],
+        *,
+        encoding: Optional[EncodingSpec] = None,
+        parallel: Optional[int] = None,
+        buckets: Optional[Sequence[int]] = None,
+    ) -> Executable:
+        """Compile ``qnet`` for deployment; returns an :class:`Executable`.
+
+        ``input_spec`` is the per-item input shape — ``(H, W, C)`` for
+        image nets — batch handling is the executable's job.  ``buckets``
+        is the pre-compiled batch ladder (default
+        ``engine.DEFAULT_BUCKETS``); ``parallel`` shards each bucket's
+        plan over up to that many devices (None = auto,
+        gcd(bucket, devices)).  ``encoding`` overrides the net's stored
+        spec (it must match the folded multiplier algebra — normally you
+        pass the encoding to :func:`convert` once and never here).
+        """
+        spec = _resolve_spec(qnet, encoding)
+        if self.backend not in spec.backends:
+            raise ValueError(
+                f"{spec.name} encoding does not run on the "
+                f"{self.backend!r} backend (supported: {spec.backends})")
+        dataflow = None
+        if self.backend == "kernels":
+            dataflow = spec.validate_dataflow(self.dataflow)
+        elif parallel is not None and parallel != 1:
+            raise ValueError(
+                "parallel (data-parallel bucket plans) requires "
+                "backend='kernels'")
+        spec.validate_static(qnet.static)
+        item = tuple(int(d) for d in input_spec)
+        if buckets is None:
+            buckets = engine.DEFAULT_BUCKETS
+        return Executable(qnet, item, spec, self.backend, dataflow,
+                          parallel, buckets)

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import encoding, layers
+from repro.core.encoding import EncodingSpec, RadixEncoding
 
 __all__ = [
     "float_forward",
@@ -158,7 +159,7 @@ def quantize_weights(w: jax.Array, weight_bits: int,
 
 
 @jax.tree_util.register_dataclass
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class QuantizedNet:
     """Converted network: integer weights + folded requant multipliers.
 
@@ -166,6 +167,12 @@ class QuantizedNet:
       conv/linear: {"w_q", "b_int", "mult"(None for logits layer)}
       pool/flatten: None
     ``logit_scale`` maps the last integer accumulator to float logits.
+
+    ``encoding`` is the :class:`~repro.core.encoding.EncodingSpec` the
+    multipliers were folded for (``None`` on nets converted before specs
+    existed — read :attr:`spec`, which defaults those to radix).  Identity
+    semantics (``eq=False``) keep the net hashable so weakrefs to it can
+    key the engine's plan caches.
     """
 
     static: Static = dataclasses.field(metadata=dict(static=True))
@@ -174,6 +181,15 @@ class QuantizedNet:
     qlayers: List[Optional[dict]] = dataclasses.field(default_factory=list)
     input_scale: float = 1.0
     logit_scale: float = 1.0
+    encoding: Optional[encoding.EncodingSpec] = dataclasses.field(
+        default=None, metadata=dict(static=True))
+
+    @property
+    def spec(self) -> encoding.EncodingSpec:
+        """The net's encoding spec (legacy nets default to radix)."""
+        if self.encoding is not None:
+            return self.encoding
+        return encoding.RadixEncoding(self.num_steps)
 
 
 def convert(
@@ -181,14 +197,37 @@ def convert(
     params,
     calib_x: jax.Array,
     *,
-    num_steps: int,
+    num_steps: Optional[int] = None,
+    encoding: Optional[EncodingSpec] = None,
     weight_bits: int = 3,
     percentile: float = 99.9,
     per_channel: bool = False,
 ) -> QuantizedNet:
-    """ANN -> radix-SNN conversion (scales folded; see module docstring)."""
+    """ANN -> SNN conversion (scales folded; see module docstring).
+
+    The target encoding is a first-class parameter: pass ``encoding``
+    (e.g. ``RadixEncoding(4)``, ``RateEncoding(7)``) or, as shorthand for
+    radix, just ``num_steps``.  The spec's ``levels`` drives the
+    multiplier folding (radix: 2^T; rate: T+1) and the spec is stored on
+    the returned net, so execution paths dispatch on it without
+    re-stating the encoding at every call site (repro.api).
+    """
+    spec = encoding
+    if spec is None:
+        if num_steps is None:
+            raise ValueError("pass num_steps (radix shorthand) or encoding")
+        spec = RadixEncoding(num_steps)
+    elif num_steps is not None and num_steps != spec.num_steps:
+        raise ValueError(
+            f"num_steps={num_steps} contradicts "
+            f"encoding.num_steps={spec.num_steps}")
+    spec.validate_static(static)
     scales = calibrate(static, params, calib_x, percentile)
-    lvlp1 = encoding.max_level(num_steps) + 1  # 2^T
+    # fold the spec's headroom factor into every calibrated scale, so the
+    # quantize / bias / multiplier / logit algebra below stays consistent
+    # with the grid the spec actually quantizes onto.
+    scales = [s * spec.scale_factor for s in scales]
+    lvlp1 = spec.levels  # radix: 2^T levels; rate: T+1
 
     qlayers: List[Optional[dict]] = []
     affine_idx = 0
@@ -230,8 +269,9 @@ def convert(
 
     return QuantizedNet(
         static=static,
-        num_steps=num_steps,
+        num_steps=spec.num_steps,
         weight_bits=weight_bits,
+        encoding=spec,
         qlayers=qlayers,
         input_scale=float(input_scale),
         logit_scale=(float(logit_scale) if jnp.ndim(logit_scale) == 0

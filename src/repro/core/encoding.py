@@ -26,8 +26,9 @@ Conventions
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import ClassVar, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +45,9 @@ __all__ = [
     "rate_encode",
     "rate_decode",
     "radix_weights",
+    "EncodingSpec",
+    "RadixEncoding",
+    "RateEncoding",
 ]
 
 
@@ -160,3 +164,248 @@ def rate_decode(planes: jax.Array, scale: jax.Array | float = 1.0) -> jax.Array:
     """Spike-count decode for rate-coded trains."""
     num_steps = planes.shape[0]
     return planes.astype(jnp.float32).sum(0) * (jnp.asarray(scale, jnp.float32) / num_steps)
+
+
+# ---------------------------------------------------------------------------
+# Encoding specs — the first-class, swappable encoding component.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodingSpec:
+    """A neural encoding as a first-class object (the `repro.api` contract).
+
+    The paper's accelerator claims to support *emerging neural encodings*
+    generically; an ``EncodingSpec`` is how the software twin states one.
+    A spec owns the full numeric semantics of an encoding —
+
+    * ``quantize``/``dequantize``: real activation <-> integer level,
+    * ``encode``/``decode``:       integer level <-> (T, ...) spike planes,
+    * ``reduce_planes``:           per-time-step layer accumulators -> one
+                                   int32 membrane (the output-logic sum),
+    * ``requantize``:              membrane -> next layer's integer levels,
+
+    and *declares* what it can run on: which execution backends
+    (``backends``), which in-kernel dataflows (``kernel_dataflows``), and
+    which pooling-unit modes (``pool_modes``) preserve its semantics.
+    ``core/conversion.convert`` folds scales using ``levels``;
+    ``core/engine`` and ``repro.api`` dispatch on the declarations instead
+    of bare ``method=`` strings.
+
+    Specs are frozen (hashable) so they can serve as cache-key components
+    and jit-static metadata.  Subclass to add a new encoding (e.g. a
+    differential/temporal scheme) without touching the engine.
+    """
+
+    num_steps: int
+
+    name: ClassVar[str] = "abstract"
+    backends: ClassVar[Tuple[str, ...]] = ()
+    kernel_dataflows: ClassVar[Tuple[str, ...]] = ()
+    pool_modes: ClassVar[Tuple[str, ...]] = ()
+
+    def __post_init__(self):
+        if self.num_steps < 1:
+            raise ValueError(
+                f"num_steps must be >= 1, got {self.num_steps}")
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def levels(self) -> int:
+        """Distinct integer levels a train of ``num_steps`` represents."""
+        raise NotImplementedError
+
+    @property
+    def max_level(self) -> int:
+        return self.levels - 1
+
+    @property
+    def packed_dtype(self):
+        return jnp.uint8 if self.max_level <= 255 else jnp.int32
+
+    @property
+    def scale_factor(self) -> float:
+        """Full-scale headroom multiplier folded into every calibrated
+        activation scale at conversion time (``convert`` multiplies its
+        calibration scales by this, so the quantize/bias/multiplier/logit
+        algebra stays consistent).  1.0 for most encodings."""
+        return 1.0
+
+    # -- numeric semantics (subclass responsibility) -----------------------
+
+    def quantize(self, x: jax.Array, scale: jax.Array | float = 1.0) -> jax.Array:
+        raise NotImplementedError
+
+    def dequantize(self, q: jax.Array, scale: jax.Array | float = 1.0) -> jax.Array:
+        raise NotImplementedError
+
+    def encode(self, q: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def decode(self, planes: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def reduce_planes(self, per_step: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def requantize(self, acc: jax.Array, mult) -> jax.Array:
+        """ReLU + requantize a layer accumulator to this encoding's levels.
+
+        The semantic contract of the kernels' fused output-logic epilogue:
+        clip(floor(acc * mult), 0, max_level), truncating like hardware.
+        """
+        q = jnp.floor(acc.astype(jnp.float32) * mult)
+        return jnp.clip(q, 0, self.max_level).astype(self.packed_dtype)
+
+    # -- capability checks (used by repro.api / core.engine) ---------------
+
+    def supports_pool(self, pool_mode: str) -> bool:
+        return pool_mode in self.pool_modes
+
+    def validate_static(self, static) -> None:
+        """Check every pool in a network description against this
+        encoding's declared ``pool_modes`` (shared by convert /
+        Accelerator.compile / the engine's runtime guard)."""
+        for kind, cfg in static:
+            if kind == "pool" and not self.supports_pool(
+                    cfg.get("mode", "or")):
+                raise ValueError(
+                    f"{self.name} encoding does not preserve pool mode "
+                    f"{cfg.get('mode', 'or')!r} (supported: "
+                    f"{self.pool_modes})")
+
+    def validate_dataflow(self, dataflow: Optional[str]) -> str:
+        """Resolve/validate an in-kernel dataflow for the kernels backend."""
+        if not self.kernel_dataflows:
+            raise ValueError(
+                f"{self.name} encoding has no kernel dataflow; supported "
+                f"backends: {self.backends}")
+        if self.levels != (1 << self.num_steps):
+            # the kernels' fused epilogue clips to 2^T - 1 (radix packing
+            # == integer activation); a spec declaring kernel dataflows
+            # with any other level count would silently diverge from its
+            # own requantize semantics.
+            raise ValueError(
+                f"{self.name} encoding declares kernel dataflows but has "
+                f"{self.levels} levels for T={self.num_steps}; the kernel "
+                f"epilogue clips to 2^T - 1, so kernels-capable specs "
+                f"require levels == 2^T")
+        if dataflow is None:
+            return self.kernel_dataflows[0]
+        if dataflow not in self.kernel_dataflows:
+            raise ValueError(
+                f"dataflow must be one of {self.kernel_dataflows} for "
+                f"{self.name} encoding, got {dataflow!r}")
+        return dataflow
+
+
+@dataclasses.dataclass(frozen=True)
+class RadixEncoding(EncodingSpec):
+    """The paper's radix encoding: ``planes[t]`` weighs ``2^(T-1-t)``.
+
+    T steps carry ``2^T`` levels; the packed time axis IS the integer
+    activation, which is what admits the single-pass kernels backend
+    (both the TPU-native "fused" dataflow and the paper-faithful
+    "bitserial" one).
+    """
+
+    name: ClassVar[str] = "radix"
+    backends: ClassVar[Tuple[str, ...]] = ("kernels", "jnp")
+    kernel_dataflows: ClassVar[Tuple[str, ...]] = ("fused", "bitserial")
+    pool_modes: ClassVar[Tuple[str, ...]] = ("or", "avg", "max")
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.num_steps
+
+    def quantize(self, x, scale=1.0):
+        return quantize(x, self.num_steps, scale)
+
+    def dequantize(self, q, scale=1.0):
+        return dequantize(q, self.num_steps, scale)
+
+    def encode(self, q):
+        return encode(q, self.num_steps)
+
+    def decode(self, planes):
+        return decode(planes)
+
+    def reduce_planes(self, per_step):
+        """Horner accumulation (acc << 1) + I_t over the time axis —
+        identical to ``neuron.radix_membrane`` (the "<<" block, Fig. 2)."""
+
+        def body(acc, cur):
+            return (acc << 1) + cur, None
+
+        acc0 = jnp.zeros(per_step.shape[1:], jnp.int32)
+        acc, _ = jax.lax.scan(body, acc0, per_step.astype(jnp.int32))
+        return acc
+
+
+@dataclasses.dataclass(frozen=True)
+class RateEncoding(EncodingSpec):
+    """Rate coding: the spike *count* over T steps is the activation.
+
+    T steps carry only ``T + 1`` levels — the paper's motivating asymmetry
+    versus radix (2^T levels).  All time steps weigh 1, so spike planes
+    reduce by a plain sum and the quantized-ANN twin runs levels in
+    [0, T] through the same integer layers; only linear (sum) pooling
+    commutes with the per-plane path, hence ``pool_modes = ("avg",)``.
+    The deterministic encoder is an exact integer sigma-delta: an integer
+    level q emits exactly q evenly spaced spikes.
+
+    ``scale`` is an extra full-scale headroom factor: :func:`convert`
+    folds it into every calibrated activation scale (via
+    :attr:`scale_factor`), keeping the bias/multiplier/logit algebra
+    consistent with the coarser quantization grid (1.0 = use calibration
+    as-is).
+    """
+
+    scale: float = 1.0
+
+    name: ClassVar[str] = "rate"
+    backends: ClassVar[Tuple[str, ...]] = ("jnp",)
+    kernel_dataflows: ClassVar[Tuple[str, ...]] = ()
+    pool_modes: ClassVar[Tuple[str, ...]] = ("avg",)
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.scale <= 0:
+            raise ValueError(f"scale must be positive, got {self.scale}")
+
+    @property
+    def levels(self) -> int:
+        return self.num_steps + 1
+
+    @property
+    def scale_factor(self) -> float:
+        return self.scale
+
+    def quantize(self, x, scale=1.0):
+        q = jnp.floor(x / jnp.asarray(scale, jnp.float32) * self.levels)
+        return jnp.clip(q, 0, self.max_level).astype(self.packed_dtype)
+
+    def dequantize(self, q, scale=1.0):
+        return q.astype(jnp.float32) * (
+            jnp.asarray(scale, jnp.float32) / self.levels)
+
+    def encode(self, q):
+        """Integer sigma-delta: exactly q spikes, evenly spaced, per
+        element — integer error accumulation so the round trip is exact."""
+        q = q.astype(jnp.int32)
+        T = self.num_steps
+
+        def body(err, _):
+            err = err + q
+            spike = (err >= T).astype(jnp.int8)
+            return err - spike.astype(jnp.int32) * T, spike
+
+        _, planes = jax.lax.scan(body, jnp.zeros_like(q), None, length=T)
+        return planes
+
+    def decode(self, planes):
+        return planes.astype(jnp.int32).sum(0)
+
+    def reduce_planes(self, per_step):
+        return per_step.astype(jnp.int32).sum(0)

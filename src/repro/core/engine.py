@@ -10,12 +10,19 @@ Execution paths
 * ``mode="packed"``  — packed integer levels (uint8).  This is the TPU-native
   path: one tensor per layer, radix packing == integer activation.
 * ``mode="snn"``     — paper-faithful spike-plane path: (T, ...) binary
-  planes, Horner accumulation per layer.  Bit-exact equal to "packed".
-* ``backend="kernels"`` — packed path dispatched through a
-  :func:`compile_plan` of fused-epilogue Pallas kernels (interpret-mode on
-  CPU); ``backend="jnp"`` uses core/layers.py directly.
+  planes, reduced per layer by the encoding's ``reduce_planes`` (radix:
+  Horner; rate: sum).  Bit-exact equal to "packed".
+* ``backend="kernels"`` — packed path dispatched through a compiled plan of
+  fused-epilogue Pallas kernels (interpret-mode on CPU); ``backend="jnp"``
+  uses core/layers.py directly.
 
-:func:`compile_plan` is the controller's program memory: a one-time pass
+The public entry points live in :mod:`repro.api` (``Accelerator.compile``
+-> ``Executable``); every path is parameterized by an
+:class:`~repro.core.encoding.EncodingSpec`.  :func:`run` and
+:func:`compile_plan` survive only as deprecation shims forwarding to the
+same implementations.
+
+:func:`_compile_plan_impl` is the controller's program memory: a one-time pass
 that pre-pads every weight to block multiples, folds bias + requantization
 multiplier into per-layer epilogue row vectors, picks kernel block sizes,
 and returns a single jitted closure running the whole network with
@@ -50,12 +57,76 @@ __all__ = ["run", "compile_plan", "CompiledPlan", "PlanLayerInfo",
 
 
 # ---------------------------------------------------------------------------
-# Forward execution.
+# Forward execution (the jnp reference paths, parameterized by EncodingSpec).
 # ---------------------------------------------------------------------------
 
 
-def _affine_is_last(static, idx: int) -> bool:
-    return not any(k in ("conv", "linear") for k, _ in static[idx + 1:])
+def _validate_run_args(mode, backend, method) -> None:
+    """Shared run()/facade argument validation — fail loudly, never fall
+    through to a silently slower or wrong path."""
+    if mode not in ("packed", "snn"):
+        raise ValueError(f"mode must be 'packed' or 'snn', got {mode!r}")
+    if backend not in ("jnp", "kernels"):
+        raise ValueError(
+            f"backend must be 'jnp' or 'kernels', got {backend!r}")
+    if method not in (None, "bitserial", "fused"):
+        raise ValueError(
+            f"method must be 'bitserial' or 'fused', got {method!r}")
+    if backend == "kernels" and mode == "snn":
+        raise ValueError(
+            "backend='kernels' executes the packed-level path only; "
+            "mode='snn' (spike planes) is the jnp oracle — run it with "
+            "backend='jnp'")
+
+
+def _forward(
+    qnet: conversion.QuantizedNet,
+    x: jax.Array,
+    spec: encoding.EncodingSpec,
+    mode: Literal["packed", "snn"] = "packed",
+) -> jax.Array:
+    """Reference forward on the jnp backend, generic over the encoding.
+
+    ``mode="packed"`` runs integer levels through the quantized twin;
+    ``mode="snn"`` runs (T, ...) spike planes — per-plane integer layers
+    reduced by ``spec.reduce_planes`` (radix: Horner; rate: plain sum).
+    Both are bit-exact twins by linearity for any spec whose pools the
+    net uses are declared in ``spec.pool_modes``.
+    """
+    snn = mode == "snn"
+    q = spec.quantize(x, qnet.input_scale)
+    state = spec.encode(q) if snn else q
+
+    for (kind, cfg), qp in zip(qnet.static, qnet.qlayers):
+        if kind == "conv":
+            stride, padding = cfg.get("stride", 1), cfg.get("padding", "VALID")
+            if snn:
+                per = jax.vmap(
+                    lambda p, w=qp["w_q"]: layers._int_conv(
+                        p, w, stride, padding))(state)
+                acc = spec.reduce_planes(per) + qp["b_int"]
+            else:
+                acc = layers.q_conv2d(state, qp["w_q"], qp["b_int"],
+                                      stride=stride, padding=padding)
+            state = _requant_or_logits(acc, qp, qnet, spec, snn)
+        elif kind == "linear":
+            if snn:
+                per = jax.vmap(
+                    lambda p, w=qp["w_q"]: layers._int_matmul(p, w))(state)
+                acc = spec.reduce_planes(per) + qp["b_int"]
+            else:
+                acc = layers.q_linear(state, qp["w_q"], qp["b_int"])
+            state = _requant_or_logits(acc, qp, qnet, spec, snn)
+        elif kind == "pool":
+            state = _pool(state, cfg, spec, snn)
+        elif kind == "flatten":
+            if snn:
+                state = state.reshape(state.shape[0], state.shape[1], -1)
+            else:
+                state = state.reshape(state.shape[0], -1)
+        else:
+            raise ValueError(kind)
+    return state  # float logits
 
 
 def run(
@@ -66,87 +137,45 @@ def run(
     backend: Literal["jnp", "kernels"] = "jnp",
     method: Optional[Literal["bitserial", "fused"]] = None,
 ) -> jax.Array:
-    """Run the converted net on float input ``x`` (NHWC); returns float logits.
+    """Deprecated shim — use :mod:`repro.api` instead.
 
-    ``backend="kernels"`` (packed mode) routes through a cached
-    :func:`compile_plan` — the whole layer sequence as one jitted closure of
-    fused-epilogue Pallas kernels; ``method`` picks the in-kernel dataflow
-    (default "fused") and is meaningful for that backend only.
-
-    Invalid combinations fail loudly instead of silently taking a slower
-    path: ``mode="snn"`` is the paper-faithful spike-plane oracle and only
-    exists on the ``jnp`` backend, and ``method`` without
-    ``backend="kernels"`` has nothing to select.
+    ``repro.api.Accelerator(backend=...).compile(qnet, item_shape)``
+    returns an :class:`~repro.api.Executable` for production execution;
+    ``repro.api.oracle(qnet, x, mode=...)`` is the un-jitted reference
+    (packed or spike-plane).  This shim forwards to the exact same
+    implementations the facade uses, so outputs stay bit-identical.
     """
-    if mode not in ("packed", "snn"):
-        raise ValueError(f"mode must be 'packed' or 'snn', got {mode!r}")
-    if backend not in ("jnp", "kernels"):
-        raise ValueError(
-            f"backend must be 'jnp' or 'kernels', got {backend!r}")
-    if method not in (None, "bitserial", "fused"):
-        raise ValueError(
-            f"method must be 'bitserial' or 'fused', got {method!r}")
+    warnings.warn(
+        "repro.core.engine.run() is deprecated; use repro.api.Accelerator"
+        ".compile(...) -> Executable (or repro.api.oracle for the "
+        "reference paths)", DeprecationWarning, stacklevel=2)
+    _validate_run_args(mode, backend, method)
     if backend == "kernels":
-        if mode == "snn":
-            raise ValueError(
-                "backend='kernels' executes the packed-level path only; "
-                "mode='snn' (spike planes) is the jnp oracle — run it with "
-                "backend='jnp'")
         return _cached_plan(qnet, x.shape, method or "fused")(x)
     if method is not None:
         warnings.warn(
             f"method={method!r} selects the in-kernel dataflow and is "
             "ignored with backend='jnp'; pass backend='kernels' to use it",
             UserWarning, stacklevel=2)
-
-    T = qnet.num_steps
-    q = encoding.quantize(x, T, qnet.input_scale)
-
-    if mode == "snn":
-        state = encoding.encode(q, T)  # (T, N, H, W, C) binary planes
-    else:
-        state = q
-
-    for idx, ((kind, cfg), qp) in enumerate(zip(qnet.static, qnet.qlayers)):
-        if kind == "conv":
-            stride, padding = cfg.get("stride", 1), cfg.get("padding", "VALID")
-            if mode == "snn":
-                acc = layers.snn_conv2d(state, qp["w_q"], qp["b_int"],
-                                        stride=stride, padding=padding)
-            else:
-                acc = layers.q_conv2d(state, qp["w_q"], qp["b_int"],
-                                      stride=stride, padding=padding)
-            state = _requant_or_logits(acc, qp, qnet, mode)
-        elif kind == "linear":
-            if mode == "snn":
-                acc = layers.snn_linear(state, qp["w_q"], qp["b_int"])
-            else:
-                acc = layers.q_linear(state, qp["w_q"], qp["b_int"])
-            state = _requant_or_logits(acc, qp, qnet, mode)
-        elif kind == "pool":
-            state = _pool(state, cfg, mode)
-        elif kind == "flatten":
-            if mode == "snn":
-                state = state.reshape(state.shape[0], state.shape[1], -1)
-            else:
-                state = state.reshape(state.shape[0], -1)
-        else:
-            raise ValueError(kind)
-    return state  # float logits
+    return _forward(qnet, x, qnet.spec, mode)
 
 
-def _requant_or_logits(acc, qp, qnet, mode):
+def _requant_or_logits(acc, qp, qnet, spec, snn):
     if qp["mult"] is None:  # final layer -> float logits
         return acc.astype(jnp.float32) * qnet.logit_scale
-    q = layers.q_requantize(acc, qnet.num_steps, qp["mult"])
-    if mode == "snn":
-        return encoding.encode(q, qnet.num_steps)
+    q = spec.requantize(acc, qp["mult"])
+    if snn:
+        return spec.encode(q)
     return q
 
 
-def _pool(state, cfg, mode):
+def _pool(state, cfg, spec, snn):
     w, pool_mode = cfg["window"], cfg.get("mode", "or")
-    if mode == "snn":
+    if not spec.supports_pool(pool_mode):
+        raise ValueError(
+            f"{spec.name} encoding does not preserve pool mode "
+            f"{pool_mode!r} (supported: {spec.pool_modes})")
+    if snn:
         if pool_mode == "or":
             return layers.snn_or_pool(state, w)
         if pool_mode == "avg":
@@ -155,7 +184,7 @@ def _pool(state, cfg, mode):
             return jax.vmap(lambda p: layers.q_avg_pool(p, w))(state)
         if pool_mode == "max":
             packed = layers.snn_max_pool(state, w)
-            return encoding.encode(packed, state.shape[0])
+            return spec.encode(packed)
         raise ValueError(pool_mode)
     if pool_mode == "or":
         return layers.q_or_pool(state, w)
@@ -224,6 +253,29 @@ def compile_plan(
     method: Literal["bitserial", "fused"] = "fused",
     data_parallel: int = 1,
 ) -> CompiledPlan:
+    """Deprecated shim — use :mod:`repro.api` instead.
+
+    ``repro.api.Accelerator(dataflow=method).compile(qnet, item_shape,
+    buckets=(batch,))`` returns an :class:`~repro.api.Executable` whose
+    per-bucket plans are built by the exact implementation this shim
+    forwards to, so plans stay bit-identical.
+    """
+    warnings.warn(
+        "repro.core.engine.compile_plan() is deprecated; use repro.api."
+        "Accelerator.compile(...) -> Executable", DeprecationWarning,
+        stacklevel=2)
+    return _compile_plan_impl(qnet, input_shape, method=method,
+                              data_parallel=data_parallel)
+
+
+def _compile_plan_impl(
+    qnet: conversion.QuantizedNet,
+    input_shape: Tuple[int, ...],
+    *,
+    method: Optional[str] = "fused",
+    data_parallel: int = 1,
+    spec: Optional[encoding.EncodingSpec] = None,
+) -> CompiledPlan:
     """Compile ``qnet`` into a single jitted fused-epilogue kernel pipeline.
 
     One-time work (per (net, input shape)):
@@ -252,17 +304,22 @@ def compile_plan(
     stack's scale-out lever (DESIGN.md §3).  Bit-exact equal to the
     single-device plan.
     """
+    spec = spec if spec is not None else qnet.spec
+    method = spec.validate_dataflow(method)  # kernels-capable specs only
     if data_parallel < 1:
         raise ValueError(f"data_parallel must be >= 1, got {data_parallel}")
     if data_parallel > 1:
-        return _data_parallel_plan(qnet, input_shape, method, data_parallel)
+        return _data_parallel_plan(qnet, input_shape, method, data_parallel,
+                                   spec)
     from repro.kernels import ops as kops          # deferred: optional path
     from repro.kernels.radix_conv import radix_conv2d_pallas
     from repro.kernels.radix_matmul import radix_matmul_pallas
 
-    T = qnet.num_steps
-    if T > 8:
-        raise ValueError(f"packed uint8 plans require T <= 8, got {T}")
+    T = spec.num_steps
+    if spec.max_level > 255:
+        raise ValueError(
+            f"packed uint8 plans require <= 256 levels, got {spec.levels} "
+            f"({spec.name}, T={T})")
     interp = kops._interpret()
 
     if len(input_shape) == 4:
@@ -317,7 +374,7 @@ def compile_plan(
                     return acc + p["b"]
             else:
                 bias_row, mult_row = kops.epilogue_rows(
-                    qp["b_int"], qp["mult"], cout, cop)
+                    qp["b_int"], qp["mult"], cout, cop, encoding=spec)
                 p = {"w": w_p, "bias": bias_row, "mult": mult_row}
 
                 def apply(state, p, *, pads=pads, stride=stride, bco=bco,
@@ -379,7 +436,7 @@ def compile_plan(
                     return acc + p["b"]
             else:
                 bias_row, mult_row = kops.epilogue_rows(
-                    qp["b_int"], qp["mult"], fout, np_)
+                    qp["b_int"], qp["mult"], fout, np_, encoding=spec)
                 p = {"w": w_p, "bias": bias_row, "mult": mult_row}
 
                 def apply(state, p, *, bk=bk, bn=bn, in_bits=bits,
@@ -450,7 +507,7 @@ def compile_plan(
     input_scale, logit_scale = qnet.input_scale, qnet.logit_scale
 
     def forward(params, x):
-        state = encoding.quantize(x, T, input_scale)
+        state = spec.quantize(x, input_scale)
         for (apply, _), p in zip(steps, params):
             state = apply(state, p)
         return state.astype(jnp.float32) * logit_scale
@@ -466,14 +523,22 @@ def compile_plan(
     )
 
 
-# plan cache: keyed by net identity + call signature, weakly referencing the
-# net so cache entries die with it.
+# plan cache: keyed by a weakref to the net + call signature.  The weakref
+# IS the identity component: two refs compare equal only while both resolve
+# to the same live net (a dead ref never equals a live one), so a GC'd
+# net's recycled id() can never alias a stale entry — unlike the previous
+# (id(qnet), ...) keys, where aliasing was only caught by a lookup-time
+# liveness guard.  ``QuantizedNet`` uses identity hashing (eq=False) to
+# make its weakrefs hashable.
 _PLAN_CACHE: dict = {}
 
 
+def _cache_key(qnet, *rest) -> tuple:
+    return (weakref.ref(qnet),) + rest
+
+
 def _weakref_cache_get(cache: dict, key, qnet) -> Optional[CompiledPlan]:
-    """Live-entry lookup: the id(qnet) in ``key`` may be recycled, so a hit
-    only counts if the weakref still resolves to this exact net."""
+    """Live-entry lookup (belt-and-braces: re-check the referent)."""
     hit = cache.get(key)
     if hit is not None and hit[0]() is qnet:
         return hit[1]
@@ -490,17 +555,17 @@ def _weakref_cache_prune(cache: dict) -> int:
 
 
 def _cached_plan(qnet, input_shape, method) -> CompiledPlan:
-    key = (id(qnet), tuple(input_shape), method)
+    key = _cache_key(qnet, tuple(input_shape), method)
     plan = _weakref_cache_get(_PLAN_CACHE, key, qnet)
     if plan is not None:
         return plan
     _weakref_cache_prune(_PLAN_CACHE)
-    plan = compile_plan(qnet, input_shape, method=method)
+    plan = _compile_plan_impl(qnet, input_shape, method=method)
     _PLAN_CACHE[key] = (weakref.ref(qnet), plan)
     return plan
 
 
-def _data_parallel_plan(qnet, input_shape, method, data_parallel):
+def _data_parallel_plan(qnet, input_shape, method, data_parallel, spec=None):
     """shard_map a per-device plan over the batch axis (DESIGN.md §3)."""
     from jax.sharding import PartitionSpec as P
 
@@ -512,9 +577,9 @@ def _data_parallel_plan(qnet, input_shape, method, data_parallel):
     if data_parallel > ndev:
         raise ValueError(
             f"data_parallel={data_parallel} exceeds {ndev} visible devices")
-    inner = compile_plan(
+    inner = _compile_plan_impl(
         qnet, (batch // data_parallel,) + tuple(input_shape[1:]),
-        method=method)
+        method=method, spec=spec)
     mesh = compat.make_mesh((data_parallel,), ("batch",))
     # weights replicated, input/output sharded along batch; no collectives
     # cross shards, so replication checking is moot (and trips over
@@ -562,7 +627,7 @@ class PlanCacheStats:
 
 
 class PlanCache:
-    """Batch-bucketing :func:`compile_plan` cache.
+    """Batch-bucketing compiled-plan cache (wrapped by ``api.Executable``).
 
     A serving deployment sees arbitrary request batch sizes; compiling one
     plan per size would make every novel size a multi-second stall.  The
@@ -576,8 +641,9 @@ class PlanCache:
     * or, when ``n`` exceeds the top bucket, chunks into top-bucket pieces
       plus one bucketed tail.
 
-    Plans are keyed by (net identity, bucket, item shape, method), hold the
-    net only via ``weakref`` (entries die with the ``QuantizedNet``), and
+    Plans are keyed by (weakref(net), bucket, item shape, method, encoding)
+    — the weakref is the identity component, so entries die with the
+    ``QuantizedNet`` and recycled ``id()``s can never alias — and
     ``data_parallel`` shards each bucket over the visible devices when it
     divides evenly (``gcd(bucket, n_devices)`` shards; single-device
     buckets — e.g. bucket 1 — fall back transparently).
@@ -592,6 +658,8 @@ class PlanCache:
         *,
         method: Literal["bitserial", "fused"] = "fused",
         data_parallel: Optional[int] = None,
+        encoding: Optional["encoding.EncodingSpec"] = None,
+        compile_fn: Optional[Callable] = None,
     ):
         bs = tuple(sorted({int(b) for b in buckets}))
         if not bs or bs[0] < 1:
@@ -603,8 +671,14 @@ class PlanCache:
         self.buckets = bs
         self.method = method
         self.data_parallel = data_parallel   # None -> auto (gcd with devices)
+        self.encoding = encoding             # None -> the net's own spec
+        # compile_fn(qnet, input_shape) -> callable overrides the default
+        # fused-kernel plan builder; repro.api uses it for the jnp backend
+        # (per-bucket jitted closures share the bucketing/chunking/stats
+        # machinery with kernel plans).
+        self._compile_fn = compile_fn
         self.stats = PlanCacheStats()
-        self._plans: dict = {}   # key -> (weakref(qnet), CompiledPlan)
+        self._plans: dict = {}   # key -> (weakref(qnet), plan callable)
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -634,15 +708,21 @@ class PlanCache:
     def plan_for(self, qnet: conversion.QuantizedNet, bucket: int,
                  item_shape: Tuple[int, ...]) -> CompiledPlan:
         """Cached plan for one bucket (compiles on first use)."""
-        key = (id(qnet), int(bucket), tuple(item_shape), self.method)
+        key = _cache_key(qnet, int(bucket), tuple(item_shape),
+                         self.method, self.encoding)
         plan = _weakref_cache_get(self._plans, key, qnet)
         if plan is not None:
             self.stats.hits += 1
             return plan
         self.prune()
-        plan = compile_plan(qnet, (int(bucket),) + tuple(item_shape),
-                            method=self.method,
-                            data_parallel=self._shards_for(int(bucket)))
+        shape = (int(bucket),) + tuple(item_shape)
+        if self._compile_fn is not None:
+            plan = self._compile_fn(qnet, shape)
+        else:
+            plan = _compile_plan_impl(
+                qnet, shape, method=self.method,
+                data_parallel=self._shards_for(int(bucket)),
+                spec=self.encoding)
         self._plans[key] = (weakref.ref(qnet), plan)
         self.stats.compiles += 1
         return plan

@@ -84,8 +84,8 @@ def sum_pool_bits(bits: int, window: int) -> int:
     The paper's pooling unit has no output requantizer, so an avg (sum) pool
     widens activations from T to ``sum_pool_bits(T, window)`` bits until the
     next layer's multiplier folds the window division back in (DESIGN.md
-    §2); engine.compile_plan uses this to decide whether the carry still
-    fits the packed byte format.
+    §2); the engine's plan compilation uses this to decide whether the
+    carry still fits the packed byte format.
     """
     return max(1, int(((1 << bits) - 1) * window * window).bit_length())
 

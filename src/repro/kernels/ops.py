@@ -18,11 +18,12 @@ tests/test_fused_epilogue.py sweep shapes, T, strides, methods).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.encoding import EncodingSpec
 from repro.kernels.radix_conv import radix_conv2d_pallas
 from repro.kernels.radix_matmul import radix_matmul_pallas
 from repro.kernels.spike_encode import spike_encode_pallas
@@ -38,6 +39,21 @@ __all__ = [
 
 def _interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _steps(num_steps: Union[int, EncodingSpec]) -> int:
+    """Accept a bare T or an :class:`EncodingSpec` wherever a kernel needs
+    the time-step count; specs must declare a kernel dataflow (the kernel
+    epilogue implements their clip-to-max-level requantization)."""
+    if isinstance(num_steps, EncodingSpec):
+        if not num_steps.kernel_dataflows:
+            raise ValueError(
+                f"{num_steps.name} encoding does not run on the kernels "
+                f"backend (supported: {num_steps.backends})")
+        num_steps.validate_dataflow(None)   # pins levels == 2^T (the
+        #                                     epilogue's hardwired clip)
+        return num_steps.num_steps
+    return int(num_steps)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -64,13 +80,19 @@ def epilogue_rows(
     mult,
     n: int,
     n_pad: int,
+    *,
+    encoding: Optional[EncodingSpec] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fold (bias, requant multiplier) into kernel-epilogue row vectors.
 
     Returns ``(bias, mult)`` of shape ``(1, n_pad)``; the padding lanes get
     ``mult == 0`` so out-of-range output channels requantize to level 0 —
     which is what lets a compiled plan keep activations channel-padded
-    between layers (core/engine.compile_plan)."""
+    between layers (core/engine).  ``encoding`` names the spec whose
+    requantization the epilogue implements; it must be kernels-capable
+    (the in-kernel clip targets its ``max_level``)."""
+    if encoding is not None:
+        _steps(encoding)   # validates kernel capability
     bias = jnp.zeros((n,), jnp.int32) if b_int is None \
         else jnp.asarray(b_int, jnp.int32).reshape(n)
     mrow = jnp.broadcast_to(
@@ -84,15 +106,17 @@ def radix_matmul(
     x_q: jax.Array,
     w_q: jax.Array,
     b_int: jax.Array | None,
-    num_steps: int,
+    num_steps: Union[int, EncodingSpec],
     *,
     method: str = "bitserial",
     mult=None,
 ) -> jax.Array:
     """(..., K) packed levels @ (K, N) int8 (+bias) -> (..., N).
 
+    ``num_steps`` may be a bare T or a kernels-capable ``EncodingSpec``.
     ``mult=None``: raw int32 accumulator (+bias outside the kernel).
     ``mult`` given: fused output-logic epilogue -> packed uint8 levels."""
+    num_steps = _steps(num_steps)
     lead = x_q.shape[:-1]
     k = x_q.shape[-1]
     n = w_q.shape[-1]
@@ -122,7 +146,7 @@ def radix_conv2d(
     x_q: jax.Array,
     w_q: jax.Array,
     b_int: jax.Array | None,
-    num_steps: int,
+    num_steps: Union[int, EncodingSpec],
     *,
     stride: int = 1,
     padding: str = "VALID",
@@ -131,10 +155,12 @@ def radix_conv2d(
 ) -> jax.Array:
     """NHWC packed levels * HWIO int8 -> NHWC conv (+bias).
 
+    ``num_steps`` may be a bare T or a kernels-capable ``EncodingSpec``.
     SAME padding is pre-padded (XLA-exact pads for any stride); stride > 1
     subsamples *inside* the kernel grid — only the h_out x w_out surviving
     outputs are ever computed.  ``mult`` turns on the fused output-logic
     epilogue (packed uint8 levels out)."""
+    num_steps = _steps(num_steps)
     kh, kw, cin, cout = w_q.shape
     if padding == "SAME":
         ph = same_pads(x_q.shape[1], kh, stride)
@@ -160,9 +186,10 @@ def radix_conv2d(
 
 
 def radix_encode(
-    x: jax.Array, num_steps: int, scale: float = 1.0
+    x: jax.Array, num_steps: Union[int, EncodingSpec], scale: float = 1.0
 ) -> jax.Array:
     """float -> packed radix levels (uint8), any shape."""
+    num_steps = _steps(num_steps)
     lead = x.shape
     x2 = x.reshape(-1, lead[-1]) if x.ndim > 1 else x.reshape(1, -1)
     r, c = x2.shape

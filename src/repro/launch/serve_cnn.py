@@ -4,9 +4,10 @@ The paper deploys single images on the FPGA; the production twin has to
 survive *traffic*: arbitrary request sizes arriving continuously.  This
 driver stacks three layers (DESIGN.md §3):
 
-1. **Bucketed plan cache** (``engine.PlanCache``): plans pre-compiled for a
-   bucket ladder; requests pad to the nearest bucket, so no request size
-   ever recompiles on the hot path.
+1. **Compiled executable** (``repro.api.Accelerator.compile`` ->
+   ``Executable``): plans pre-compiled for a bucket ladder; requests pad
+   to the nearest bucket, so no request size ever recompiles on the hot
+   path.
 2. **Data-parallel plans**: each bucket's plan is ``shard_map``-ped over
    the batch axis across visible devices (weights replicated), with
    transparent single-device fallback.
@@ -17,6 +18,7 @@ driver stacks three layers (DESIGN.md §3):
 Usage:
   python -m repro.launch.serve_cnn --arch vgg11 --smoke
   python -m repro.launch.serve_cnn --arch lenet5 --requests 64 --buckets 1,4,8
+  python -m repro.launch.serve_cnn --arch lenet5 --smoke --dataflow bitserial
 """
 
 from __future__ import annotations
@@ -31,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import conversion, engine
 
 __all__ = [
@@ -78,12 +81,19 @@ def build_qnet(
     *,
     smoke: bool = False,
     pool_mode: str = "or",
-    num_steps: int = 4,
+    num_steps: Optional[int] = None,
+    encoding: Optional[api.EncodingSpec] = None,
     weight_bits: int = 3,
     calib_batch: int = 4,
     seed: int = 0,
 ) -> Tuple[conversion.QuantizedNet, Tuple[int, int, int]]:
-    """(converted net, item shape) for an arch id, synthetic calibration."""
+    """(converted net, item shape) for an arch id, synthetic calibration.
+
+    ``encoding`` selects the target spec (default: radix at ``num_steps``,
+    itself defaulting to 4).  Both are forwarded to ``convert`` as given,
+    so a contradicting (num_steps, encoding) pair fails loudly there."""
+    if encoding is None and num_steps is None:
+        num_steps = 4
     spec = ARCHS[arch.replace("-", "_")]
     maker = importlib.import_module(spec.module)
     preset = spec.smoke if smoke else spec.full
@@ -96,7 +106,7 @@ def build_qnet(
     calib = jnp.asarray(rng.uniform(0, 1, (calib_batch,) + tuple(input_hw)),
                         jnp.float32)
     qnet = conversion.convert(static, params, calib, num_steps=num_steps,
-                              weight_bits=weight_bits)
+                              encoding=encoding, weight_bits=weight_bits)
     return qnet, tuple(input_hw)
 
 
@@ -106,7 +116,11 @@ def build_qnet(
 
 
 class CNNServer:
-    """One converted net behind a bucketed plan cache."""
+    """One converted net behind a compiled :class:`repro.api.Executable`.
+
+    The server owns no execution machinery of its own: batching buckets,
+    plan caching, data-parallel sharding and the stats counters all live
+    on the executable (``server.exe``)."""
 
     def __init__(
         self,
@@ -114,18 +128,24 @@ class CNNServer:
         item_shape: Tuple[int, ...],
         *,
         buckets: Sequence[int] = engine.DEFAULT_BUCKETS,
-        method: str = "fused",
+        dataflow: Optional[str] = None,
+        backend: str = "kernels",
         data_parallel: Optional[int] = None,
-        cache: Optional[engine.PlanCache] = None,
+        executable: Optional[api.Executable] = None,
     ):
         self.qnet = qnet
         self.item_shape = tuple(item_shape)
-        self.cache = cache if cache is not None else engine.PlanCache(
-            buckets, method=method, data_parallel=data_parallel)
+        self.exe = executable if executable is not None else api.Accelerator(
+            backend=backend, dataflow=dataflow,
+        ).compile(qnet, self.item_shape, parallel=data_parallel,
+                  buckets=buckets)
 
     def warmup(self) -> None:
         """Compile every bucket up front (serving never compiles again)."""
-        self.cache.warmup(self.qnet, self.item_shape)
+        self.exe.warmup()
+
+    def stats(self) -> dict:
+        return self.exe.stats()
 
     def infer(self, x) -> jax.Array:
         """(n,) + item_shape float images -> (n, classes) float logits."""
@@ -134,7 +154,7 @@ class CNNServer:
             raise ValueError(
                 f"request item shape {tuple(x.shape[1:])} != server's "
                 f"{self.item_shape}")
-        return self.cache.run(self.qnet, x)
+        return self.exe(x)
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +203,7 @@ class MicroBatchQueue:
         clock: Callable[[], float] = time.monotonic,
     ):
         self.server = server
-        self.max_batch = int(max_batch or server.cache.buckets[-1])
+        self.max_batch = int(max_batch or server.exe.buckets[-1])
         self.timeout_s = float(timeout_s)
         self.clock = clock
         self._pending: List[Tuple[np.ndarray, Ticket]] = []
@@ -286,7 +306,7 @@ def main() -> None:
     ap.add_argument("--num-steps", type=int, default=4)
     ap.add_argument("--buckets", default="1,8,32",
                     help="comma-separated batch bucket ladder")
-    ap.add_argument("--method", default="fused",
+    ap.add_argument("--dataflow", default="fused",
                     choices=["fused", "bitserial"])
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-request", type=int, default=8,
@@ -300,7 +320,7 @@ def main() -> None:
     qnet, item = build_qnet(args.arch, smoke=args.smoke,
                             pool_mode=args.pool_mode,
                             num_steps=args.num_steps, seed=args.seed)
-    server = CNNServer(qnet, item, buckets=buckets, method=args.method,
+    server = CNNServer(qnet, item, buckets=buckets, dataflow=args.dataflow,
                        data_parallel=args.data_parallel)
     print(f"[serve_cnn] {args.arch} item={item} buckets={buckets} "
           f"devices={len(jax.devices())}")
@@ -308,7 +328,7 @@ def main() -> None:
     server.warmup()
     print(f"[serve_cnn] warmed {len(buckets)} bucket plans in "
           f"{time.monotonic() - t0:.1f}s; "
-          f"compiles={server.cache.stats.compiles}")
+          f"compiles={server.stats()['compiles']}")
 
     queue = MicroBatchQueue(server, timeout_s=args.timeout_ms / 1e3)
     rng = np.random.default_rng(args.seed)
@@ -319,14 +339,14 @@ def main() -> None:
     lat = [t.latency_s * 1e3 for t in tickets]
     p50, p95 = _percentiles(lat)
     images = int(sum(t.size for t in tickets))
-    stats = server.cache.stats
+    stats = server.stats()
     print(f"[serve_cnn] {len(tickets)} requests / {images} images in "
           f"{wall:.2f}s -> {images / wall:.1f} img/s; "
           f"latency p50={p50:.1f}ms p95={p95:.1f}ms")
-    print(f"[serve_cnn] cache: hits={stats.hits} compiles={stats.compiles} "
-          f"(steady-state recompiles="
-          f"{stats.compiles - len(server.cache.buckets)}) "
-          f"padded_rows={stats.padded_rows} flushes={queue.flushes}")
+    print(f"[serve_cnn] cache: hits={stats['hits']} "
+          f"compiles={stats['compiles']} (steady-state recompiles="
+          f"{stats['compiles'] - len(server.exe.buckets)}) "
+          f"padded_rows={stats['padded_rows']} flushes={queue.flushes}")
 
 
 if __name__ == "__main__":

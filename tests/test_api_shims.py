@@ -1,0 +1,125 @@
+"""Deprecation shims: engine.run / engine.compile_plan.
+
+The legacy entry points survive only as shims forwarding to the
+``repro.api`` implementations.  Contract (CI runs this file with
+``-W "error:repro.:DeprecationWarning"`` — pytest treats the cmdline
+message as a literal prefix — so an unexpected repro deprecation
+anywhere in the run fails loudly):
+
+* every call emits exactly one ``DeprecationWarning`` naming the
+  replacement,
+* outputs are bit-identical to the ``Accelerator``/``oracle`` path on
+  LeNet-5 and Fang CNN-2 (both backends, both dataflows),
+* the legacy argument validation still fails loudly.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import conversion, engine
+from repro.models import fang, lenet
+
+RNG = np.random.default_rng(17)
+
+
+def _make(maker, pool_mode="or", T=4, batch=3, width_mult=0.25):
+    static, params, input_hw = maker.make(pool_mode=pool_mode,
+                                          width_mult=width_mult)
+    calib = jnp.asarray(RNG.uniform(0, 1, (4,) + input_hw), jnp.float32)
+    qnet = conversion.convert(static, params, calib, num_steps=T)
+    x = jnp.asarray(RNG.uniform(0, 1, (batch,) + input_hw), jnp.float32)
+    return qnet, x
+
+
+def _deprecations(record):
+    return [w for w in record
+            if issubclass(w.category, DeprecationWarning)]
+
+
+@pytest.mark.parametrize("maker", [lenet, fang], ids=["lenet5", "fang_cnn"])
+class TestShimBitExact:
+    def test_run_jnp_matches_oracle(self, maker):
+        qnet, x = _make(maker)
+        for mode in ("packed", "snn"):
+            with pytest.warns(DeprecationWarning,
+                              match=r"repro\.core\.engine\.run"):
+                old = engine.run(qnet, x, mode=mode, backend="jnp")
+            np.testing.assert_array_equal(
+                np.asarray(old), np.asarray(api.oracle(qnet, x, mode=mode)))
+
+    def test_run_kernels_matches_executable(self, maker):
+        qnet, x = _make(maker)
+        exe = api.Accelerator().compile(qnet, x.shape[1:],
+                                        buckets=(x.shape[0],))
+        with pytest.warns(DeprecationWarning,
+                          match=r"repro\.core\.engine\.run"):
+            old = engine.run(qnet, x, backend="kernels")
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(exe(x)))
+
+    def test_compile_plan_matches_executable(self, maker):
+        qnet, x = _make(maker)
+        for dataflow in ("fused", "bitserial"):
+            exe = api.Accelerator(dataflow=dataflow).compile(
+                qnet, x.shape[1:], buckets=(x.shape[0],))
+            with pytest.warns(DeprecationWarning,
+                              match=r"repro\.core\.engine\.compile_plan"):
+                plan = engine.compile_plan(qnet, x.shape, method=dataflow)
+            np.testing.assert_array_equal(np.asarray(plan(x)),
+                                          np.asarray(exe(x)))
+
+
+class TestShimWarnings:
+    def test_exactly_one_deprecation_per_call(self):
+        qnet, x = _make(lenet)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            engine.run(qnet, x)
+        assert len(_deprecations(rec)) == 1
+        assert "repro.api" in str(_deprecations(rec)[0].message)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            engine.compile_plan(qnet, x.shape)
+        assert len(_deprecations(rec)) == 1
+        assert "repro.api" in str(_deprecations(rec)[0].message)
+
+    def test_run_shim_still_caches_plans(self):
+        qnet, x = _make(lenet)
+        with pytest.warns(DeprecationWarning):
+            engine.run(qnet, x, backend="kernels")
+        plan = engine._cached_plan(qnet, x.shape, "fused")
+        with pytest.warns(DeprecationWarning):
+            engine.run(qnet, x, backend="kernels")
+        assert engine._cached_plan(qnet, x.shape, "fused") is plan
+
+
+class TestShimArgValidation:
+    """The legacy kwarg surface keeps failing loudly (no silent
+    fall-through), on top of its deprecation warning."""
+
+    def test_snn_on_kernels_backend_raises(self):
+        qnet, x = _make(lenet, batch=1)
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="packed-level path only"):
+                engine.run(qnet, x, mode="snn", backend="kernels")
+
+    def test_unknown_mode_backend_method_raise(self):
+        qnet, x = _make(lenet, batch=1)
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="mode"):
+                engine.run(qnet, x, mode="spiking")
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="backend"):
+                engine.run(qnet, x, backend="xla")
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="method"):
+                engine.run(qnet, x, backend="kernels", method="horner")
+
+    def test_method_on_jnp_backend_warns(self):
+        qnet, x = _make(lenet, batch=1)
+        with pytest.warns(UserWarning, match="ignored with backend='jnp'"):
+            with pytest.warns(DeprecationWarning):
+                engine.run(qnet, x, backend="jnp", method="bitserial")

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import conversion, encoding, engine
 from repro.core.hwmodel import CostModel, HwConfig, LENET5, network_layers
 
@@ -44,8 +45,8 @@ class TestConversion:
     def test_snn_packed_bitexact(self, x, pool_mode, T):
         static, params = _tiny_net(pool_mode)
         qnet = conversion.convert(static, params, x, num_steps=T, weight_bits=3)
-        lp = engine.run(qnet, x, mode="packed")
-        ls = engine.run(qnet, x, mode="snn")
+        lp = api.oracle(qnet, x, mode="packed")
+        ls = api.oracle(qnet, x, mode="snn")
         np.testing.assert_array_equal(np.asarray(lp), np.asarray(ls))
 
     def test_weight_bits_respected(self, x):
@@ -64,7 +65,7 @@ class TestConversion:
         errs = []
         for T in (2, 4, 6, 8):
             qnet = conversion.convert(static, params, x, num_steps=T, weight_bits=8)
-            lq = engine.run(qnet, x, mode="packed")
+            lq = api.oracle(qnet, x, mode="packed")
             errs.append(float(jnp.mean(jnp.abs(lq - ref))))
         assert errs[-1] < errs[0]
         assert errs[2] < errs[0]
@@ -73,7 +74,7 @@ class TestConversion:
         static, params = _tiny_net()
         ref = np.asarray(conversion.float_forward(static, params, x)).argmax(-1)
         qnet = conversion.convert(static, params, x, num_steps=6, weight_bits=8)
-        got = np.asarray(engine.run(qnet, x, mode="packed")).argmax(-1)
+        got = np.asarray(api.oracle(qnet, x, mode="packed")).argmax(-1)
         assert (ref == got).mean() >= 0.75
 
 

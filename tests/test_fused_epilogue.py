@@ -6,9 +6,10 @@ Two contracts:
    emitting packed uint8) is bit-exact against the ``ref.py`` oracle +
    ``layers.q_requantize`` composition across T, stride, padding, method —
    for both the matmul and the conv kernel.
-2. ``engine.compile_plan`` (whole-network fused-kernel closure, activations
-   packed uint8 end-to-end) equals ``engine.run(backend="jnp")`` exactly on
-   the paper's LeNet-5 and Fang CNN-2 configurations.
+2. The compiled fused-kernel plans behind ``api.Accelerator.compile``
+   (whole-network closures, activations packed uint8 end-to-end) equal
+   ``api.oracle(mode="packed")`` exactly on the paper's LeNet-5 and Fang
+   CNN-2 configurations.
 """
 
 import jax
@@ -16,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import conversion, engine, layers
+from repro import api
+from repro.core import conversion, layers
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(7)
@@ -136,37 +138,52 @@ def _converted(maker, pool_mode, T, batch=4, width_mult=0.25):
 
 @pytest.mark.parametrize("pool_mode", ["or", "avg", "max"])
 @pytest.mark.parametrize("T", [3, 4])
-def test_compile_plan_lenet_matches_jnp(pool_mode, T):
+def test_compiled_plan_lenet_matches_oracle(pool_mode, T):
     from repro.models import lenet
     qnet, x = _converted(lenet, pool_mode, T)
-    ref_logits = engine.run(qnet, x, mode="packed", backend="jnp")
-    for method in ("fused", "bitserial"):
-        plan = engine.compile_plan(qnet, x.shape, method=method)
-        np.testing.assert_array_equal(np.asarray(plan(x)),
+    ref_logits = api.oracle(qnet, x, mode="packed")
+    for dataflow in ("fused", "bitserial"):
+        exe = api.Accelerator(dataflow=dataflow).compile(
+            qnet, x.shape[1:], buckets=(x.shape[0],))
+        np.testing.assert_array_equal(np.asarray(exe(x)),
                                       np.asarray(ref_logits))
 
 
 @pytest.mark.parametrize("pool_mode", ["or", "avg"])
-def test_compile_plan_fang_matches_jnp(pool_mode):
+def test_compiled_plan_fang_matches_oracle(pool_mode):
     from repro.models import fang
     qnet, x = _converted(fang, pool_mode, 4)
-    ref_logits = engine.run(qnet, x, mode="packed", backend="jnp")
-    plan = engine.compile_plan(qnet, x.shape)
-    np.testing.assert_array_equal(np.asarray(plan(x)),
+    ref_logits = api.oracle(qnet, x, mode="packed")
+    exe = api.Accelerator().compile(qnet, x.shape[1:], buckets=(x.shape[0],))
+    np.testing.assert_array_equal(np.asarray(exe(x)),
                                   np.asarray(ref_logits))
 
 
-def test_engine_run_kernels_backend_routes_through_plan():
+def test_executable_reuses_bucket_plans():
     from repro.models import lenet
     qnet, x = _converted(lenet, "or", 4)
-    a = engine.run(qnet, x, mode="packed", backend="kernels")
-    b = engine.run(qnet, x, mode="packed", backend="jnp")
+    exe = api.Accelerator().compile(qnet, x.shape[1:], buckets=(x.shape[0],))
+    a = exe(x)
+    b = api.oracle(qnet, x, mode="packed")
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # same (qnet, shape, method) hits the plan cache
-    k = (id(qnet), x.shape, "fused")
-    assert k in engine._PLAN_CACHE
-    plan = engine._PLAN_CACHE[k][1]
-    assert engine._cached_plan(qnet, x.shape, "fused") is plan
+    # repeated calls hit the same compiled bucket plan
+    plan = exe.plan_for(x.shape[0])
+    assert exe.plan_for(x.shape[0]) is plan
+    stats = exe.stats()
+    assert stats["compiles"] == 1 and stats["hits"] >= 2
+
+
+@pytest.mark.parametrize("T", [1, 2, 4, 8])
+def test_radix_kernels_bit_exact_across_T(T):
+    """Acceptance sweep: RadixEncoding stays bit-exact on the kernels
+    backend across T in {1, 2, 4, 8} through the facade."""
+    from repro.models import lenet
+    qnet, x = _converted(lenet, "or", T, batch=3)
+    assert qnet.spec == api.RadixEncoding(T)
+    exe = api.Accelerator(backend="kernels").compile(
+        qnet, x.shape[1:], buckets=(x.shape[0],))
+    np.testing.assert_array_equal(
+        np.asarray(exe(x)), np.asarray(api.oracle(qnet, x, mode="packed")))
 
 
 def test_plan_avg_pool_wide_carry_T8():
@@ -174,9 +191,9 @@ def test_plan_avg_pool_wide_carry_T8():
     that edge while staying bit-exact."""
     from repro.models import fang
     qnet, x = _converted(fang, "avg", 8, batch=2)
-    ref_logits = engine.run(qnet, x, mode="packed", backend="jnp")
-    plan = engine.compile_plan(qnet, x.shape)
-    np.testing.assert_array_equal(np.asarray(plan(x)),
+    ref_logits = api.oracle(qnet, x, mode="packed")
+    exe = api.Accelerator().compile(qnet, x.shape[1:], buckets=(2,))
+    np.testing.assert_array_equal(np.asarray(exe(x)),
                                   np.asarray(ref_logits))
     assert layers.sum_pool_bits(8, 2) > 8
 
@@ -184,7 +201,8 @@ def test_plan_avg_pool_wide_carry_T8():
 def test_plan_activation_traffic_model():
     from repro.models import lenet
     qnet, x = _converted(lenet, "or", 4, batch=1)
-    traffic = engine.compile_plan(qnet, x.shape).activation_traffic()
+    traffic = api.Accelerator().compile(qnet, x.shape[1:],
+                                        buckets=(1,)).traffic()
     # every inter-layer tensor is packed uint8 except the final logits acc
     dtypes = [l["out_dtype"] for l in traffic["layers"]]
     assert dtypes[-1] == "int32" and set(dtypes[:-1]) == {"uint8"}

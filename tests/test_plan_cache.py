@@ -1,19 +1,23 @@
-"""Batch-bucketing plan cache + engine.run argument validation.
+"""Batch-bucketing plan cache behavior + cache-key identity hygiene.
 
 The serving contract (DESIGN.md §3): arbitrary request sizes never
 recompile on the hot path.  Requests pad up to a pre-compiled bucket (or
 chunk by the top bucket), results slice back bit-exactly, cache entries
 die with their ``QuantizedNet``, and the stats counters prove all of it.
+Public-surface behavior runs through ``repro.api.Executable``; the
+low-level weakref keying/pruning mechanics are pinned directly on the
+engine's internal ``PlanCache``/``_cached_plan`` machinery.
 """
 
 import gc
-import warnings
+import weakref
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import conversion, engine
 from repro.models import lenet
 
@@ -29,6 +33,10 @@ def _qnet(T=4, width_mult=0.25, pool_mode="or"):
 
 def _x(batch, input_hw):
     return jnp.asarray(RNG.uniform(0, 1, (batch,) + input_hw), jnp.float32)
+
+
+def _exe(qnet, input_hw, buckets, **kw):
+    return api.Accelerator(**kw).compile(qnet, input_hw, buckets=buckets)
 
 
 # ---------------------------------------------------------------------------
@@ -56,51 +64,51 @@ def test_bucket_ladder_selection():
 
 @pytest.mark.parametrize("n", [1, 2, 3, 5, 8, 11, 19])
 def test_pad_slice_roundtrip_bit_exact(n):
-    """Any request size through the ladder == the direct jnp path; padding
+    """Any request size through the ladder == the direct oracle; padding
     rows never leak into the sliced-back logits."""
     qnet, input_hw = _qnet()
-    cache = engine.PlanCache(buckets=(1, 4, 8))
+    exe = _exe(qnet, input_hw, (1, 4, 8))
     x = _x(n, input_hw)
-    ref = engine.run(qnet, x, mode="packed", backend="jnp")
-    got = cache.run(qnet, x)
+    ref = api.oracle(qnet, x, mode="packed")
+    got = exe(x)
     assert got.shape == ref.shape
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
 def test_cache_hit_on_repeated_shapes():
     qnet, input_hw = _qnet()
-    cache = engine.PlanCache(buckets=(1, 4))
-    cache.run(qnet, _x(3, input_hw))
-    compiles = cache.stats.compiles
-    hits = cache.stats.hits
-    cache.run(qnet, _x(3, input_hw))
-    cache.run(qnet, _x(2, input_hw))     # same bucket (4)
-    assert cache.stats.compiles == compiles
-    assert cache.stats.hits == hits + 2
+    exe = _exe(qnet, input_hw, (1, 4))
+    exe(_x(3, input_hw))
+    compiles = exe.stats()["compiles"]
+    hits = exe.stats()["hits"]
+    exe(_x(3, input_hw))
+    exe(_x(2, input_hw))     # same bucket (4)
+    assert exe.stats()["compiles"] == compiles
+    assert exe.stats()["hits"] == hits + 2
 
 
 def test_no_recompiles_across_mixed_sizes_after_warmup():
     qnet, input_hw = _qnet()
-    cache = engine.PlanCache(buckets=(1, 4, 8))
-    cache.warmup(qnet, input_hw)
-    assert cache.stats.compiles == 3
+    exe = _exe(qnet, input_hw, (1, 4, 8)).warmup()
+    assert exe.stats()["compiles"] == 3
     for n in (5, 1, 3, 8, 2, 17, 4, 7):              # 17 chunks via top
-        cache.run(qnet, _x(n, input_hw))
-    assert cache.stats.compiles == 3                 # zero steady-state
-    assert cache.stats.padded_rows > 0
-    assert cache.stats.executions > 8                # chunking ran extra
+        exe(_x(n, input_hw))
+    stats = exe.stats()
+    assert stats["compiles"] == 3                    # zero steady-state
+    assert stats["padded_rows"] > 0
+    assert stats["executions"] > 8                   # chunking ran extra
 
 
 def test_oversize_request_chunks_by_top_bucket():
     qnet, input_hw = _qnet()
-    cache = engine.PlanCache(buckets=(2, 4))
+    exe = _exe(qnet, input_hw, (2, 4))
     x = _x(11, input_hw)                             # 4 + 4 + pad(3->4)
-    ref = engine.run(qnet, x, mode="packed", backend="jnp")
-    execs = cache.stats.executions
-    got = cache.run(qnet, x)
+    ref = api.oracle(qnet, x, mode="packed")
+    execs = exe.stats()["executions"]
+    got = exe(x)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
-    assert cache.stats.executions == execs + 3
-    assert cache.stats.padded_rows == 1
+    assert exe.stats()["executions"] == execs + 3
+    assert exe.stats()["padded_rows"] == 1
 
 
 def test_weakref_pruning_on_net_gc():
@@ -129,65 +137,79 @@ def test_weakref_pruning_on_net_gc():
     assert all(r() is not None for r, _ in cache._plans.values())
 
 
+# ---------------------------------------------------------------------------
+# Cache-key identity: keyed by the weakref itself, never a recyclable id().
+# ---------------------------------------------------------------------------
+
+
+def test_cached_plan_key_survives_id_recycling():
+    """Regression for the old ``(id(qnet), shape, method)`` keys: after a
+    net dies, CPython readily hands its id() to the next allocation, so an
+    id-keyed dict entry for net A could be *found* by lookalike net B.
+    Keys are now ``(weakref(qnet), ...)``: a dead ref never compares equal
+    to a live one, so the collision is structurally impossible — B must
+    always get its own freshly compiled plan."""
+    qnet, input_hw = _qnet()
+    shape = (1,) + input_hw
+    plan_a = engine._cached_plan(qnet, shape, "fused")
+    ref_a = weakref.ref(qnet)
+    key_a = (ref_a, shape, "fused")
+    assert key_a in engine._PLAN_CACHE
+    recycled = id(qnet)
+    del qnet
+    gc.collect()
+    assert ref_a() is None
+    # force the historical collision: allocate nets until one lands on the
+    # dead net's id (usually the first try — same type, same size class).
+    q_b = None
+    for _ in range(8):
+        cand, _hw = _qnet()
+        if id(cand) == recycled:
+            q_b = cand
+            break
+    if q_b is None:                                  # allocator didn't reuse
+        q_b, _hw = _qnet()
+    # the dead ref can never alias the new net's key ...
+    assert (weakref.ref(q_b), shape, "fused") != key_a
+    # ... so B compiles its own plan instead of being served A's.
+    plan_b = engine._cached_plan(q_b, shape, "fused")
+    assert plan_b is not plan_a
+    assert engine._cached_plan(q_b, shape, "fused") is plan_b
+
+
+def test_plan_cache_keys_are_weakrefs():
+    qnet, input_hw = _qnet()
+    cache = engine.PlanCache(buckets=(1,))
+    cache.run(qnet, _x(1, input_hw))
+    (key,) = cache._plans.keys()
+    assert isinstance(key[0], weakref.ref) and key[0]() is qnet
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel bucket plans.
+# ---------------------------------------------------------------------------
+
+
 def test_data_parallel_bucket_plans_match(monkeypatch):
     """Buckets shard over devices (gcd fallback) and stay bit-exact; the
     test session runs with 8 placeholder CPU devices (conftest.py)."""
     qnet, input_hw = _qnet()
     ndev = len(jax.devices())
-    cache = engine.PlanCache(buckets=(1, 8))
-    plans = cache.warmup(qnet, input_hw)
+    exe = _exe(qnet, input_hw, (1, 8)).warmup()
+    plans = [exe.plan_for(b) for b in exe.buckets]
     assert plans[0].data_parallel == 1               # bucket 1: fallback
     assert plans[1].data_parallel == np.gcd(8, ndev)
     x = _x(6, input_hw)
-    ref = engine.run(qnet, x, mode="packed", backend="jnp")
-    np.testing.assert_array_equal(np.asarray(cache.run(qnet, x)),
-                                  np.asarray(ref))
+    ref = api.oracle(qnet, x, mode="packed")
+    np.testing.assert_array_equal(np.asarray(exe(x)), np.asarray(ref))
 
 
 def test_data_parallel_validation():
     qnet, input_hw = _qnet()
     with pytest.raises(ValueError, match="not divisible"):
-        engine.compile_plan(qnet, (3,) + input_hw, data_parallel=2)
+        engine._compile_plan_impl(qnet, (3,) + input_hw, data_parallel=2)
     with pytest.raises(ValueError, match="devices"):
-        engine.compile_plan(qnet, (1024,) + input_hw,
-                            data_parallel=512)
+        engine._compile_plan_impl(qnet, (1024,) + input_hw,
+                                  data_parallel=512)
     with pytest.raises(ValueError, match="data_parallel"):
-        engine.compile_plan(qnet, (4,) + input_hw, data_parallel=0)
-
-
-# ---------------------------------------------------------------------------
-# engine.run argument validation (previously silent fall-throughs).
-# ---------------------------------------------------------------------------
-
-
-class TestRunArgValidation:
-    def test_snn_on_kernels_backend_raises(self):
-        qnet, input_hw = _qnet()
-        with pytest.raises(ValueError, match="packed-level path only"):
-            engine.run(qnet, _x(1, input_hw), mode="snn", backend="kernels")
-
-    def test_unknown_mode_backend_method_raise(self):
-        qnet, input_hw = _qnet()
-        x = _x(1, input_hw)
-        with pytest.raises(ValueError, match="mode"):
-            engine.run(qnet, x, mode="spiking")
-        with pytest.raises(ValueError, match="backend"):
-            engine.run(qnet, x, backend="xla")
-        with pytest.raises(ValueError, match="method"):
-            engine.run(qnet, x, backend="kernels", method="horner")
-
-    def test_method_on_jnp_backend_warns(self):
-        qnet, input_hw = _qnet()
-        x = _x(1, input_hw)
-        with pytest.warns(UserWarning, match="ignored with backend='jnp'"):
-            engine.run(qnet, x, backend="jnp", method="bitserial")
-
-    def test_default_combinations_stay_silent(self):
-        qnet, input_hw = _qnet()
-        x = _x(1, input_hw)
-        with warnings.catch_warnings():
-            warnings.simplefilter("error")
-            engine.run(qnet, x)
-            engine.run(qnet, x, mode="snn")
-            engine.run(qnet, x, backend="kernels")
-            engine.run(qnet, x, backend="kernels", method="bitserial")
+        engine._compile_plan_impl(qnet, (4,) + input_hw, data_parallel=0)

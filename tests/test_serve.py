@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import conversion, engine
+from repro import api
+from repro.core import conversion
 from repro.launch import serve_cnn
 from repro.models import lenet
 
@@ -88,8 +89,7 @@ def test_queue_results_bit_exact_per_request(server):
     tickets = [q.submit(r) for r in reqs]
     q.flush()
     for r, t in zip(reqs, tickets):
-        ref = engine.run(server.qnet, jnp.asarray(r), mode="packed",
-                         backend="jnp")
+        ref = api.oracle(server.qnet, jnp.asarray(r), mode="packed")
         np.testing.assert_array_equal(np.asarray(t.result), np.asarray(ref))
 
 
@@ -99,13 +99,13 @@ def test_queue_results_bit_exact_per_request(server):
 
 
 def test_mixed_stream_zero_steady_state_recompiles(server):
-    compiles = server.cache.stats.compiles
+    compiles = server.stats()["compiles"]
     q = serve_cnn.MicroBatchQueue(server, timeout_s=0.0)   # flush each submit
     sizes = [1, 3, 8, 2, 6, 13, 1, 7, 4, 29]               # incl. oversize
     tickets = serve_cnn.run_request_stream(q, sizes, seed=7)
     assert all(t.done for t in tickets)
     assert [t.size for t in tickets] == sizes
-    assert server.cache.stats.compiles == compiles          # zero recompiles
+    assert server.stats()["compiles"] == compiles           # zero recompiles
 
 
 def test_server_rejects_wrong_item_shape(server):

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import conversion, engine
+from repro import api
+from repro.core import conversion
 from repro.models import vgg
 
 RNG = np.random.default_rng(11)
@@ -32,36 +33,39 @@ def _vgg_qnet(pool_mode, batch, T=4, input_hw=(32, 32, 3), width_mult=0.1):
 def test_vgg11_plan_matches_jnp(pool_mode, batch):
     """kernels backend == jnp packed path, bit-exact, both pool modes."""
     qnet, x = _vgg_qnet(pool_mode, batch)
-    ref = engine.run(qnet, x, mode="packed", backend="jnp")
-    got = engine.run(qnet, x, mode="packed", backend="kernels")
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    ref = api.oracle(qnet, x, mode="packed")
+    exe = api.Accelerator(backend="kernels").compile(
+        qnet, x.shape[1:], buckets=(4,))    # non-aligned batches pad/slice
+    np.testing.assert_array_equal(np.asarray(exe(x)), np.asarray(ref))
 
 
 @pytest.mark.parametrize("pool_mode", ["or", "avg"])
 def test_vgg11_packed_matches_snn_oracle(pool_mode):
     """jnp packed path == paper-faithful spike-plane path at VGG-11 depth."""
     qnet, x = _vgg_qnet(pool_mode, batch=2)
-    a = engine.run(qnet, x, mode="packed", backend="jnp")
-    b = engine.run(qnet, x, mode="snn", backend="jnp")
+    a = api.oracle(qnet, x, mode="packed")
+    b = api.oracle(qnet, x, mode="snn")
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_vgg11_plan_bitserial_method():
     """The paper-faithful in-kernel dataflow agrees at VGG depth too."""
     qnet, x = _vgg_qnet("or", batch=2)
-    ref = engine.run(qnet, x, mode="packed", backend="jnp")
-    plan = engine.compile_plan(qnet, x.shape, method="bitserial")
-    np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(ref))
+    ref = api.oracle(qnet, x, mode="packed")
+    exe = api.Accelerator(dataflow="bitserial").compile(
+        qnet, x.shape[1:], buckets=(2,))
+    np.testing.assert_array_equal(np.asarray(exe(x)), np.asarray(ref))
 
 
 def test_vgg11_plan_packed_uint8_end_to_end():
     """Every inter-layer activation stays packed uint8 (or-pool VGG);
     only the logits layer emits int32 — DESIGN.md §2 at VGG scale."""
     qnet, x = _vgg_qnet("or", batch=1)
-    plan = engine.compile_plan(qnet, x.shape)
-    dtypes = [l.out_dtype for l in plan.layers]
+    exe = api.Accelerator().compile(qnet, x.shape[1:], buckets=(1,))
+    traffic = exe.traffic()
+    dtypes = [l["out_dtype"] for l in traffic["layers"]]
     assert dtypes[-1] == "int32" and set(dtypes[:-1]) == {"uint8"}
-    assert plan.activation_traffic()["traffic_ratio"] >= 3.0
+    assert traffic["traffic_ratio"] >= 3.0
 
 
 @pytest.mark.slow
@@ -70,9 +74,9 @@ def test_vgg11_plan_nontrivial_flatten_boundary():
     linear's weight rows scatter to the channel-padded interleaved layout
     (the 'large flatten boundary' case)."""
     qnet, x = _vgg_qnet("or", batch=2, input_hw=(64, 64, 3))
-    ref = engine.run(qnet, x, mode="packed", backend="jnp")
-    got = engine.run(qnet, x, mode="packed", backend="kernels")
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    ref = api.oracle(qnet, x, mode="packed")
+    exe = api.Accelerator().compile(qnet, x.shape[1:], buckets=(2,))
+    np.testing.assert_array_equal(np.asarray(exe(x)), np.asarray(ref))
 
 
 @pytest.mark.slow
@@ -80,6 +84,6 @@ def test_vgg11_avg_pool_carry_T6():
     """T=6 + sum pools: the widened carry (8 bits) still fits a byte and
     stays bit-exact across all five pool stages."""
     qnet, x = _vgg_qnet("avg", batch=2, T=6)
-    ref = engine.run(qnet, x, mode="packed", backend="jnp")
-    plan = engine.compile_plan(qnet, x.shape)
-    np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(ref))
+    ref = api.oracle(qnet, x, mode="packed")
+    exe = api.Accelerator().compile(qnet, x.shape[1:], buckets=(2,))
+    np.testing.assert_array_equal(np.asarray(exe(x)), np.asarray(ref))
