@@ -16,8 +16,13 @@ XLA-compiled execution strategies the accelerator design cares about:
 
 plus the HBM-traffic model per strategy: total bytes moved and, separately,
 the inter-layer *activation write* bytes (the ping-pong buffer traffic the
-paper's output logic attacks).  Results go to stdout as CSV and to
-``BENCH_kernels.json`` at the repo root so the perf trajectory is
+paper's output logic attacks), plus the **encoding-latency sweep**: each
+EncodingSpec's paper-faithful spike-domain dataflow (one gated integer
+matmul per time step, reduced by the spec's plane weights) timed on the
+same problem, with its spike density — radix 4 passes, phase P x K
+passes, rate levels-1 passes, TTFS 4 passes at <= 1 spike/activation
+(docs/encodings.md has the economics).  Results go to stdout as CSV and
+to ``BENCH_kernels.json`` at the repo root so the perf trajectory is
 machine-readable across PRs.
 """
 
@@ -94,6 +99,9 @@ def run(log=print, m=512, k=512, n=512, T=4, json_path=_JSON_PATH):
     # whole-network activation-traffic model from a compiled plan (LeNet-5)
     plan_traffic = _plan_traffic()
 
+    # encoding-vs-latency: every spec's faithful spike-domain dataflow
+    encoding_rows = _encoding_latency(log, m=m, k=k, n=n)
+
     payload = {
         "bench": "kernels",
         "config": {"m": m, "k": k, "n": n, "T": T,
@@ -107,10 +115,52 @@ def run(log=print, m=512, k=512, n=512, T=4, json_path=_JSON_PATH):
         "traffic_ratio_dense_over_fused_epilogue": round(traffic_ratio, 3),
         "act_write_ratio_int32_over_fused_epilogue": round(act_ratio, 3),
         "plan_activation_traffic_lenet5": plan_traffic,
+        "encoding_latency": encoding_rows,
     }
     if json_path is not None:
         pathlib.Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
         log(f"kernel,json={json_path}")
+    return rows
+
+
+def _encoding_latency(log, m=512, k=512, n=512):
+    """Time each EncodingSpec's paper-faithful spike-domain dataflow.
+
+    One gated integer matmul per time step over the spec's encoded planes,
+    reduced by its plane weights (``spec.reduce_planes``) — XLA-compiled,
+    so latency scales with the spec's total time-step count: phase pays
+    P x radix, rate pays levels - 1 passes; TTFS matches radix passes on
+    dense hardware but carries <= 1 spike/activation (the density column
+    is what an event-driven target would exploit).  The spec tuple is
+    table1's ENCODING_SWEEP — one definition of "comparable level
+    budgets" shared by both benchmarks.
+    """
+    from benchmarks.table1_timesteps import ENCODING_SWEEP
+
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.uniform(0, 1, (m, k)), jnp.float32)
+    w_q = jnp.asarray(rng.integers(-3, 4, (k, n)), jnp.int8)
+    w32 = w_q.astype(jnp.int32)
+
+    def faithful(spec):
+        def fwd(planes, w):
+            per_step = jax.vmap(lambda p: jax.lax.dot_general(
+                p.astype(jnp.int32), w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32))(planes)
+            return spec.reduce_planes(per_step)
+        return jax.jit(fwd)
+
+    rows = []
+    for spec in ENCODING_SWEEP:
+        planes = spec.encode(spec.quantize(x))
+        density = float(planes.sum()) / (m * k)
+        us = _time(faithful(spec), planes, w32, iters=5)
+        rows.append(dict(encoding=spec.name, T=spec.num_steps,
+                         levels=spec.levels, us_per_call=round(us, 1),
+                         spikes_per_act=round(density, 3)))
+        log(f"kernel,encoding={spec.name},T={spec.num_steps},"
+            f"levels={spec.levels},{us:.1f}us,"
+            f"spikes_per_act={density:.3f}")
     return rows
 
 

@@ -11,6 +11,14 @@ limiting factor, exactly the paper's claim.  The latency column is the
 calibrated hardware model (core/hwmodel.py), reported with per-point error
 vs the paper.  Additionally the SNN/quantized-ANN bit-exactness is asserted
 at every T (the conversion contract behind the whole table).
+
+Beyond the paper's radix-only table, :func:`run_encodings` sweeps the SAME
+trained LeNet-5 over all four EncodingSpecs (radix / rate / TTFS / phase,
+docs/encodings.md) at comparable level budgets -- accuracy, total time
+steps, level count, modeled hardware latency (which scales with total
+time steps: phase pays P x, rate pays its T = levels - 1) and mean spikes
+per input activation.  This is the scenario-diversity half of Table I:
+what each emerging encoding costs, executed end to end.
 """
 
 from __future__ import annotations
@@ -39,13 +47,19 @@ def _accuracy(qnet, data, batches=4, batch=256):
     return correct / total
 
 
-def run(log=print, steps: int = 300):
-    data = SyntheticVision()
+def _trained_lenet(data, steps: int):
     static, params, input_hw = lenet.make()
     params, _ = train_ann(static, params, data,
                           TrainConfig(steps=steps, batch_size=128, lr=1e-2,
                                       log_every=10_000), log=None)
     calib = jnp.asarray(data.calibration_batch(256))
+    return static, params, calib
+
+
+def run(log=print, steps: int = 300, trained=None):
+    data = SyntheticVision()
+    static, params, calib = (trained if trained is not None
+                             else _trained_lenet(data, steps))
 
     model = CostModel.calibrated()
     net = network_layers(*LENET5)
@@ -73,8 +87,53 @@ def run(log=print, steps: int = 300):
     return rows
 
 
+# the four-encoding sweep: comparable level budgets (16 levels for the
+# 2^T codes; rate's 16 levels need T = 15)
+ENCODING_SWEEP = (
+    api.RadixEncoding(4),
+    api.RateEncoding(15),
+    api.TTFSEncoding(4),
+    api.PhaseEncoding(8, periods=2),
+)
+
+
+def run_encodings(log=print, steps: int = 300, trained=None):
+    """Sweep one trained LeNet-5 over every EncodingSpec (see module doc)."""
+    data = SyntheticVision()
+    static, params, calib = (trained if trained is not None
+                             else _trained_lenet(data, steps))
+    model = CostModel.calibrated()
+    net = network_layers(*LENET5)
+
+    rows = []
+    x_check = jnp.asarray(data.batch(31_337, 32)[0])
+    for spec in ENCODING_SWEEP:
+        qnet = conversion.convert(static, params, calib, encoding=spec)
+        acc = _accuracy(qnet, data)
+        a = api.oracle(qnet, x_check, mode="packed")
+        b = api.oracle(qnet, x_check, mode="snn")
+        exact = bool(jnp.array_equal(a, b))
+        # hardware latency scales with TOTAL time steps (phase: P * K;
+        # rate: levels - 1) — the timestep-vs-levels economics, costed
+        lat = model.latency_us(net, HwConfig(n_conv_units=2),
+                               spec.num_steps)
+        planes = spec.encode(spec.quantize(x_check))
+        spikes = float(planes.sum()) / float(np.prod(x_check.shape))
+        rows.append(dict(
+            encoding=spec.name, T=spec.num_steps, levels=spec.levels,
+            synth_acc=acc, snn_exact=exact, model_lat_us=lat,
+            spikes_per_act=spikes))
+        log(f"table1e,encoding={spec.name},T={spec.num_steps},"
+            f"levels={spec.levels},synth_acc={acc:.4f},"
+            f"snn_bit_exact={exact},model_us={lat:.0f},"
+            f"spikes_per_act={spikes:.2f}")
+    return rows
+
+
 def main():
-    run()
+    trained = _trained_lenet(SyntheticVision(), 300)
+    run(trained=trained)
+    run_encodings(trained=trained)
 
 
 if __name__ == "__main__":

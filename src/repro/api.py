@@ -4,7 +4,8 @@ The paper's accelerator claims to support *emerging neural encodings*
 generically; this module makes the claim concrete in software.  The
 encoding is a first-class, swappable component
 (:class:`~repro.core.encoding.EncodingSpec`: :class:`RadixEncoding`,
-:class:`RateEncoding`, subclass for differential/temporal schemes), and
+:class:`RateEncoding`, :class:`TTFSEncoding`, :class:`PhaseEncoding` —
+see ``docs/encodings.md`` for choosing one — or subclass your own), and
 execution is one facade::
 
     from repro import api
@@ -27,6 +28,14 @@ data-parallel shard_map, zero steady-state recompiles; DESIGN.md §3).
 the paper-faithful ``mode="snn"`` spike-plane path) that every compiled
 path is bit-exact against.
 
+The shipped specs and their level capacity at ``T = 4`` time steps:
+
+>>> from repro import api
+>>> [(cls.name, cls(4).levels) for cls in api.SPECS]
+[('radix', 16), ('rate', 5), ('ttfs', 16), ('phase', 16)]
+>>> api.PhaseEncoding(8, periods=2).levels        # 2 periods x 4 phases
+16
+
 This facade subsumes the former ``engine.run(mode=, backend=, method=)``
 / ``engine.compile_plan`` / ``PlanCache`` kwarg sprawl; those survive
 only as deprecation shims forwarding here (see DESIGN.md "API" for the
@@ -42,13 +51,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import conversion, engine
+from repro.core.encoding import (
+    SPECS,
+    EncodingSpec,
+    PhaseEncoding,
+    RadixEncoding,
+    RateEncoding,
+    TTFSEncoding,
+    support_matrix,
+    support_matrix_markdown,
+)
 from repro.core.conversion import convert
-from repro.core.encoding import EncodingSpec, RadixEncoding, RateEncoding
 
 __all__ = [
     "EncodingSpec",
     "RadixEncoding",
     "RateEncoding",
+    "TTFSEncoding",
+    "PhaseEncoding",
+    "SPECS",
+    "support_matrix",
+    "support_matrix_markdown",
     "Accelerator",
     "Executable",
     "convert",
@@ -93,6 +116,20 @@ def oracle(
     integer layers, reduced by the encoding's ``reduce_planes``);
     ``mode="packed"`` is the quantized-ANN twin.  Every
     :class:`Executable` is bit-exact against both.
+
+    Args:
+        qnet: a converted net (:func:`convert`).
+        x: float images, ``(batch,) + item_shape``.
+        mode: ``"snn"`` (spike planes) or ``"packed"`` (integer levels).
+        encoding: optional spec override; must match the algebra the
+            net's multipliers were folded for (normally omit it).
+
+    Returns:
+        Float logits, ``(batch, classes)``.
+
+    Raises:
+        ValueError: unknown ``mode``, or an ``encoding`` override that
+            contradicts the net's stored spec.
     """
     if mode not in ("packed", "snn"):
         raise ValueError(f"mode must be 'packed' or 'snn', got {mode!r}")
@@ -161,7 +198,11 @@ class Executable:
         return self.encoding.num_steps
 
     def __call__(self, x) -> jax.Array:
-        """(n,) + item_shape float images -> (n, classes) float logits."""
+        """(n,) + item_shape float images -> (n, classes) float logits.
+
+        Any ``n``: pads up to the nearest bucket / chunks by the top
+        bucket.  Raises ``ValueError`` when the item shape of ``x`` does
+        not match the executable's compiled ``item_shape``."""
         x = jnp.asarray(x, jnp.float32)
         if tuple(x.shape[1:]) != self.item_shape:
             raise ValueError(
@@ -182,6 +223,8 @@ class Executable:
         return self._cache.plan_for(self.qnet, bucket, self.item_shape)
 
     def stats(self) -> dict:
+        """Plan-cache counters: ``hits`` / ``compiles`` / ``executions``
+        / ``padded_rows`` / ``pruned`` (zero steady-state recompiles)."""
         return self._cache.stats.as_dict()
 
     def traffic(self) -> dict:
@@ -221,6 +264,12 @@ class Accelerator:
     ``compile`` validates the (backend, dataflow, encoding, net) pairing
     loudly at compile time — no silent fall-through to a slower or
     semantically wrong path.
+
+    >>> from repro import api
+    >>> api.Accelerator(backend="jnp").backend
+    'jnp'
+    >>> api.Accelerator(dataflow="bitserial").dataflow
+    'bitserial'
     """
 
     backend: str = "kernels"
@@ -254,6 +303,15 @@ class Accelerator:
         gcd(bucket, devices)).  ``encoding`` overrides the net's stored
         spec (it must match the folded multiplier algebra — normally you
         pass the encoding to :func:`convert` once and never here).
+
+        Raises:
+            ValueError: the encoding does not run on this backend (see
+                the support matrix in ``docs/encodings.md``), the
+                dataflow is not among the encoding's declared
+                ``kernel_dataflows``, a pool mode in the net is not
+                preserved by the encoding, ``parallel`` is requested off
+                the kernels backend, or an ``encoding`` override
+                contradicts the net's folded multipliers.
         """
         spec = _resolve_spec(qnet, encoding)
         if self.backend not in spec.backends:

@@ -206,11 +206,18 @@ def convert(
     """ANN -> SNN conversion (scales folded; see module docstring).
 
     The target encoding is a first-class parameter: pass ``encoding``
-    (e.g. ``RadixEncoding(4)``, ``RateEncoding(7)``) or, as shorthand for
-    radix, just ``num_steps``.  The spec's ``levels`` drives the
-    multiplier folding (radix: 2^T; rate: T+1) and the spec is stored on
-    the returned net, so execution paths dispatch on it without
-    re-stating the encoding at every call site (repro.api).
+    (e.g. ``RadixEncoding(4)``, ``RateEncoding(7)``, ``TTFSEncoding(4)``,
+    ``PhaseEncoding(8, periods=2)`` — docs/encodings.md has the selection
+    guide) or, as shorthand for radix, just ``num_steps``.  The spec's
+    ``levels`` drives the multiplier folding (radix: 2^T; rate: T+1;
+    TTFS: 2^T grid units; phase: 2^(T/P)) and the spec is stored on the
+    returned net, so execution paths dispatch on it without re-stating
+    the encoding at every call site (repro.api).
+
+    Raises:
+        ValueError: neither ``num_steps`` nor ``encoding`` given, a
+            contradictory (``num_steps``, ``encoding``) pair, or a pool
+            mode in ``static`` the encoding does not preserve.
     """
     spec = encoding
     if spec is None:

@@ -89,7 +89,8 @@ def _forward(
 
     ``mode="packed"`` runs integer levels through the quantized twin;
     ``mode="snn"`` runs (T, ...) spike planes — per-plane integer layers
-    reduced by ``spec.reduce_planes`` (radix: Horner; rate: plain sum).
+    reduced by ``spec.reduce_planes`` (radix: Horner; rate: plain sum;
+    TTFS: weighted one-hot planes; phase: tiled weights / periods).
     Both are bit-exact twins by linearity for any spec whose pools the
     net uses are declared in ``spec.pool_modes``.
     """
@@ -183,7 +184,16 @@ def _pool(state, cfg, spec, snn):
             # hardware note: avg mode needs an output requantizer (DESIGN §2)
             return jax.vmap(lambda p: layers.q_avg_pool(p, w))(state)
         if pool_mode == "max":
-            packed = layers.snn_max_pool(state, w)
+            if spec.radix_planes:
+                # bit-plane-domain lexicographic max (the paper's pooling
+                # unit never decodes) — valid whenever planes are the
+                # binary expansion of the packed level
+                packed = layers.snn_max_pool(state, w)
+            else:
+                # period-repeated codes (phase, P > 1): decode, pool the
+                # packed levels, re-encode
+                packed = layers.q_max_pool(
+                    spec.decode(state).astype(spec.packed_dtype), w)
             return spec.encode(packed)
         raise ValueError(pool_mode)
     if pool_mode == "or":
@@ -315,7 +325,12 @@ def _compile_plan_impl(
     from repro.kernels.radix_conv import radix_conv2d_pallas
     from repro.kernels.radix_matmul import radix_matmul_pallas
 
-    T = spec.num_steps
+    # T here is the *packed* bit count (== num_steps except for
+    # period-repeated codes: phase packs one K-phase period per byte);
+    # `periods` replays the tiled plane-weight schedule in the bitserial
+    # dataflow (kernels divide the accumulator back down, exactly).
+    T = spec.packed_bits
+    periods = spec.periods
     if spec.max_level > 255:
         raise ValueError(
             f"packed uint8 plans require <= 256 levels, got {spec.levels} "
@@ -370,6 +385,7 @@ def _compile_plan_impl(
                     acc = radix_conv2d_pallas(
                         state, p["w"], num_steps=in_bits, method=method,
                         bco=bco, stride=stride, interpret=interp,
+                        periods=periods,
                     )[..., :cout]
                     return acc + p["b"]
             else:
@@ -384,6 +400,7 @@ def _compile_plan_impl(
                     return radix_conv2d_pallas(
                         state, p["w"], num_steps=in_bits, method=method,
                         bco=bco, stride=stride, interpret=interp,
+                        periods=periods,
                         bias=p["bias"], mult=p["mult"], out_steps=T)
 
             steps.append((apply, p))
@@ -432,6 +449,7 @@ def _compile_plan_impl(
                     acc = radix_matmul_pallas(
                         state, p["w"], num_steps=in_bits, method=method,
                         bm=bm, bk=bk, bn=bn, interpret=interp,
+                        periods=periods,
                     )[:batch, :fout]
                     return acc + p["b"]
             else:
@@ -446,6 +464,7 @@ def _compile_plan_impl(
                     return radix_matmul_pallas(
                         state, p["w"], num_steps=in_bits, method=method,
                         bm=bm, bk=bk, bn=bn, interpret=interp,
+                        periods=periods,
                         bias=p["bias"], mult=p["mult"], out_steps=T)
 
             steps.append((apply, p))

@@ -41,19 +41,29 @@ def _interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _steps(num_steps: Union[int, EncodingSpec]) -> int:
+def _schedule(num_steps: Union[int, EncodingSpec]) -> Tuple[int, int]:
     """Accept a bare T or an :class:`EncodingSpec` wherever a kernel needs
-    the time-step count; specs must declare a kernel dataflow (the kernel
-    epilogue implements their clip-to-max-level requantization)."""
+    its plane schedule; returns ``(packed_bits, periods)``.
+
+    Specs must declare a kernel dataflow (the kernel epilogue implements
+    their clip-to-max-level requantization); the bit count is the spec's
+    ``packed_bits`` (phase: bits of ONE period) and ``periods`` is its
+    repeated-period count (phase: P; everything else: 1).
+    """
     if isinstance(num_steps, EncodingSpec):
         if not num_steps.kernel_dataflows:
             raise ValueError(
                 f"{num_steps.name} encoding does not run on the kernels "
                 f"backend (supported: {num_steps.backends})")
-        num_steps.validate_dataflow(None)   # pins levels == 2^T (the
-        #                                     epilogue's hardwired clip)
-        return num_steps.num_steps
-    return int(num_steps)
+        num_steps.validate_dataflow(None)   # pins levels == 2^packed_bits
+        #                                     (the epilogue's hardwired clip)
+        return num_steps.packed_bits, num_steps.periods
+    return int(num_steps), 1
+
+
+def _steps(num_steps: Union[int, EncodingSpec]) -> int:
+    """Packed bit count of :func:`_schedule` (validates spec capability)."""
+    return _schedule(num_steps)[0]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -90,9 +100,13 @@ def epilogue_rows(
     which is what lets a compiled plan keep activations channel-padded
     between layers (core/engine).  ``encoding`` names the spec whose
     requantization the epilogue implements; it must be kernels-capable
-    (the in-kernel clip targets its ``max_level``)."""
+    (the in-kernel clip targets its ``max_level`` == ``2^packed_bits - 1``).
+    Period-repeated plane schedules (phase coding) need no row adjustment:
+    the bitserial kernels divide the accumulator by ``periods`` *before*
+    the bias/multiplier rows apply, exactly, so the rows always live in
+    single-period accumulator units."""
     if encoding is not None:
-        _steps(encoding)   # validates kernel capability
+        _schedule(encoding)   # validates kernel capability
     bias = jnp.zeros((n,), jnp.int32) if b_int is None \
         else jnp.asarray(b_int, jnp.int32).reshape(n)
     mrow = jnp.broadcast_to(
@@ -113,10 +127,12 @@ def radix_matmul(
 ) -> jax.Array:
     """(..., K) packed levels @ (K, N) int8 (+bias) -> (..., N).
 
-    ``num_steps`` may be a bare T or a kernels-capable ``EncodingSpec``.
+    ``num_steps`` may be a bare T or a kernels-capable ``EncodingSpec``
+    (whose packed bit count and period-repeat schedule are honored).
     ``mult=None``: raw int32 accumulator (+bias outside the kernel).
     ``mult`` given: fused output-logic epilogue -> packed uint8 levels."""
-    num_steps = _steps(num_steps)
+    spec = num_steps if isinstance(num_steps, EncodingSpec) else None
+    num_steps, periods = _schedule(num_steps)
     lead = x_q.shape[:-1]
     k = x_q.shape[-1]
     n = w_q.shape[-1]
@@ -131,13 +147,13 @@ def radix_matmul(
     if mult is None:
         out = radix_matmul_pallas(
             x2, w2, num_steps=num_steps, method=method,
-            bm=bm, bk=bk, bn=bn, interpret=_interpret(),
+            bm=bm, bk=bk, bn=bn, interpret=_interpret(), periods=periods,
         )[:m, :n].reshape(*lead, n)
         return out if b_int is None else out + b_int
-    bias_row, mult_row = epilogue_rows(b_int, mult, n, np_)
+    bias_row, mult_row = epilogue_rows(b_int, mult, n, np_, encoding=spec)
     return radix_matmul_pallas(
         x2, w2, num_steps=num_steps, method=method,
-        bm=bm, bk=bk, bn=bn, interpret=_interpret(),
+        bm=bm, bk=bk, bn=bn, interpret=_interpret(), periods=periods,
         bias=bias_row, mult=mult_row,
     )[:m, :n].reshape(*lead, n)
 
@@ -155,12 +171,14 @@ def radix_conv2d(
 ) -> jax.Array:
     """NHWC packed levels * HWIO int8 -> NHWC conv (+bias).
 
-    ``num_steps`` may be a bare T or a kernels-capable ``EncodingSpec``.
+    ``num_steps`` may be a bare T or a kernels-capable ``EncodingSpec``
+    (whose packed bit count and period-repeat schedule are honored).
     SAME padding is pre-padded (XLA-exact pads for any stride); stride > 1
     subsamples *inside* the kernel grid — only the h_out x w_out surviving
     outputs are ever computed.  ``mult`` turns on the fused output-logic
     epilogue (packed uint8 levels out)."""
-    num_steps = _steps(num_steps)
+    spec = num_steps if isinstance(num_steps, EncodingSpec) else None
+    num_steps, periods = _schedule(num_steps)
     kh, kw, cin, cout = w_q.shape
     if padding == "SAME":
         ph = same_pads(x_q.shape[1], kh, stride)
@@ -174,13 +192,13 @@ def radix_conv2d(
     if mult is None:
         out = radix_conv2d_pallas(
             x_q, w_p, num_steps=num_steps, method=method, bco=bco,
-            stride=stride, interpret=_interpret(),
+            stride=stride, interpret=_interpret(), periods=periods,
         )[..., :cout]
         return out if b_int is None else out + b_int
-    bias_row, mult_row = epilogue_rows(b_int, mult, cout, cop)
+    bias_row, mult_row = epilogue_rows(b_int, mult, cout, cop, encoding=spec)
     return radix_conv2d_pallas(
         x_q, w_p, num_steps=num_steps, method=method, bco=bco,
-        stride=stride, interpret=_interpret(),
+        stride=stride, interpret=_interpret(), periods=periods,
         bias=bias_row, mult=mult_row,
     )[..., :cout]
 

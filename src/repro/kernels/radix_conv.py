@@ -44,12 +44,15 @@ __all__ = [
 
 
 def _conv_acc(x, w_ref, h_out, w_out, bco, *, num_steps, method, kh, kw,
-              stride):
+              stride, periods=1):
     """Strided VALID conv of an (H, W, Cin) int32 block -> (h_out*w_out, bco).
 
     The (kh, kw) loops mirror the adder-array row/column iteration; each
     tap is an MXU matmul over Cin (the FPGA's sequential input-channel
-    loop, parallelized on the MXU's contraction dim)."""
+    loop, parallelized on the MXU's contraction dim).  ``periods > 1``
+    (phase coding, bitserial only) replays the plane passes with the tiled
+    per-phase weight schedule and divides back down — exact, the sum being
+    ``periods ×`` the single-period value."""
     cin = x.shape[-1]
 
     def conv_planes(plane):
@@ -70,15 +73,20 @@ def _conv_acc(x, w_ref, h_out, w_out, bco, *, num_steps, method, kh, kw,
     if method == "fused":
         return conv_planes(x)                 # radix identity: one pass
     acc = jnp.zeros((h_out * w_out, bco), jnp.int32)
-    for t in range(num_steps):                # paper-faithful Horner loop
-        shift = num_steps - 1 - t
-        acc = (acc << 1) + conv_planes((x >> shift) & 1)
-    return acc
+    if periods == 1:
+        for t in range(num_steps):            # paper-faithful Horner loop
+            shift = num_steps - 1 - t
+            acc = (acc << 1) + conv_planes((x >> shift) & 1)
+        return acc
+    for t in range(num_steps * periods):      # phase: tiled weight schedule
+        shift = num_steps - 1 - (t % num_steps)
+        acc = acc + (conv_planes((x >> shift) & 1) << shift)
+    return acc // periods
 
 
 def radix_conv2d_kernel(
     x_ref, w_ref, o_ref, *, num_steps: int, method: str, kh: int, kw: int,
-    stride: int,
+    stride: int, periods: int = 1,
 ):
     """x_ref: (1, H, W, Cin) packed levels; w_ref: (kh, kw, Cin, bco);
     o_ref: (1, H_out, W_out, bco) int32."""
@@ -86,13 +94,14 @@ def radix_conv2d_kernel(
     bco = o_ref.shape[3]
     x = x_ref[0].astype(jnp.int32)            # (H, W, Cin)
     acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
-                    method=method, kh=kh, kw=kw, stride=stride)
+                    method=method, kh=kh, kw=kw, stride=stride,
+                    periods=periods)
     o_ref[0] = acc.reshape(h_out, w_out, bco)
 
 
 def radix_conv2d_epilogue_kernel(
     x_ref, w_ref, bias_ref, mult_ref, o_ref, *, num_steps: int, method: str,
-    kh: int, kw: int, stride: int, out_level: int,
+    kh: int, kw: int, stride: int, out_level: int, periods: int = 1,
 ):
     """Fused-epilogue variant: output logic runs on the int32 register tile
     and o_ref receives packed uint8 levels (1, H_out, W_out, bco)."""
@@ -100,7 +109,8 @@ def radix_conv2d_epilogue_kernel(
     bco = o_ref.shape[3]
     x = x_ref[0].astype(jnp.int32)
     acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
-                    method=method, kh=kh, kw=kw, stride=stride)
+                    method=method, kh=kh, kw=kw, stride=stride,
+                    periods=periods)
     # identical float ops to layers.q_requantize -> bit-exact twin
     acc = acc + bias_ref[...]                      # (hw, bco) + (1, bco)
     q = jnp.floor(acc.astype(jnp.float32) * mult_ref[...])
@@ -111,7 +121,7 @@ def radix_conv2d_epilogue_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("num_steps", "method", "bco", "stride", "interpret",
-                     "out_steps"))
+                     "out_steps", "periods"))
 def radix_conv2d_pallas(
     x_q: jax.Array,
     w_q: jax.Array,
@@ -124,6 +134,7 @@ def radix_conv2d_pallas(
     bias: Optional[jax.Array] = None,
     mult: Optional[jax.Array] = None,
     out_steps: Optional[int] = None,
+    periods: int = 1,
 ) -> jax.Array:
     """(N, H, W, Cin) uint8 @ (KH, KW, Cin, Cout) int8 -> VALID conv.
 
@@ -131,8 +142,10 @@ def radix_conv2d_pallas(
     and optional ``bias`` (int32 ``(1, Cout)``): fused output-logic epilogue,
     packed uint8 levels out, clamped to ``[0, 2^out_steps - 1]``
     (``out_steps`` defaults to ``num_steps``; it differs when inputs carry
-    extra integer bits, e.g. after a sum-pool).  Cout must be a multiple of
-    ``bco`` (ops.py pads); ``stride`` subsamples inside the kernel."""
+    extra integer bits, e.g. after a sum-pool).  ``periods`` (phase coding,
+    bitserial only) replays the plane schedule with tiled per-phase weights
+    and an exact in-kernel divide.  Cout must be a multiple of ``bco``
+    (ops.py pads); ``stride`` subsamples inside the kernel."""
     n, h, w, cin = x_q.shape
     kh, kw, cin2, cout = w_q.shape
     assert cin == cin2, (x_q.shape, w_q.shape)
@@ -150,7 +163,7 @@ def radix_conv2d_pallas(
     if mult is None:
         kernel = functools.partial(
             radix_conv2d_kernel, num_steps=num_steps, method=method,
-            kh=kh, kw=kw, stride=stride)
+            kh=kh, kw=kw, stride=stride, periods=periods)
         return pl.pallas_call(
             kernel,
             grid=grid,
@@ -169,7 +182,8 @@ def radix_conv2d_pallas(
     row_spec = pl.BlockSpec((1, bco), lambda b, co: (0, co))
     kernel = functools.partial(
         radix_conv2d_epilogue_kernel, num_steps=num_steps, method=method,
-        kh=kh, kw=kw, stride=stride, out_level=(1 << out_steps) - 1)
+        kh=kh, kw=kw, stride=stride, out_level=(1 << out_steps) - 1,
+        periods=periods)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -51,24 +51,42 @@ __all__ = [
 ]
 
 
-def _accumulate_tile(x, w, *, num_steps: int, method: str) -> jax.Array:
-    """(bm, bk) x (bk, bn) int32 partial product, bit-serial or single-pass."""
+def _accumulate_tile(x, w, *, num_steps: int, method: str,
+                     periods: int = 1) -> jax.Array:
+    """(bm, bk) x (bk, bn) int32 partial product, bit-serial or single-pass.
+
+    ``periods > 1`` (phase coding) replays the ``num_steps`` plane passes
+    ``periods`` times with the tiled weight schedule ``2^(T-1-(t mod T))``
+    and divides the accumulator back down — exact, since the sum is
+    ``periods ×`` the single-period value.  The fused path is unaffected:
+    the radix identity already collapses one period into the packed level.
+    """
     if method == "fused":
         # radix identity: one int MXU pass over packed levels
         return jax.lax.dot_general(
             x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
-    # paper-faithful bit-serial Horner loop (T static, unrolled)
     acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
-    for t in range(num_steps):
-        shift = num_steps - 1 - t
-        plane = (x >> shift) & 1               # gate: spike present or not
-        acc = (acc << 1) + jax.lax.dot_general(
+    if periods == 1:
+        # paper-faithful bit-serial Horner loop (T static, unrolled)
+        for t in range(num_steps):
+            shift = num_steps - 1 - t
+            plane = (x >> shift) & 1           # gate: spike present or not
+            acc = (acc << 1) + jax.lax.dot_general(
+                plane, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        return acc
+    # phase schedule: all periods * T time steps, per-phase weights
+    for t in range(num_steps * periods):
+        shift = num_steps - 1 - (t % num_steps)
+        plane = (x >> shift) & 1
+        acc = acc + (jax.lax.dot_general(
             plane, w, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-    return acc
+            preferred_element_type=jnp.int32) << shift)
+    return acc // periods
 
 
-def radix_matmul_kernel(x_ref, w_ref, o_ref, *, num_steps: int, method: str):
+def radix_matmul_kernel(x_ref, w_ref, o_ref, *, num_steps: int, method: str,
+                        periods: int = 1):
     """One (bm, bk) x (bk, bn) tile; accumulates into o_ref across the K grid."""
     k_idx = pl.program_id(2)
 
@@ -78,12 +96,13 @@ def radix_matmul_kernel(x_ref, w_ref, o_ref, *, num_steps: int, method: str):
 
     x = x_ref[...].astype(jnp.int32)          # (bm, bk) packed levels
     w = w_ref[...].astype(jnp.int32)          # (bk, bn) int weights
-    o_ref[...] += _accumulate_tile(x, w, num_steps=num_steps, method=method)
+    o_ref[...] += _accumulate_tile(x, w, num_steps=num_steps, method=method,
+                                   periods=periods)
 
 
 def radix_matmul_epilogue_kernel(
     x_ref, w_ref, bias_ref, mult_ref, o_ref, acc_ref,
-    *, num_steps: int, method: str, out_level: int,
+    *, num_steps: int, method: str, out_level: int, periods: int = 1,
 ):
     """Fused-epilogue tile: int32 accumulation lives in the ``acc_ref`` VMEM
     scratch; on the final K step the output logic (bias + requant multiply +
@@ -96,7 +115,8 @@ def radix_matmul_epilogue_kernel(
 
     x = x_ref[...].astype(jnp.int32)
     w = w_ref[...].astype(jnp.int32)
-    acc_ref[...] += _accumulate_tile(x, w, num_steps=num_steps, method=method)
+    acc_ref[...] += _accumulate_tile(x, w, num_steps=num_steps, method=method,
+                                     periods=periods)
 
     @pl.when(k_idx == pl.num_programs(2) - 1)
     def _epilogue():
@@ -109,7 +129,7 @@ def radix_matmul_epilogue_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("num_steps", "method", "bm", "bk", "bn", "interpret",
-                     "out_steps"),
+                     "out_steps", "periods"),
 )
 def radix_matmul_pallas(
     x_q: jax.Array,
@@ -124,6 +144,7 @@ def radix_matmul_pallas(
     bias: Optional[jax.Array] = None,
     mult: Optional[jax.Array] = None,
     out_steps: Optional[int] = None,
+    periods: int = 1,
 ) -> jax.Array:
     """(M, K) uint8 levels @ (K, N) int8 -> (M, N).
 
@@ -133,7 +154,9 @@ def radix_matmul_pallas(
     uint8 levels in ``[0, 2^out_steps - 1]``.  ``num_steps`` governs the
     bit-serial input extraction; ``out_steps`` (default ``num_steps``) the
     output clamp — they differ when inputs carry extra integer bits, e.g.
-    after a sum-pool whose division is folded into ``mult``.
+    after a sum-pool whose division is folded into ``mult``.  ``periods``
+    (phase coding, bitserial only) replays the plane schedule that many
+    times with tiled per-phase weights and an exact in-kernel divide.
 
     Shapes must be multiples of the block sizes (ops.py pads).
     Block sizes default to MXU-aligned 128s; VMEM footprint per step is
@@ -152,7 +175,8 @@ def radix_matmul_pallas(
 
     if mult is None:
         kernel = functools.partial(
-            radix_matmul_kernel, num_steps=num_steps, method=method)
+            radix_matmul_kernel, num_steps=num_steps, method=method,
+            periods=periods)
         return pl.pallas_call(
             kernel,
             grid=grid,
@@ -171,7 +195,7 @@ def radix_matmul_pallas(
     row_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
     kernel = functools.partial(
         radix_matmul_epilogue_kernel, num_steps=num_steps, method=method,
-        out_level=(1 << out_steps) - 1)
+        out_level=(1 << out_steps) - 1, periods=periods)
     return pl.pallas_call(
         kernel,
         grid=grid,

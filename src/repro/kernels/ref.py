@@ -21,7 +21,7 @@ __all__ = [
 
 
 def radix_matmul_ref(
-    x_q: jax.Array, w_q: jax.Array, num_steps: int
+    x_q: jax.Array, w_q: jax.Array, num_steps: int, *, periods: int = 1
 ) -> jax.Array:
     """Bit-serial matmul oracle.
 
@@ -30,37 +30,55 @@ def radix_matmul_ref(
 
     Mathematically equal to ``x_q @ w_q`` (the radix identity), but written
     bit-serially on purpose: the oracle mirrors the paper's dataflow.
+
+    ``periods > 1`` is the phase-coding schedule: all ``periods * T`` time
+    steps run with the tiled per-phase weight ``2^(T-1-(t mod T))`` and
+    the accumulator divides back down by ``periods`` (exact).
     """
     x = x_q.astype(jnp.int32)
     acc = jnp.zeros((x.shape[0], w_q.shape[1]), jnp.int32)
-    for t in range(num_steps):
-        shift = num_steps - 1 - t
-        plane = (x >> shift) & 1
-        acc = (acc << 1) + jax.lax.dot_general(
-            plane, w_q.astype(jnp.int32),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-    return acc
+
+    def dot(plane):
+        return jax.lax.dot_general(
+            plane, w_q.astype(jnp.int32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    if periods == 1:
+        for t in range(num_steps):            # the paper's Horner schedule
+            acc = (acc << 1) + dot((x >> (num_steps - 1 - t)) & 1)
+        return acc
+    for t in range(num_steps * periods):
+        shift = num_steps - 1 - (t % num_steps)
+        acc = acc + (dot((x >> shift) & 1) << shift)
+    return acc // periods
 
 
 def radix_conv2d_ref(
-    x_q: jax.Array, w_q: jax.Array, num_steps: int
+    x_q: jax.Array, w_q: jax.Array, num_steps: int, *, periods: int = 1
 ) -> jax.Array:
-    """Bit-serial stride-1 VALID conv oracle (NHWC x HWIO -> NHWC, int32)."""
+    """Bit-serial stride-1 VALID conv oracle (NHWC x HWIO -> NHWC, int32).
+
+    ``periods > 1``: phase-coding plane schedule (see radix_matmul_ref)."""
     x = x_q.astype(jnp.int32)
-    acc = None
-    for t in range(num_steps):
-        shift = num_steps - 1 - t
-        plane = ((x >> shift) & 1).astype(jnp.int32)
-        part = jax.lax.conv_general_dilated(
+
+    def conv(plane):
+        return jax.lax.conv_general_dilated(
             plane, w_q.astype(jnp.int32),
             window_strides=(1, 1), padding="VALID",
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            preferred_element_type=jnp.int32,
-        )
-        acc = part if acc is None else (acc << 1) + part
-    return acc
+            preferred_element_type=jnp.int32)
+
+    acc = None
+    if periods == 1:
+        for t in range(num_steps):            # the paper's Horner schedule
+            part = conv(((x >> (num_steps - 1 - t)) & 1).astype(jnp.int32))
+            acc = part if acc is None else (acc << 1) + part
+        return acc
+    for t in range(num_steps * periods):
+        shift = num_steps - 1 - (t % num_steps)
+        part = conv(((x >> shift) & 1).astype(jnp.int32)) << shift
+        acc = part if acc is None else acc + part
+    return acc // periods
 
 
 def spike_encode_ref(x: jax.Array, num_steps: int, scale: float) -> jax.Array:
@@ -87,28 +105,36 @@ def requantize_ref(acc: jax.Array, num_steps: int, mult) -> jax.Array:
 
 def radix_matmul_epilogue_ref(
     x_q: jax.Array, w_q: jax.Array, bias: jax.Array, mult,
-    num_steps: int,
+    num_steps: int, *, periods: int = 1,
 ) -> jax.Array:
     """Bit-serial matmul + fused output logic -> packed uint8 levels."""
-    acc = radix_matmul_ref(x_q, w_q, num_steps) + bias.astype(jnp.int32)
-    return requantize_ref(acc, num_steps, mult)
+    acc = radix_matmul_ref(x_q, w_q, num_steps, periods=periods)
+    return requantize_ref(acc + bias.astype(jnp.int32), num_steps, mult)
 
 
 def radix_conv2d_epilogue_ref(
     x_q: jax.Array, w_q: jax.Array, bias: jax.Array, mult,
-    num_steps: int, *, stride: int = 1,
+    num_steps: int, *, stride: int = 1, periods: int = 1,
 ) -> jax.Array:
     """Bit-serial strided VALID conv + fused output logic -> uint8 levels."""
     x = x_q.astype(jnp.int32)
-    acc = None
-    for t in range(num_steps):
-        shift = num_steps - 1 - t
-        plane = ((x >> shift) & 1).astype(jnp.int32)
-        part = jax.lax.conv_general_dilated(
+
+    def conv(plane):
+        return jax.lax.conv_general_dilated(
             plane, w_q.astype(jnp.int32),
             window_strides=(stride, stride), padding="VALID",
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            preferred_element_type=jnp.int32,
-        )
-        acc = part if acc is None else (acc << 1) + part
+            preferred_element_type=jnp.int32)
+
+    acc = None
+    if periods == 1:
+        for t in range(num_steps):            # the paper's Horner schedule
+            part = conv(((x >> (num_steps - 1 - t)) & 1).astype(jnp.int32))
+            acc = part if acc is None else (acc << 1) + part
+    else:
+        for t in range(num_steps * periods):
+            shift = num_steps - 1 - (t % num_steps)
+            part = conv(((x >> shift) & 1).astype(jnp.int32)) << shift
+            acc = part if acc is None else acc + part
+        acc = acc // periods
     return requantize_ref(acc + bias.astype(jnp.int32), num_steps, mult)

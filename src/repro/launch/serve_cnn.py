@@ -15,10 +15,20 @@ driver stacks three layers (DESIGN.md §3):
    until the batch is full or the oldest request times out, then flush as
    one plan call — amortizing dispatch without unbounded latency.
 
+The target encoding is swappable from the CLI (``--encoding`` with
+``--num-steps``/``--periods``; docs/encodings.md is the selection guide):
+kernels-capable specs (radix, phase) serve compiled fused-kernel plans,
+jnp-only specs (rate, TTFS) serve per-bucket jitted closures — same
+bucketing, queueing and stats machinery either way.
+
 Usage:
   python -m repro.launch.serve_cnn --arch vgg11 --smoke
   python -m repro.launch.serve_cnn --arch lenet5 --requests 64 --buckets 1,4,8
   python -m repro.launch.serve_cnn --arch lenet5 --smoke --dataflow bitserial
+  python -m repro.launch.serve_cnn --arch lenet5 --smoke \\
+      --encoding phase --num-steps 8 --periods 2
+  python -m repro.launch.serve_cnn --arch fang_cnn --smoke \\
+      --encoding ttfs --pool-mode avg
 """
 
 from __future__ import annotations
@@ -38,6 +48,8 @@ from repro.core import conversion, engine
 
 __all__ = [
     "ARCHS",
+    "ENCODINGS",
+    "make_encoding",
     "build_qnet",
     "CNNServer",
     "MicroBatchQueue",
@@ -45,6 +57,33 @@ __all__ = [
     "run_request_stream",
     "main",
 ]
+
+
+# CLI name -> spec constructor; phase is the only one with an extra knob
+ENCODINGS = {
+    "radix": api.RadixEncoding,
+    "rate": api.RateEncoding,
+    "ttfs": api.TTFSEncoding,
+    "phase": api.PhaseEncoding,
+}
+
+
+def make_encoding(name: str, num_steps: int, *,
+                  periods: int = 1) -> api.EncodingSpec:
+    """Build an :class:`repro.api.EncodingSpec` from CLI-style arguments.
+
+    ``periods`` only applies to phase coding; passing it with any other
+    encoding raises (nothing silently ignored).
+    """
+    if name not in ENCODINGS:
+        raise ValueError(
+            f"encoding must be one of {sorted(ENCODINGS)}, got {name!r}")
+    if name == "phase":
+        return api.PhaseEncoding(num_steps, periods=periods)
+    if periods != 1:
+        raise ValueError(
+            f"--periods applies to phase coding only, not {name!r}")
+    return ENCODINGS[name](num_steps)
 
 
 # ---------------------------------------------------------------------------
@@ -302,12 +341,24 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--pool-mode", default="or", choices=["or", "avg", "max"])
-    ap.add_argument("--num-steps", type=int, default=4)
+    ap.add_argument("--pool-mode", default="or", choices=["or", "avg", "max"],
+                    help="rate needs avg; ttfs needs avg/max (the spec "
+                         "validates loudly)")
+    ap.add_argument("--num-steps", type=int, default=4,
+                    help="total time steps T (phase: all periods)")
+    ap.add_argument("--encoding", default="radix", choices=sorted(ENCODINGS),
+                    help="target neural encoding (docs/encodings.md)")
+    ap.add_argument("--periods", type=int, default=1,
+                    help="phase coding: repeated periods P (T/P phases)")
+    ap.add_argument("--backend", default=None, choices=["kernels", "jnp"],
+                    help="default: kernels when the encoding supports it, "
+                         "else jnp")
     ap.add_argument("--buckets", default="1,8,32",
                     help="comma-separated batch bucket ladder")
-    ap.add_argument("--dataflow", default="fused",
-                    choices=["fused", "bitserial"])
+    ap.add_argument("--dataflow", default=None,
+                    choices=["fused", "bitserial"],
+                    help="in-kernel dataflow (kernels backend; default: "
+                         "the encoding's first declared dataflow)")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-request", type=int, default=8,
                     help="request sizes drawn uniformly from [1, this]")
@@ -317,13 +368,18 @@ def main() -> None:
     args = ap.parse_args()
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
+    spec = make_encoding(args.encoding, args.num_steps,
+                         periods=args.periods)
+    backend = args.backend or ("kernels" if "kernels" in spec.backends
+                               else "jnp")
     qnet, item = build_qnet(args.arch, smoke=args.smoke,
                             pool_mode=args.pool_mode,
-                            num_steps=args.num_steps, seed=args.seed)
-    server = CNNServer(qnet, item, buckets=buckets, dataflow=args.dataflow,
+                            encoding=spec, seed=args.seed)
+    server = CNNServer(qnet, item, buckets=buckets, backend=backend,
+                       dataflow=args.dataflow,
                        data_parallel=args.data_parallel)
-    print(f"[serve_cnn] {args.arch} item={item} buckets={buckets} "
-          f"devices={len(jax.devices())}")
+    print(f"[serve_cnn] {args.arch} {spec} backend={backend} item={item} "
+          f"buckets={buckets} devices={len(jax.devices())}")
     t0 = time.monotonic()
     server.warmup()
     print(f"[serve_cnn] warmed {len(buckets)} bucket plans in "

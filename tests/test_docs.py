@@ -1,0 +1,84 @@
+"""Documentation contracts (the CI docs job).
+
+* Intra-repo markdown links in README.md / DESIGN.md / docs/*.md must
+  resolve to real files — a rename or deletion breaks the build, not the
+  reader.
+* The support matrix embedded in ``docs/encodings.md`` must be exactly
+  what ``repro.core.encoding.support_matrix_markdown()`` generates from
+  the specs' own declarations, so the docs cannot drift from the code.
+* The README quickstart and docs must reference only the live API
+  surface (no resurrected ``engine.run`` calls).
+"""
+
+import pathlib
+import re
+
+import pytest
+
+from repro.core import encoding
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = sorted(
+    [REPO / "README.md", REPO / "DESIGN.md"] + list(REPO.glob("docs/*.md")))
+
+# [text](target) — skip images ![..], external schemes and pure anchors
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _intra_repo_links(path: pathlib.Path):
+    for target in _LINK.findall(path.read_text()):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        if target.startswith("#"):
+            continue
+        yield target.split("#", 1)[0]
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_intra_repo_links_resolve(doc):
+    missing = [t for t in _intra_repo_links(doc)
+               if not (doc.parent / t).exists()]
+    assert not missing, (
+        f"{doc.relative_to(REPO)} links to missing files: {missing}")
+
+
+def test_docs_exist():
+    for p in (REPO / "docs" / "encodings.md", REPO / "README.md",
+              REPO / "DESIGN.md"):
+        assert p.exists(), p
+
+
+def test_support_matrix_matches_spec_declarations():
+    """docs/encodings.md support matrix == the generated one, verbatim."""
+    text = (REPO / "docs" / "encodings.md").read_text()
+    m = re.search(r"<!-- support-matrix:begin -->\n(.*?)\n"
+                  r"<!-- support-matrix:end -->", text, re.S)
+    assert m, "support-matrix markers missing from docs/encodings.md"
+    assert m.group(1).strip() == encoding.support_matrix_markdown().strip(), (
+        "docs/encodings.md support matrix drifted from the specs' declared "
+        "capabilities — regenerate it with "
+        "repro.core.encoding.support_matrix_markdown()")
+
+
+def test_support_matrix_covers_every_spec():
+    names = {cls.name for cls in encoding.SPECS}
+    assert names == {"radix", "rate", "ttfs", "phase"}
+    rows = encoding.support_matrix()
+    assert [r["name"] for r in rows] == [cls.name for cls in encoding.SPECS]
+    for row in rows:
+        cls = dict(zip([c.name for c in encoding.SPECS],
+                       encoding.SPECS))[row["name"]]
+        assert row["backends"] == cls.backends
+        assert row["kernel_dataflows"] == cls.kernel_dataflows
+        assert row["pool_modes"] == cls.pool_modes
+
+
+def test_no_stale_engine_run_recommendation():
+    """engine.run survives only as a deprecation shim; user-facing docs
+    must not tell anyone to call it (mentioning the shim status is fine)."""
+    for doc in DOC_FILES:
+        for line in doc.read_text().splitlines():
+            if "engine.run(" in line and "deprecat" not in line.lower():
+                # allowed only in the DESIGN.md migration table's OLD column
+                assert "| `engine.run(" in line.strip(), (
+                    f"{doc.name}: stale engine.run reference: {line!r}")

@@ -1,0 +1,373 @@
+"""Temporal coding expansion: TTFS + phase EncodingSpecs (ISSUE 4).
+
+The paper's claim is one accelerator supporting *emerging neural
+encodings*; this suite proves the two temporal schemes are first-class:
+
+* declarations (levels math, packed bits, plane weights, period grids),
+* decode round-trip ``decode(encode(q)) == q`` across ALL four specs over
+  their representable level grids (exhaustive + property-based),
+* ``validate_static`` error paths: every illegal (encoding, pool) pairing
+  raises with the supported options named — nothing silently falls
+  through,
+* end-to-end plan-vs-``api.oracle`` bit-exactness on LeNet-5 and Fang
+  CNN-2 (TTFS on the jnp backend; phase additionally on the kernels
+  backend, both dataflows, with the period-repeated bitserial schedule),
+* the kernel-level period schedule against the ref.py oracles.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # optional-hypothesis shim
+
+from repro import api
+from repro.core import conversion, encoding
+from repro.kernels import ops, ref
+from repro.kernels.radix_matmul import radix_matmul_pallas
+from repro.models import fang, lenet
+
+RNG = np.random.default_rng(29)
+
+ALL_SPECS = [api.RadixEncoding(4), api.RateEncoding(6),
+             api.TTFSEncoding(4), api.PhaseEncoding(8, periods=2)]
+
+
+def _make(maker=lenet, pool_mode="avg", width_mult=0.25, **convert_kw):
+    static, params, input_hw = maker.make(pool_mode=pool_mode,
+                                          width_mult=width_mult)
+    calib = jnp.asarray(RNG.uniform(0, 1, (4,) + input_hw), jnp.float32)
+    qnet = conversion.convert(static, params, calib, **convert_kw)
+    return qnet, input_hw
+
+
+def _x(batch, input_hw):
+    return jnp.asarray(RNG.uniform(0, 1, (batch,) + input_hw), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Declarations: the specs' own capability statements.
+# ---------------------------------------------------------------------------
+
+
+class TestDeclarations:
+    def test_ttfs(self):
+        spec = api.TTFSEncoding(4)
+        assert spec.levels == 16                      # grid units
+        assert spec.backends == ("jnp",)
+        assert spec.kernel_dataflows == ()
+        assert spec.pool_modes == ("avg", "max")
+        assert spec.radix_planes
+        np.testing.assert_array_equal(spec.representable_levels(),
+                                      [0, 1, 2, 4, 8])
+        np.testing.assert_array_equal(spec.plane_weights(), [8, 4, 2, 1])
+        with pytest.raises(ValueError, match="kernel dataflow"):
+            spec.validate_dataflow(None)
+
+    def test_phase(self):
+        spec = api.PhaseEncoding(8, periods=2)
+        assert spec.phases == 4 and spec.packed_bits == 4
+        assert spec.levels == 16 and spec.max_level == 15
+        assert spec.backends == ("kernels", "jnp")
+        assert spec.kernel_dataflows == ("fused", "bitserial")
+        assert spec.validate_dataflow(None) == "fused"
+        assert not spec.radix_planes                  # repeated periods
+        assert api.PhaseEncoding(4).radix_planes      # P=1 is plain radix
+        np.testing.assert_array_equal(spec.plane_weights(),
+                                      [8, 4, 2, 1, 8, 4, 2, 1])
+
+    def test_phase_period_validation(self):
+        with pytest.raises(ValueError, match="divisible"):
+            api.PhaseEncoding(7, periods=2)
+        with pytest.raises(ValueError, match="periods"):
+            api.PhaseEncoding(4, periods=0)
+
+    def test_specs_hashable_and_distinct(self):
+        assert api.PhaseEncoding(4) != api.RadixEncoding(4)
+        assert api.PhaseEncoding(8, periods=2) != api.PhaseEncoding(8)
+        assert api.TTFSEncoding(4) != api.RadixEncoding(4)
+        assert len(set(ALL_SPECS)) == 4
+
+    def test_registry_covers_all(self):
+        assert [cls.name for cls in api.SPECS] == [
+            "radix", "rate", "ttfs", "phase"]
+
+    def test_ttfs_single_spike(self):
+        """At most ONE spike per activation — the TTFS sparsity claim."""
+        spec = api.TTFSEncoding(5)
+        planes = spec.encode(jnp.arange(32))
+        assert int(planes.sum(0).max()) == 1
+        assert int(planes.sum(0).min()) == 0          # q = 0: empty train
+
+    def test_ttfs_timing_is_value(self):
+        """Larger value -> earlier spike: t = T - 1 - msb(q)."""
+        spec = api.TTFSEncoding(4)
+        planes = np.asarray(spec.encode(jnp.asarray([8, 4, 2, 1])))
+        assert [int(planes[:, i].argmax()) for i in range(4)] == [0, 1, 2, 3]
+
+    def test_sparsity_ordering(self):
+        """Mean spikes/activation: ttfs <= radix <= phase (P x radix)."""
+        q = jnp.arange(16)
+        n = lambda s: float(s.encode(q).sum()) / 16
+        ttfs = n(api.TTFSEncoding(4))
+        radix = n(api.RadixEncoding(4))
+        phase = n(api.PhaseEncoding(8, periods=2))
+        assert ttfs < radix < phase
+        assert phase == pytest.approx(2 * radix)
+
+
+# ---------------------------------------------------------------------------
+# Decode round-trip across every spec (the encode/decode contract).
+# ---------------------------------------------------------------------------
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+    def test_exhaustive_roundtrip(self, spec):
+        q = jnp.asarray(spec.representable_levels(), jnp.int32)
+        planes = spec.encode(q)
+        assert planes.shape == (spec.num_steps, q.shape[0])
+        assert bool(jnp.all((planes == 0) | (planes == 1)))
+        np.testing.assert_array_equal(np.asarray(spec.decode(planes)),
+                                      np.asarray(q))
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+    def test_decode_is_weighted_plane_reduce(self, spec):
+        """decode == reduce_planes on raw planes: the plane-weight algebra
+        (DESIGN.md §7) in its purest form."""
+        q = jnp.asarray(spec.representable_levels(), jnp.int32)
+        planes = spec.encode(q)
+        np.testing.assert_array_equal(np.asarray(spec.decode(planes)),
+                                      np.asarray(spec.reduce_planes(planes)))
+        w = spec.plane_weights().reshape(spec.num_steps, 1)
+        manual = (np.asarray(planes, np.int64) * w).sum(0) // spec.periods
+        np.testing.assert_array_equal(manual, np.asarray(q))
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+    def test_quantize_lands_on_grid(self, spec):
+        """quantize/requantize may only emit representable levels."""
+        x = jnp.asarray(RNG.uniform(-0.5, 1.5, 256), jnp.float32)
+        grid = set(spec.representable_levels().tolist())
+        assert set(np.asarray(spec.quantize(x)).tolist()) <= grid
+        acc = jnp.asarray(RNG.integers(-500, 500, 256), jnp.int32)
+        assert set(np.asarray(spec.requantize(acc, 0.07)).tolist()) <= grid
+
+    @given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_property_roundtrip(self, T, seed):
+        rng = np.random.default_rng(seed)
+        for spec in (api.RadixEncoding(T), api.RateEncoding(T),
+                     api.TTFSEncoding(T),
+                     api.PhaseEncoding(2 * T, periods=2)):
+            grid = spec.representable_levels()
+            q = jnp.asarray(rng.choice(grid, 17), jnp.int32)
+            np.testing.assert_array_equal(
+                np.asarray(spec.decode(spec.encode(q))), np.asarray(q))
+
+
+# ---------------------------------------------------------------------------
+# validate_static / compile-time error paths for all four specs.
+# ---------------------------------------------------------------------------
+
+
+POOL_CASES = [
+    (api.RadixEncoding(4), "or", True),
+    (api.RadixEncoding(4), "avg", True),
+    (api.RadixEncoding(4), "max", True),
+    (api.RateEncoding(6), "avg", True),
+    (api.RateEncoding(6), "or", False),
+    (api.RateEncoding(6), "max", False),
+    (api.TTFSEncoding(4), "avg", True),
+    (api.TTFSEncoding(4), "max", True),
+    (api.TTFSEncoding(4), "or", False),
+    (api.PhaseEncoding(8, periods=2), "or", True),
+    (api.PhaseEncoding(8, periods=2), "avg", True),
+    (api.PhaseEncoding(8, periods=2), "max", True),
+]
+
+
+class TestValidation:
+    @pytest.mark.parametrize(
+        "spec,pool,ok", POOL_CASES,
+        ids=[f"{s.name}-{p}" for s, p, _ in POOL_CASES])
+    def test_pool_pairings(self, spec, pool, ok):
+        static = (("conv", {}), ("pool", {"window": 2, "mode": pool}),
+                  ("flatten", {}), ("linear", {}))
+        if ok:
+            spec.validate_static(static)
+        else:
+            with pytest.raises(ValueError) as e:
+                spec.validate_static(static)
+            # actionable: names the offending mode AND the supported ones
+            assert pool in str(e.value) and "supported" in str(e.value)
+            for good in spec.pool_modes:
+                assert good in str(e.value)
+
+    def test_ttfs_on_kernels_backend_raises(self):
+        qnet, hw = _make(encoding=api.TTFSEncoding(4))
+        with pytest.raises(ValueError, match="kernels"):
+            api.Accelerator(backend="kernels").compile(qnet, hw)
+
+    def test_ttfs_spec_rejected_by_kernel_wrappers(self):
+        with pytest.raises(ValueError, match="kernels"):
+            ops._schedule(api.TTFSEncoding(4))
+
+    def test_phase_spec_accepted_by_kernel_wrappers(self):
+        assert ops._schedule(api.PhaseEncoding(8, periods=2)) == (4, 2)
+        assert ops._schedule(api.RadixEncoding(4)) == (4, 1)
+        assert ops._schedule(5) == (5, 1)
+
+    def test_convert_rejects_bad_pools(self):
+        static, params, input_hw = lenet.make(pool_mode="or",
+                                              width_mult=0.25)
+        calib = jnp.asarray(RNG.uniform(0, 1, (2,) + input_hw), jnp.float32)
+        with pytest.raises(ValueError, match="pool mode"):
+            conversion.convert(static, params, calib,
+                               encoding=api.TTFSEncoding(4))
+
+    def test_phase_unknown_dataflow_raises(self):
+        qnet, hw = _make(encoding=api.PhaseEncoding(8, periods=2))
+        with pytest.raises(ValueError, match="dataflow"):
+            api.Accelerator(dataflow="horner").compile(qnet, hw,
+                                                       buckets=(1,))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: plan vs oracle, bit-exact (LeNet-5 + Fang CNN-2).
+# ---------------------------------------------------------------------------
+
+
+class TestTTFSEndToEnd:
+    @pytest.mark.parametrize("pool", ["avg", "max"])
+    def test_lenet_plan_vs_oracle(self, pool):
+        qnet, hw = _make(pool_mode=pool, encoding=api.TTFSEncoding(4))
+        exe = api.Accelerator(backend="jnp").compile(qnet, hw,
+                                                     buckets=(1, 4))
+        for n in (1, 3, 6):
+            x = _x(n, hw)
+            want = api.oracle(qnet, x, mode="snn")
+            np.testing.assert_array_equal(
+                np.asarray(api.oracle(qnet, x, mode="packed")),
+                np.asarray(want))
+            np.testing.assert_array_equal(np.asarray(exe(x)),
+                                          np.asarray(want))
+
+    def test_fang_plan_vs_oracle(self):
+        qnet, hw = _make(fang, encoding=api.TTFSEncoding(5))
+        exe = api.Accelerator(backend="jnp").compile(qnet, hw, buckets=(2,))
+        x = _x(2, hw)
+        np.testing.assert_array_equal(
+            np.asarray(exe(x)),
+            np.asarray(api.oracle(qnet, x, mode="snn")))
+
+    def test_ttfs_less_precise_than_radix(self):
+        """Log-spaced levels: TTFS tracks the float net worse than radix
+        at equal T — the sparsity-for-precision trade, measured."""
+        static, params, input_hw = lenet.make(pool_mode="avg",
+                                              width_mult=0.25)
+        calib = jnp.asarray(RNG.uniform(0, 1, (8,) + input_hw), jnp.float32)
+        float_ref = conversion.float_forward(static, params, calib)
+        errs = {}
+        for spec in (api.RadixEncoding(4), api.TTFSEncoding(4)):
+            qnet = conversion.convert(static, params, calib, encoding=spec,
+                                      weight_bits=8)
+            out = api.oracle(qnet, calib, mode="packed")
+            errs[spec.name] = float(jnp.mean(jnp.abs(out - float_ref)))
+        assert errs["radix"] < errs["ttfs"]
+
+
+class TestPhaseEndToEnd:
+    @pytest.mark.parametrize("dataflow", ["fused", "bitserial"])
+    def test_lenet_kernels_vs_oracle(self, dataflow):
+        qnet, hw = _make(pool_mode="or",
+                         encoding=api.PhaseEncoding(8, periods=2))
+        exe = api.Accelerator(backend="kernels", dataflow=dataflow).compile(
+            qnet, hw, buckets=(1, 4))
+        for n in (1, 5):
+            x = _x(n, hw)
+            want = api.oracle(qnet, x, mode="snn")
+            np.testing.assert_array_equal(
+                np.asarray(api.oracle(qnet, x, mode="packed")),
+                np.asarray(want))
+            np.testing.assert_array_equal(np.asarray(exe(x)),
+                                          np.asarray(want))
+
+    def test_fang_kernels_vs_oracle(self):
+        qnet, hw = _make(fang, encoding=api.PhaseEncoding(6, periods=2))
+        exe = api.Accelerator(backend="kernels",
+                              dataflow="bitserial").compile(qnet, hw,
+                                                            buckets=(2,))
+        x = _x(2, hw)
+        np.testing.assert_array_equal(
+            np.asarray(exe(x)),
+            np.asarray(api.oracle(qnet, x, mode="snn")))
+
+    def test_phase_jnp_vs_oracle(self):
+        qnet, hw = _make(pool_mode="max",
+                         encoding=api.PhaseEncoding(6, periods=3))
+        exe = api.Accelerator(backend="jnp").compile(qnet, hw, buckets=(2,))
+        x = _x(2, hw)
+        want = api.oracle(qnet, x, mode="snn")
+        np.testing.assert_array_equal(
+            np.asarray(api.oracle(qnet, x, mode="packed")),
+            np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(exe(x)), np.asarray(want))
+
+    def test_single_period_phase_equals_radix(self):
+        """P = 1 phase coding IS radix coding: identical folded algebra,
+        identical outputs."""
+        static, params, input_hw = lenet.make(pool_mode="or",
+                                              width_mult=0.25)
+        calib = jnp.asarray(RNG.uniform(0, 1, (4,) + input_hw), jnp.float32)
+        q_phase = conversion.convert(static, params, calib,
+                                     encoding=api.PhaseEncoding(4))
+        q_radix = conversion.convert(static, params, calib,
+                                     encoding=api.RadixEncoding(4))
+        x = _x(2, input_hw)
+        np.testing.assert_array_equal(
+            np.asarray(api.oracle(q_phase, x, mode="snn")),
+            np.asarray(api.oracle(q_radix, x, mode="snn")))
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level period schedule (the plane-weight extension).
+# ---------------------------------------------------------------------------
+
+
+class TestKernelPeriods:
+    def _data(self, m=8, k=16, n=8, bits=3):
+        x = jnp.asarray(RNG.integers(0, 1 << bits, (m, k)), jnp.uint8)
+        w = jnp.asarray(RNG.integers(-3, 4, (k, n)), jnp.int8)
+        return x, w
+
+    @pytest.mark.parametrize("periods", [2, 3])
+    def test_periodic_bitserial_matmul_matches_ref(self, periods):
+        x, w = self._data()
+        got = radix_matmul_pallas(
+            jnp.pad(x, ((0, 0), (0, 0))), w, num_steps=3,
+            method="bitserial", bm=8, bk=16, bn=8, interpret=True,
+            periods=periods)
+        want = ref.radix_matmul_ref(x, w, 3, periods=periods)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # and the period schedule is value-preserving: == plain radix
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.radix_matmul_ref(x, w,
+                                                                      3)))
+
+    def test_periodic_epilogue_matches_ref(self):
+        x, w = self._data()
+        bias = jnp.asarray(RNG.integers(-20, 20, (1, 8)), jnp.int32)
+        mult = jnp.full((1, 8), 0.031, jnp.float32)
+        got = radix_matmul_pallas(
+            x, w, num_steps=3, method="bitserial", bm=8, bk=16, bn=8,
+            interpret=True, periods=2, bias=bias, mult=mult)
+        want = ref.radix_matmul_epilogue_ref(x, w, bias, mult, 3, periods=2)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ops_wrapper_threads_spec_schedule(self):
+        """ops.radix_matmul given a PhaseEncoding uses its packed bits and
+        period-replayed schedule — same ints as the radix identity."""
+        spec = api.PhaseEncoding(6, periods=2)       # K = 3
+        x, w = self._data(bits=3)
+        out = ops.radix_matmul(x, w, None, spec, method="bitserial")
+        want = x.astype(jnp.int32) @ w.astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
