@@ -13,6 +13,18 @@ XLA-compiled execution strategies the accelerator design cares about:
                        write is 1 byte/element instead of 4
   radix_bitserial_xla  T gated int matmuls + Horner (the paper-faithful
                        dataflow, compiled by XLA; what the FPGA executes)
+  ttfs_fused           the same single packed pass over TTFS levels (the
+                       pow2 grid costs the MXU nothing)
+  ttfs_bitserial_xla   the plane-replay dataflow over one-hot TTFS trains
+  ttfs_bitserial_sparse the plane-occupancy schedule (DESIGN.md §8): each
+                       plane pass gated by a lax.cond on the input's bit
+                       union, so globally empty planes never execute —
+                       timed on a plane-sparse TTFS input; the measured
+                       win lands in the JSON config block as
+                       ``ttfs_sparsity_speedup``
+
+Every row carries its **spike density** (mean spikes per activation over
+the input's plane schedule — the column the sparsity dataflow monetizes).
 
 plus the HBM-traffic model per strategy: total bytes moved and, separately,
 the inter-layer *activation write* bytes (the ping-pong buffer traffic the
@@ -36,7 +48,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import encoding
 from repro.kernels import ref
+
+
+def _density(x_q, num_bits: int) -> float:
+    """Mean spikes per activation of a packed tensor's plane schedule."""
+    planes = encoding.unpack_planes(x_q, num_bits)
+    return float(planes.sum()) / x_q.size
+
+
+def _sparse_bitserial(T):
+    """The plane-occupancy dataflow (DESIGN.md §8) as a jitted XLA twin:
+    one bit-union reduction, then each Horner plane pass behind a
+    lax.cond — empty planes cost a branch, not a matmul."""
+
+    def fwd(x_q, w):
+        x = x_q.astype(jnp.int32)
+        union = jax.lax.reduce(x, jnp.int32(0), jax.lax.bitwise_or, (0, 1))
+        acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+        zero = acc
+        for t in range(T):
+            shift = T - 1 - t
+            plane = (x >> shift) & 1
+            part = jax.lax.cond(
+                ((union >> shift) & 1) > 0,
+                lambda p=plane: jax.lax.dot_general(
+                    p, w, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32),
+                lambda: zero)
+            acc = (acc << 1) + part
+        return acc
+
+    return jax.jit(fwd)
 
 _JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
 
@@ -60,6 +104,14 @@ def run(log=print, m=512, k=512, n=512, T=4, json_path=_JSON_PATH):
     b_q = jnp.asarray(rng.integers(-60, 60, (1, n)), jnp.int32)
     mult = jnp.full((1, n), 0.017, jnp.float32)
 
+    # TTFS inputs: the same level budget projected onto the pow2 grid —
+    # one spike per activation; the "sparse" variant additionally narrows
+    # the value distribution so most bit planes are globally empty (the
+    # regime the plane-occupancy schedule monetizes).
+    x_ttfs = encoding.pow2_floor(x_q, T).astype(jnp.uint8)
+    x_ttfs_sparse = jnp.asarray(
+        rng.choice([0, 1 << (T - 1)], (m, k), p=[0.5, 0.5]), jnp.uint8)
+
     dense = jax.jit(lambda a, b: a @ b)
     fused = jax.jit(lambda a, b: jax.lax.dot_general(
         a.astype(jnp.int32), b.astype(jnp.int32),
@@ -70,21 +122,43 @@ def run(log=print, m=512, k=512, n=512, T=4, json_path=_JSON_PATH):
             (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
         + b_q, T, mult))
     bitserial = jax.jit(lambda a, b: ref.radix_matmul_ref(a, b, T))
+    sparse_bs = _sparse_bitserial(T)
 
+    # both bitserial rows are timed on the SAME plane-sparse input — the
+    # speedup isolates the dataflow, not an input swap (the density
+    # column shows which input each row saw); the sparse row's modeled
+    # reads count only the planes its occupancy union actually visits.
+    ttfs_bs_dense_us = _time(bitserial, x_ttfs_sparse, w_q)
+    ttfs_bs_sparse_us = _time(sparse_bs, x_ttfs_sparse, w_q)
+    occupied = int(bin(int(np.bitwise_or.reduce(
+        np.asarray(x_ttfs_sparse).ravel().astype(np.int64)))).count("1"))
     # bytes model: (input reads + weight reads, activation writes)
     rows = [
-        # name, us/call, read bytes, activation write bytes
+        # name, us/call, read bytes, activation write bytes, spikes/act
         ("dense_f32", _time(dense, x_f, w_f),
-         (m * k + k * n) * 4, m * n * 4),
+         (m * k + k * n) * 4, m * n * 4, None),
         ("radix_fused", _time(fused, x_q, w_q),
-         m * k + k * n, m * n * 4),
+         m * k + k * n, m * n * 4, _density(x_q, T)),
         ("radix_fused_epilogue", _time(fused_epi, x_q, w_q),
-         m * k + k * n, m * n * 1),
+         m * k + k * n, m * n * 1, _density(x_q, T)),
         ("radix_bitserial_xla", _time(bitserial, x_q, w_q),
-         T * (m * k + k * n), m * n * 4),
+         T * (m * k + k * n), m * n * 4, _density(x_q, T)),
+        ("ttfs_fused", _time(fused, x_ttfs, w_q),
+         m * k + k * n, m * n * 4, _density(x_ttfs, T)),
+        ("ttfs_bitserial_xla", ttfs_bs_dense_us,
+         T * (m * k + k * n), m * n * 4, _density(x_ttfs_sparse, T)),
+        ("ttfs_bitserial_sparse", ttfs_bs_sparse_us,
+         occupied * (m * k + k * n), m * n * 4,
+         _density(x_ttfs_sparse, T)),
     ]
-    for name, us, rd, wr in rows:
-        log(f"kernel,{name},{us:.1f}us,{rd + wr}B,act_write={wr}B")
+    for name, us, rd, wr, dens in rows:
+        d = "n/a" if dens is None else f"{dens:.3f}"
+        log(f"kernel,{name},{us:.1f}us,{rd + wr}B,act_write={wr}B,"
+            f"spikes_per_act={d}")
+    ttfs_speedup = ttfs_bs_dense_us / max(ttfs_bs_sparse_us, 1e-9)
+    log(f"kernel,ttfs_sparsity_speedup={ttfs_speedup:.2f}  # plane-"
+        f"occupancy early-exit vs full plane replay on a plane-sparse "
+        f"TTFS input (DESIGN.md §8)")
     d = {r[0]: r for r in rows}
     total = lambda r: r[2] + r[3]
     traffic_ratio = total(d["dense_f32"]) / total(d["radix_fused_epilogue"])
@@ -105,12 +179,16 @@ def run(log=print, m=512, k=512, n=512, T=4, json_path=_JSON_PATH):
     payload = {
         "bench": "kernels",
         "config": {"m": m, "k": k, "n": n, "T": T,
-                   "backend": jax.default_backend()},
+                   "backend": jax.default_backend(),
+                   # plane-occupancy early-exit vs full plane replay on
+                   # the plane-sparse TTFS input (DESIGN.md §8)
+                   "ttfs_sparsity_speedup": round(ttfs_speedup, 3)},
         "rows": [
             {"name": name, "us_per_call": round(us, 1),
              "read_bytes": rd, "act_write_bytes": wr,
-             "bytes_moved": rd + wr}
-            for name, us, rd, wr in rows
+             "bytes_moved": rd + wr,
+             "spikes_per_act": None if dens is None else round(dens, 3)}
+            for name, us, rd, wr, dens in rows
         ],
         "traffic_ratio_dense_over_fused_epilogue": round(traffic_ratio, 3),
         "act_write_ratio_int32_over_fused_epilogue": round(act_ratio, 3),

@@ -54,6 +54,7 @@ from repro.core import conversion, engine
 from repro.core.encoding import (
     SPECS,
     EncodingSpec,
+    KernelSchedule,
     PhaseEncoding,
     RadixEncoding,
     RateEncoding,
@@ -65,6 +66,7 @@ from repro.core.conversion import convert
 
 __all__ = [
     "EncodingSpec",
+    "KernelSchedule",
     "RadixEncoding",
     "RateEncoding",
     "TTFSEncoding",
@@ -224,8 +226,14 @@ class Executable:
 
     def stats(self) -> dict:
         """Plan-cache counters: ``hits`` / ``compiles`` / ``executions``
-        / ``padded_rows`` / ``pruned`` (zero steady-state recompiles)."""
-        return self._cache.stats.as_dict()
+        / ``padded_rows`` / ``pruned`` (zero steady-state recompiles),
+        plus the sparsity-prepass counters ``plane_passes_skipped`` /
+        ``plane_passes_total`` (all-zero spike planes the kernel plans
+        early-exited or masked, DESIGN.md §8 — zeros on the jnp
+        backend, which has no plane schedule to skip)."""
+        d = self._cache.stats.as_dict()
+        d.update(self._cache.plane_stats())
+        return d
 
     def traffic(self) -> dict:
         """Modeled inter-layer activation bytes, fused packed-uint8 plan
@@ -256,7 +264,11 @@ class Accelerator:
       (interpret-mode on CPU, compiled on TPU); ``dataflow`` picks the
       in-kernel schedule among the encoding's declared
       ``kernel_dataflows`` (radix: "fused" default, "bitserial" for the
-      paper-faithful schedule).
+      paper-faithful schedule).  The kernels execute the encoding's
+      declared :class:`KernelSchedule` (docs/kernels.md) and always run
+      the plane-occupancy sparsity prepass — all-zero spike planes are
+      skipped (bitserial) or masked (fused), bit-exactly, with skip
+      counts in :meth:`Executable.stats`.
     * ``backend="jnp"``     — per-bucket jitted XLA closures of the
       reference path; the only backend for encodings without a kernel
       dataflow (e.g. :class:`RateEncoding`).

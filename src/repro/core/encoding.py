@@ -54,6 +54,8 @@ __all__ = [
     "rate_encode",
     "rate_decode",
     "radix_weights",
+    "KernelSchedule",
+    "KERNEL_OUT_GRIDS",
     "EncodingSpec",
     "RadixEncoding",
     "RateEncoding",
@@ -211,6 +213,45 @@ def rate_decode(planes: jax.Array, scale: jax.Array | float = 1.0) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Encoding specs — the first-class, swappable encoding component.
 # ---------------------------------------------------------------------------
+
+
+KERNEL_OUT_GRIDS: Tuple[str, ...] = ("dense", "pow2")
+"""Level grids the kernel epilogue can project requantized outputs onto."""
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSchedule:
+    """How an encoding's plane-weight algebra maps onto the radix kernels.
+
+    This is the *declaration* that makes a spec kernels-capable
+    (``EncodingSpec.kernel_schedule()``): the kernels never see the spec
+    itself, only this schedule, so new codes plug into the kernels path
+    without touching kernel source (docs/kernels.md walks the mapping).
+
+    Attributes:
+        packed_bits: bit-serial extraction width — bits of one period's
+            packed level the kernels unroll over (phase: ``K = T / P``).
+        periods: plane-schedule replay count for the bitserial dataflow
+            (phase: ``P``; the in-kernel accumulator divides back down,
+            exactly).  The fused dataflow never replays — the radix
+            identity collapses one period into the packed level.
+        out_level: the fused epilogue's clip ceiling (the spec's
+            ``max_level``); defaults to ``2^packed_bits - 1``.
+        out_grid: the epilogue's output level grid.  ``"dense"`` clips
+            to ``[0, out_level]``; ``"pow2"`` additionally floors onto
+            ``{0} | {2^k}`` (:func:`pow2_floor`) — TTFS's in-kernel
+            log-spaced decode, re-timing the single output spike.
+    """
+
+    packed_bits: int
+    periods: int = 1
+    out_level: Optional[int] = None
+    out_grid: str = "dense"
+
+    def __post_init__(self):
+        if self.out_level is None:
+            object.__setattr__(self, "out_level",
+                               (1 << self.packed_bits) - 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -415,6 +456,28 @@ class EncodingSpec:
                     f"{cfg.get('mode', 'or')!r} (supported: "
                     f"{self.pool_modes})")
 
+    def kernel_schedule(self) -> KernelSchedule:
+        """This encoding's :class:`KernelSchedule` — the declaration the
+        kernels path executes instead of the spec itself.
+
+        The base implementation states the generic dense-grid schedule
+        (``packed_bits``/``periods``, clip to ``max_level``); subclasses
+        with non-dense requantize grids override it (TTFS projects onto
+        the pow2 grid).  This is what replaced the old hard-wired
+        ``levels == 2^T`` kernels restriction: a new code plugs into the
+        kernels by declaring its schedule, not by editing kernel source.
+
+        Raises:
+            ValueError: the encoding declares no kernel dataflow.
+        """
+        if not self.kernel_dataflows:
+            raise ValueError(
+                f"{self.name} encoding has no kernel dataflow; supported "
+                f"backends: {self.backends}")
+        return KernelSchedule(packed_bits=self.packed_bits,
+                              periods=self.periods,
+                              out_level=self.max_level)
+
     def validate_dataflow(self, dataflow: Optional[str]) -> str:
         """Resolve/validate an in-kernel dataflow for the kernels backend.
 
@@ -426,24 +489,30 @@ class EncodingSpec:
             The resolved dataflow name.
 
         Raises:
-            ValueError: the encoding declares no kernel dataflow, declares
-                one with a non-power-of-two level grid, or ``dataflow`` is
-                not among its declared ``kernel_dataflows``.
+            ValueError: the encoding declares no kernel dataflow, its
+                :meth:`kernel_schedule` is inconsistent with its own
+                level algebra, or ``dataflow`` is not among its declared
+                ``kernel_dataflows``.
         """
-        if not self.kernel_dataflows:
+        sched = self.kernel_schedule()   # raises for jnp-only specs
+        # the schedule must be able to carry the spec's own levels: the
+        # bit-serial extraction covers packed_bits bits and the packed
+        # activations ride uint8 buffers, so the epilogue's clip ceiling
+        # (== the spec's max_level) must fit both.
+        if sched.out_grid not in KERNEL_OUT_GRIDS:
             raise ValueError(
-                f"{self.name} encoding has no kernel dataflow; supported "
-                f"backends: {self.backends}")
-        if self.levels != (1 << self.packed_bits):
-            # the kernels' fused epilogue clips to 2^T - 1 for T packed
-            # bits (radix packing == integer activation); a spec declaring
-            # kernel dataflows with any other level count would silently
-            # diverge from its own requantize semantics.
+                f"{self.name} encoding declares kernel out_grid "
+                f"{sched.out_grid!r}; supported: {KERNEL_OUT_GRIDS}")
+        if (sched.out_level != self.max_level
+                or sched.out_level > (1 << sched.packed_bits) - 1
+                or sched.out_level > 255):
             raise ValueError(
-                f"{self.name} encoding declares kernel dataflows but has "
-                f"{self.levels} levels for {self.packed_bits} packed bits; "
-                f"the kernel epilogue clips to 2^T - 1, so kernels-capable "
-                f"specs require levels == 2^T (T = packed_bits)")
+                f"{self.name} encoding declares kernel dataflows but its "
+                f"schedule is inconsistent: out_level={sched.out_level} "
+                f"must equal max_level={self.max_level}, fit "
+                f"packed_bits={sched.packed_bits} bits "
+                f"(<= {(1 << sched.packed_bits) - 1}) and fit the packed "
+                f"uint8 buffers (<= 255)")
         if dataflow is None:
             return self.kernel_dataflows[0]
         if dataflow not in self.kernel_dataflows:
@@ -587,17 +656,24 @@ class TTFSEncoding(EncodingSpec):
 
     The payoff is extreme sparsity — at most one spike per activation per
     layer versus up to ``T`` for radix — at the cost of log-spaced
-    precision (docs/encodings.md quantifies the trade).  Maximally
-    event-driven hardware loves it; dense math gains nothing, so only the
-    jnp backend is declared.  ``"or"`` pooling is excluded because OR-ing
-    one-hot trains yields multi-spike trains (not TTFS codewords); ``max``
-    (lexicographic, stays one-hot) and ``avg`` (linear sum, requantized by
-    the next layer) are preserved.
+    precision (docs/encodings.md quantifies the trade).  The packed level
+    is a power of two whose binary expansion IS the one-hot train, so the
+    KERNELS backend runs TTFS end-to-end: the ``bitserial`` dataflow
+    replays the radix plane schedule over trains where at most one plane
+    per activation carries a spike (the plane-occupancy prepass skips
+    planes no activation uses — DESIGN.md §8), the ``fused`` dataflow
+    collapses the train into one packed MXU pass, and the epilogue's
+    ``"pow2"`` output grid (:meth:`kernel_schedule`) re-times the single
+    output spike in-kernel, bit-exact with :meth:`requantize`.  ``"or"``
+    pooling is excluded because OR-ing one-hot trains yields multi-spike
+    trains (not TTFS codewords); ``max`` (lexicographic, stays one-hot)
+    and ``avg`` (linear sum, requantized by the next layer) are
+    preserved.
     """
 
     name: ClassVar[str] = "ttfs"
-    backends: ClassVar[Tuple[str, ...]] = ("jnp",)
-    kernel_dataflows: ClassVar[Tuple[str, ...]] = ()
+    backends: ClassVar[Tuple[str, ...]] = ("kernels", "jnp")
+    kernel_dataflows: ClassVar[Tuple[str, ...]] = ("fused", "bitserial")
     pool_modes: ClassVar[Tuple[str, ...]] = ("avg", "max")
     levels_doc: ClassVar[str] = "T + 1 (log-spaced)"
 
@@ -621,6 +697,13 @@ class TTFSEncoding(EncodingSpec):
     def representable_levels(self) -> np.ndarray:
         return np.concatenate(
             ([0], 1 << np.arange(self.num_steps, dtype=np.int64)))
+
+    def kernel_schedule(self) -> KernelSchedule:
+        """Radix extraction over the one-hot planes; the epilogue floors
+        the requantized level onto the pow2 grid (``out_grid="pow2"``) —
+        the output logic re-times exactly one spike, in-kernel."""
+        return dataclasses.replace(super().kernel_schedule(),
+                                   out_grid="pow2")
 
     def quantize(self, x, scale=1.0):
         """Radix quantize, then floor onto the power-of-two grid.

@@ -231,6 +231,12 @@ class CompiledPlan:
     selection happened at :func:`compile_plan` time; per call there is no
     padding of parameters and no Python-level dispatch (the layer loop is
     unrolled into one XLA program at trace time).
+
+    Every call also runs the plane-occupancy prepass (DESIGN.md §8): the
+    number of globally-empty spike planes each kernel layer skipped
+    accumulates lazily (a device scalar — no sync until
+    :meth:`plane_stats` is read) against the static per-call plane-pass
+    budget ``plane_passes_per_call``.
     """
 
     input_shape: Tuple[int, ...]
@@ -240,9 +246,39 @@ class CompiledPlan:
     _fn: Callable = dataclasses.field(repr=False)
     _params: list = dataclasses.field(repr=False)
     data_parallel: int = 1         # batch shards (shard_map over devices)
+    plane_passes_per_call: int = 0  # static: sum of in_bits*periods/layer
+    _skipped: Optional[jax.Array] = dataclasses.field(default=None,
+                                                      repr=False)
+    _calls: int = dataclasses.field(default=0, repr=False)
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        return self._fn(self._params, x)
+        out, skipped = self._fn(self._params, x)
+        # lazy device-side accumulation: no host sync on the hot path.
+        # Under an outer jax transformation `skipped` is a tracer — storing
+        # it would leak it (and poison later eager calls), so the counters
+        # simply don't accumulate for traced calls; the plan stays pure.
+        if not isinstance(skipped, jax.core.Tracer):
+            self._skipped = skipped if self._skipped is None \
+                else self._skipped + skipped
+            self._calls += 1
+        return out
+
+    def plane_stats(self) -> dict:
+        """Sparsity-prepass counters: plane passes skipped (all-zero
+        spike planes — bitserial early-exits, fused masked lanes) vs the
+        static schedule total across every call so far.  Reading this
+        syncs the lazily-accumulated device scalar."""
+        skipped = 0 if self._skipped is None else int(
+            np.asarray(self._skipped).sum())
+        return {"plane_passes_skipped": skipped,
+                "plane_passes_total": self._calls * self.plane_passes_per_call}
+
+    def reset_plane_stats(self) -> None:
+        """Zero the sparsity counters (warmup runs all-zero batches that
+        skip nearly every plane — left in, they would swamp the stats of
+        real traffic)."""
+        self._skipped = None
+        self._calls = 0
 
     def activation_traffic(self) -> dict:
         """Modeled inter-layer activation bytes written: fused vs unfused."""
@@ -301,7 +337,18 @@ def _compile_plan_impl(
       replaces all runtime gather/slice work);
     * block sizes chosen per layer; the avg-pool carry (activations
       temporarily wider than T bits, division folded into the next
-      multiplier) tracked so bit-serial extraction stays exact.
+      multiplier) tracked so bit-serial extraction stays exact;
+    * the encoding's declared :class:`~repro.core.encoding.KernelSchedule`
+      threaded into every kernel call (packed bit count, period replays,
+      epilogue clip level and output grid — TTFS's "pow2" re-timing runs
+      in-kernel).
+
+    Every compiled layer also runs the **plane-occupancy prepass**
+    (DESIGN.md §8): one bitwise-OR reduction over the layer's packed
+    input finds spike planes no activation uses, the kernels skip them
+    (bitserial ``lax.cond`` early-exit) or mask them (fused bit-mask) —
+    bit-exact either way — and the per-call skip count surfaces through
+    ``CompiledPlan.plane_stats()`` / ``Executable.stats()``.
 
     The returned plan keeps every inter-layer activation as packed uint8
     levels (1 byte/element — the pong buffer's T-bit format) except where a
@@ -325,12 +372,17 @@ def _compile_plan_impl(
     from repro.kernels.radix_conv import radix_conv2d_pallas
     from repro.kernels.radix_matmul import radix_matmul_pallas
 
-    # T here is the *packed* bit count (== num_steps except for
-    # period-repeated codes: phase packs one K-phase period per byte);
-    # `periods` replays the tiled plane-weight schedule in the bitserial
-    # dataflow (kernels divide the accumulator back down, exactly).
-    T = spec.packed_bits
-    periods = spec.periods
+    # The spec's declared KernelSchedule is everything the kernels need:
+    # T is the *packed* bit count (== num_steps except for period-repeated
+    # codes: phase packs one K-phase period per byte); `periods` replays
+    # the tiled plane-weight schedule in the bitserial dataflow (kernels
+    # divide the accumulator back down, exactly); `out_level`/`out_grid`
+    # parameterize the fused epilogue's requantization grid (TTFS: "pow2",
+    # the in-kernel log-spaced re-timing of the single output spike).
+    sched = spec.kernel_schedule()
+    T = sched.packed_bits
+    periods = sched.periods
+    out_grid = sched.out_grid
     if spec.max_level > 255:
         raise ValueError(
             f"packed uint8 plans require <= 256 levels, got {spec.levels} "
@@ -354,9 +406,19 @@ def _compile_plan_impl(
     steps: List[Tuple[Callable, dict]] = []
     infos: List[PlanLayerInfo] = []
     n_layers = len(qnet.static)
+    total_passes = 0               # static plane-pass budget (all layers)
 
     def _elems(shape) -> int:
         return int(np.prod(shape))
+
+    def _occ(state, in_bits):
+        """Plane-occupancy prepass (DESIGN.md §8): one bitwise-OR
+        reduction over the layer's packed input; returns the kernel's
+        occupancy row and the number of plane passes it will skip
+        (bitserial) or mask (fused) — all-zero spike planes only, so the
+        gated kernels stay bit-exact."""
+        row, occ_bits = kops.plane_occupancy(state, in_bits)
+        return row, (in_bits - occ_bits.sum()) * periods
 
     for (kind, cfg), qp in zip(qnet.static, qnet.qlayers):
         if kind == "conv":
@@ -382,12 +444,13 @@ def _compile_plan_impl(
                           in_bits=bits, cout=cout):
                     if pads is not None:
                         state = jnp.pad(state, pads)
+                    occ, skipped = _occ(state, in_bits)
                     acc = radix_conv2d_pallas(
                         state, p["w"], num_steps=in_bits, method=method,
                         bco=bco, stride=stride, interpret=interp,
-                        periods=periods,
+                        periods=periods, occupancy=occ,
                     )[..., :cout]
-                    return acc + p["b"]
+                    return acc + p["b"], skipped
             else:
                 bias_row, mult_row = kops.epilogue_rows(
                     qp["b_int"], qp["mult"], cout, cop, encoding=spec)
@@ -397,12 +460,16 @@ def _compile_plan_impl(
                           in_bits=bits):
                     if pads is not None:
                         state = jnp.pad(state, pads)
+                    occ, skipped = _occ(state, in_bits)
                     return radix_conv2d_pallas(
                         state, p["w"], num_steps=in_bits, method=method,
                         bco=bco, stride=stride, interpret=interp,
-                        periods=periods,
-                        bias=p["bias"], mult=p["mult"], out_steps=T)
+                        periods=periods, occupancy=occ,
+                        bias=p["bias"], mult=p["mult"], out_steps=T,
+                        out_level=sched.out_level,
+                        out_grid=out_grid), skipped
 
+            total_passes += bits * periods
             steps.append((apply, p))
             out_shape = (batch, h, w, cout)
             infos.append(PlanLayerInfo(
@@ -446,12 +513,13 @@ def _compile_plan_impl(
                           row_pad=row_pad, col_pad=col_pad, fout=fout):
                     if row_pad or col_pad:
                         state = jnp.pad(state, ((0, row_pad), (0, col_pad)))
+                    occ, skipped = _occ(state, in_bits)
                     acc = radix_matmul_pallas(
                         state, p["w"], num_steps=in_bits, method=method,
                         bm=bm, bk=bk, bn=bn, interpret=interp,
-                        periods=periods,
+                        periods=periods, occupancy=occ,
                     )[:batch, :fout]
-                    return acc + p["b"]
+                    return acc + p["b"], skipped
             else:
                 bias_row, mult_row = kops.epilogue_rows(
                     qp["b_int"], qp["mult"], fout, np_, encoding=spec)
@@ -461,12 +529,16 @@ def _compile_plan_impl(
                           row_pad=row_pad, col_pad=col_pad):
                     if row_pad or col_pad:
                         state = jnp.pad(state, ((0, row_pad), (0, col_pad)))
+                    occ, skipped = _occ(state, in_bits)
                     return radix_matmul_pallas(
                         state, p["w"], num_steps=in_bits, method=method,
                         bm=bm, bk=bk, bn=bn, interpret=interp,
-                        periods=periods,
-                        bias=p["bias"], mult=p["mult"], out_steps=T)
+                        periods=periods, occupancy=occ,
+                        bias=p["bias"], mult=p["mult"], out_steps=T,
+                        out_level=sched.out_level,
+                        out_grid=out_grid), skipped
 
+            total_passes += bits * periods
             steps.append((apply, p))
             out_shape = (batch, fout)
             infos.append(PlanLayerInfo(
@@ -489,13 +561,14 @@ def _compile_plan_impl(
 
                 def apply(state, p, *, window=window, packed=packed):
                     out = layers.q_avg_pool(state, window)
-                    return out.astype(jnp.uint8) if packed else out
+                    out = out.astype(jnp.uint8) if packed else out
+                    return out, jnp.int32(0)
             elif pool_mode in ("or", "max"):
                 fn = (layers.q_or_pool if pool_mode == "or"
                       else layers.q_max_pool)
 
                 def apply(state, p, *, fn=fn, window=window):
-                    return fn(state, window)
+                    return fn(state, window), jnp.int32(0)
             else:
                 raise ValueError(pool_mode)
             steps.append((apply, {}))
@@ -510,8 +583,8 @@ def _compile_plan_impl(
             ))
 
         elif kind == "flatten":
-            steps.append((lambda state, p: state.reshape(state.shape[0], -1),
-                          {}))
+            steps.append((lambda state, p: (
+                state.reshape(state.shape[0], -1), jnp.int32(0)), {}))
             # the padded-channel layout becomes the padded feature layout;
             # the NEXT linear scatters its weight rows to match (plan-time)
             f_real = h * w * c_real
@@ -527,9 +600,11 @@ def _compile_plan_impl(
 
     def forward(params, x):
         state = spec.quantize(x, input_scale)
+        skipped = jnp.zeros((1,), jnp.int32)   # (1,): shard_map-concatable
         for (apply, _), p in zip(steps, params):
-            state = apply(state, p)
-        return state.astype(jnp.float32) * logit_scale
+            state, sk = apply(state, p)
+            skipped = skipped + sk
+        return state.astype(jnp.float32) * logit_scale, skipped
 
     params = [p for _, p in steps]
     return CompiledPlan(
@@ -539,6 +614,7 @@ def _compile_plan_impl(
         layers=infos,
         _fn=jax.jit(forward),
         _params=params,
+        plane_passes_per_call=total_passes,
     )
 
 
@@ -600,11 +676,13 @@ def _data_parallel_plan(qnet, input_shape, method, data_parallel, spec=None):
         qnet, (batch // data_parallel,) + tuple(input_shape[1:]),
         method=method, spec=spec)
     mesh = compat.make_mesh((data_parallel,), ("batch",))
-    # weights replicated, input/output sharded along batch; no collectives
-    # cross shards, so replication checking is moot (and trips over
-    # pallas_call on some jax versions) -> disabled.
+    # weights replicated, input/output sharded along batch (the logits AND
+    # the per-shard skip counters — each shard ran its own prepass); no
+    # collectives cross shards, so replication checking is moot (and trips
+    # over pallas_call on some jax versions) -> disabled.
     fn = compat.shard_map(inner._fn, mesh=mesh,
-                          in_specs=(P(), P("batch")), out_specs=P("batch"),
+                          in_specs=(P(), P("batch")),
+                          out_specs=(P("batch"), P("batch")),
                           check_vma=False)
     infos = [dataclasses.replace(
         l,
@@ -620,6 +698,7 @@ def _data_parallel_plan(qnet, input_shape, method, data_parallel, spec=None):
         _fn=jax.jit(fn),
         _params=inner._params,
         data_parallel=data_parallel,
+        plane_passes_per_call=inner.plane_passes_per_call * data_parallel,
     )
 
 
@@ -718,6 +797,20 @@ class PlanCache:
         self.stats.pruned += n
         return n
 
+    def plane_stats(self) -> dict:
+        """Sparsity-prepass counters summed over every live cached plan
+        (DESIGN.md §8): ``plane_passes_skipped`` (all-zero spike planes
+        the kernels early-exited / masked) vs ``plane_passes_total`` (the
+        static schedule budget across all executions).  Zeros for plans
+        without the prepass (the jnp-backend closures)."""
+        out = {"plane_passes_skipped": 0, "plane_passes_total": 0}
+        for _, plan in self._plans.values():
+            getter = getattr(plan, "plane_stats", None)
+            if getter is not None:
+                for k, v in getter().items():
+                    out[k] += v
+        return out
+
     def _shards_for(self, bucket: int) -> int:
         avail = len(jax.devices())
         want = avail if self.data_parallel is None else min(
@@ -757,6 +850,11 @@ class PlanCache:
         for b, plan in zip(self.buckets, plans):
             x0 = jnp.zeros((b,) + tuple(item_shape), jnp.float32)
             jax.block_until_ready(plan(x0))
+            reset = getattr(plan, "reset_plane_stats", None)
+            if reset is not None:
+                # the all-zero warmup batch skips nearly every plane;
+                # keep the sparsity counters about real traffic
+                reset()
         return plans
 
     def run(self, qnet: conversion.QuantizedNet, x: jax.Array) -> jax.Array:

@@ -13,6 +13,10 @@ The ``method`` flag selects the paper-faithful bit-serial dataflow
 ("bitserial") or the TPU-native fused int8 pass ("fused") — both bit-exact
 against kernels/ref.py oracles (tests/test_kernels.py and
 tests/test_fused_epilogue.py sweep shapes, T, strides, methods).
+``sparsity=True`` adds the plane-occupancy prepass (DESIGN.md §8,
+docs/kernels.md): one bitwise-OR reduction finds bit planes no activation
+spikes on, and the kernels skip (bitserial) or mask (fused) them —
+bit-exact, and where TTFS's one-spike trains pay off.
 """
 
 from __future__ import annotations
@@ -23,9 +27,9 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.encoding import EncodingSpec
+from repro.core.encoding import EncodingSpec, KernelSchedule
 from repro.kernels.radix_conv import radix_conv2d_pallas
-from repro.kernels.radix_matmul import radix_matmul_pallas
+from repro.kernels.radix_matmul import OCC_LANES, radix_matmul_pallas
 from repro.kernels.spike_encode import spike_encode_pallas
 
 __all__ = [
@@ -33,6 +37,7 @@ __all__ = [
     "radix_conv2d",
     "radix_encode",
     "epilogue_rows",
+    "plane_occupancy",
     "same_pads",
 ]
 
@@ -41,29 +46,47 @@ def _interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _schedule(num_steps: Union[int, EncodingSpec]) -> Tuple[int, int]:
+def _schedule(num_steps: Union[int, EncodingSpec]) -> KernelSchedule:
     """Accept a bare T or an :class:`EncodingSpec` wherever a kernel needs
-    its plane schedule; returns ``(packed_bits, periods)``.
+    its plane schedule; returns the resolved :class:`KernelSchedule`.
 
     Specs must declare a kernel dataflow (the kernel epilogue implements
-    their clip-to-max-level requantization); the bit count is the spec's
-    ``packed_bits`` (phase: bits of ONE period) and ``periods`` is its
-    repeated-period count (phase: P; everything else: 1).
+    their requantization: clip to the schedule's ``out_level``, then
+    project onto its ``out_grid``); ``packed_bits`` is the bit-serial
+    extraction width (phase: bits of ONE period) and ``periods`` the
+    repeated-period replay count (phase: P; everything else: 1).  A bare
+    integer T means the plain radix schedule.
     """
     if isinstance(num_steps, EncodingSpec):
-        if not num_steps.kernel_dataflows:
-            raise ValueError(
-                f"{num_steps.name} encoding does not run on the kernels "
-                f"backend (supported: {num_steps.backends})")
-        num_steps.validate_dataflow(None)   # pins levels == 2^packed_bits
-        #                                     (the epilogue's hardwired clip)
-        return num_steps.packed_bits, num_steps.periods
-    return int(num_steps), 1
+        num_steps.validate_dataflow(None)   # declared + self-consistent
+        return num_steps.kernel_schedule()
+    return KernelSchedule(packed_bits=int(num_steps))
 
 
 def _steps(num_steps: Union[int, EncodingSpec]) -> int:
     """Packed bit count of :func:`_schedule` (validates spec capability)."""
-    return _schedule(num_steps)[0]
+    return _schedule(num_steps).packed_bits
+
+
+def plane_occupancy(
+    x_q: jax.Array, num_bits: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-bit-plane occupancy of packed activations (DESIGN.md §8).
+
+    One bitwise-OR reduction over the whole tensor; bit ``s`` of the
+    union is 1 iff *any* activation spikes on plane ``s``.  Returns
+    ``(row, bits)``: ``row`` is the ``(1, OCC_LANES)`` int32 input the
+    kernels consume (entry ``[0, s]`` gates the shift-``s`` plane pass),
+    ``bits`` the bare ``(num_bits,)`` 0/1 vector — ``num_bits -
+    bits.sum()`` is the number of plane passes a bitserial kernel skips
+    (the fused dataflow masks the same bit lanes instead).
+    """
+    x = x_q.astype(jnp.int32)
+    union = jax.lax.reduce(x, jnp.int32(0), jax.lax.bitwise_or,
+                           tuple(range(x.ndim)))
+    bits = (union >> jnp.arange(num_bits, dtype=jnp.int32)) & 1
+    row = jnp.zeros((1, OCC_LANES), jnp.int32).at[0, :num_bits].set(bits)
+    return row, bits
 
 
 def _round_up(x: int, m: int) -> int:
@@ -124,15 +147,21 @@ def radix_matmul(
     *,
     method: str = "bitserial",
     mult=None,
+    sparsity: bool = False,
 ) -> jax.Array:
     """(..., K) packed levels @ (K, N) int8 (+bias) -> (..., N).
 
     ``num_steps`` may be a bare T or a kernels-capable ``EncodingSpec``
-    (whose packed bit count and period-repeat schedule are honored).
-    ``mult=None``: raw int32 accumulator (+bias outside the kernel).
-    ``mult`` given: fused output-logic epilogue -> packed uint8 levels."""
+    (whose packed bit count, period-repeat schedule and epilogue output
+    grid are honored).  ``mult=None``: raw int32 accumulator (+bias
+    outside the kernel).  ``mult`` given: fused output-logic epilogue ->
+    packed uint8 levels.  ``sparsity=True`` runs the plane-occupancy
+    prepass: bit planes no activation spikes on are skipped in-kernel
+    (bitserial) or masked out of the packed pass (fused) — bit-exact,
+    since empty planes contribute zero."""
+    sched = _schedule(num_steps)
     spec = num_steps if isinstance(num_steps, EncodingSpec) else None
-    num_steps, periods = _schedule(num_steps)
+    num_steps, periods = sched.packed_bits, sched.periods
     lead = x_q.shape[:-1]
     k = x_q.shape[-1]
     n = w_q.shape[-1]
@@ -144,17 +173,20 @@ def radix_matmul(
     np_, bn = _block(n)
     x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
     w2 = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+    occ = plane_occupancy(x2, num_steps)[0] if sparsity else None
     if mult is None:
         out = radix_matmul_pallas(
             x2, w2, num_steps=num_steps, method=method,
             bm=bm, bk=bk, bn=bn, interpret=_interpret(), periods=periods,
+            occupancy=occ,
         )[:m, :n].reshape(*lead, n)
         return out if b_int is None else out + b_int
     bias_row, mult_row = epilogue_rows(b_int, mult, n, np_, encoding=spec)
     return radix_matmul_pallas(
         x2, w2, num_steps=num_steps, method=method,
         bm=bm, bk=bk, bn=bn, interpret=_interpret(), periods=periods,
-        bias=bias_row, mult=mult_row,
+        bias=bias_row, mult=mult_row, occupancy=occ,
+        out_level=sched.out_level, out_grid=sched.out_grid,
     )[:m, :n].reshape(*lead, n)
 
 
@@ -168,17 +200,21 @@ def radix_conv2d(
     padding: str = "VALID",
     method: str = "bitserial",
     mult=None,
+    sparsity: bool = False,
 ) -> jax.Array:
     """NHWC packed levels * HWIO int8 -> NHWC conv (+bias).
 
     ``num_steps`` may be a bare T or a kernels-capable ``EncodingSpec``
-    (whose packed bit count and period-repeat schedule are honored).
-    SAME padding is pre-padded (XLA-exact pads for any stride); stride > 1
-    subsamples *inside* the kernel grid — only the h_out x w_out surviving
-    outputs are ever computed.  ``mult`` turns on the fused output-logic
-    epilogue (packed uint8 levels out)."""
+    (whose packed bit count, period-repeat schedule and epilogue output
+    grid are honored).  SAME padding is pre-padded (XLA-exact pads for
+    any stride); stride > 1 subsamples *inside* the kernel grid — only
+    the h_out x w_out surviving outputs are ever computed.  ``mult``
+    turns on the fused output-logic epilogue (packed uint8 levels out);
+    ``sparsity=True`` runs the plane-occupancy prepass (empty planes
+    skipped/masked in-kernel, bit-exact)."""
+    sched = _schedule(num_steps)
     spec = num_steps if isinstance(num_steps, EncodingSpec) else None
-    num_steps, periods = _schedule(num_steps)
+    num_steps, periods = sched.packed_bits, sched.periods
     kh, kw, cin, cout = w_q.shape
     if padding == "SAME":
         ph = same_pads(x_q.shape[1], kh, stride)
@@ -189,17 +225,20 @@ def radix_conv2d(
 
     cop, bco = _block(cout)
     w_p = jnp.pad(w_q, ((0, 0), (0, 0), (0, 0), (0, cop - cout)))
+    occ = plane_occupancy(x_q, num_steps)[0] if sparsity else None
     if mult is None:
         out = radix_conv2d_pallas(
             x_q, w_p, num_steps=num_steps, method=method, bco=bco,
             stride=stride, interpret=_interpret(), periods=periods,
+            occupancy=occ,
         )[..., :cout]
         return out if b_int is None else out + b_int
     bias_row, mult_row = epilogue_rows(b_int, mult, cout, cop, encoding=spec)
     return radix_conv2d_pallas(
         x_q, w_p, num_steps=num_steps, method=method, bco=bco,
         stride=stride, interpret=_interpret(), periods=periods,
-        bias=bias_row, mult=mult_row,
+        bias=bias_row, mult=mult_row, occupancy=occ,
+        out_level=sched.out_level, out_grid=sched.out_grid,
     )[..., :cout]
 
 

@@ -15,11 +15,20 @@ gathers only the rows/columns that land on the stride grid, so the kernel
 computes exactly ``h_out x w_out`` outputs instead of materializing the
 stride-1 result and discarding (stride^2 - 1)/stride^2 of it.
 
+Sparsity-aware execution (DESIGN.md §8, docs/kernels.md): passing
+``occupancy`` (the ``(1, OCC_LANES)`` row ``ops.plane_occupancy`` builds)
+gates every bitserial plane pass behind a ``lax.cond`` — a globally empty
+spike plane's entire (kh x kw x Cin) tap sweep never executes — and masks
+the fused pass's packed bits to the occupied lanes.  Bit-exact, and the
+payoff of one-spike codes (TTFS) on narrow value distributions.
+
 Fused epilogue (DESIGN.md §2): passing ``bias``/``mult`` runs the paper's
 output logic (bias + ``layers.q_requantize`` multiply + clamp to
-``[0, 2^T - 1]``) on the int32 register tile before the store, emitting
-packed uint8 levels — the raw accumulator never reaches HBM.  Without
-``mult`` the kernel emits int32 accumulators (logits-layer path).
+``[0, out_level]``, then the schedule's level-grid projection —
+``out_grid="pow2"`` re-times TTFS's single output spike in-kernel) on the
+int32 register tile before the store, emitting packed uint8 levels — the
+raw accumulator never reaches HBM.  Without ``mult`` the kernel emits
+int32 accumulators (logits-layer path).
 
 Grid: (batch, C_out blocks).  VALID convs (ops.py pre-pads SAME).  The halo
 (kernel_h - 1 rows) is handled by passing the full H dimension per block and
@@ -36,6 +45,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.radix_matmul import (
+    OCC_LANES,
+    _project_levels,
+    gated,
+    occ_mask,
+)
+
 __all__ = [
     "radix_conv2d_kernel",
     "radix_conv2d_epilogue_kernel",
@@ -44,7 +60,7 @@ __all__ = [
 
 
 def _conv_acc(x, w_ref, h_out, w_out, bco, *, num_steps, method, kh, kw,
-              stride, periods=1):
+              stride, periods=1, occ=None):
     """Strided VALID conv of an (H, W, Cin) int32 block -> (h_out*w_out, bco).
 
     The (kh, kw) loops mirror the adder-array row/column iteration; each
@@ -52,7 +68,9 @@ def _conv_acc(x, w_ref, h_out, w_out, bco, *, num_steps, method, kh, kw,
     loop, parallelized on the MXU's contraction dim).  ``periods > 1``
     (phase coding, bitserial only) replays the plane passes with the tiled
     per-phase weight schedule and divides back down — exact, the sum being
-    ``periods ×`` the single-period value."""
+    ``periods ×`` the single-period value.  ``occ`` gates each bitserial
+    plane's tap sweep behind a ``lax.cond`` (empty plane -> no MXU work)
+    and masks the fused pass's packed bits."""
     cin = x.shape[-1]
 
     def conv_planes(plane):
@@ -71,16 +89,25 @@ def _conv_acc(x, w_ref, h_out, w_out, bco, *, num_steps, method, kh, kw,
         return acc
 
     if method == "fused":
+        if occ is not None:
+            x = x & occ_mask(occ, num_steps)  # masked pass: occupied bits
         return conv_planes(x)                 # radix identity: one pass
-    acc = jnp.zeros((h_out * w_out, bco), jnp.int32)
+
+    zero = jnp.zeros((h_out * w_out, bco), jnp.int32)
+
+    def plane_conv(shift):
+        plane = (x >> shift) & 1
+        # dynamic early-exit: the whole tap sweep runs only when occupied
+        return gated(occ, shift, lambda: conv_planes(plane), zero)
+
+    acc = zero
     if periods == 1:
         for t in range(num_steps):            # paper-faithful Horner loop
-            shift = num_steps - 1 - t
-            acc = (acc << 1) + conv_planes((x >> shift) & 1)
+            acc = (acc << 1) + plane_conv(num_steps - 1 - t)
         return acc
     for t in range(num_steps * periods):      # phase: tiled weight schedule
         shift = num_steps - 1 - (t % num_steps)
-        acc = acc + (conv_planes((x >> shift) & 1) << shift)
+        acc = acc + (plane_conv(shift) << shift)
     return acc // periods
 
 
@@ -99,9 +126,35 @@ def radix_conv2d_kernel(
     o_ref[0] = acc.reshape(h_out, w_out, bco)
 
 
+def radix_conv2d_sparse_kernel(
+    x_ref, w_ref, occ_ref, o_ref, *, num_steps: int, method: str, kh: int,
+    kw: int, stride: int, periods: int = 1,
+):
+    """Occupancy-gated variant of :func:`radix_conv2d_kernel`."""
+    h_out, w_out = o_ref.shape[1], o_ref.shape[2]
+    bco = o_ref.shape[3]
+    x = x_ref[0].astype(jnp.int32)
+    acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
+                    method=method, kh=kh, kw=kw, stride=stride,
+                    periods=periods, occ=occ_ref[0])
+    o_ref[0] = acc.reshape(h_out, w_out, bco)
+
+
+def _epilogue_tile(acc, bias_ref, mult_ref, *, out_level, out_grid,
+                   h_out, w_out, bco):
+    """The fused output logic on a conv register tile — ONE copy shared
+    by the dense and occupancy-gated epilogue kernels (identical float
+    ops to layers.q_requantize -> bit-exact twin)."""
+    acc = acc + bias_ref[...]                      # (hw, bco) + (1, bco)
+    q = jnp.floor(acc.astype(jnp.float32) * mult_ref[...])
+    return _project_levels(q, out_level=out_level,
+                           out_grid=out_grid).reshape(h_out, w_out, bco)
+
+
 def radix_conv2d_epilogue_kernel(
     x_ref, w_ref, bias_ref, mult_ref, o_ref, *, num_steps: int, method: str,
     kh: int, kw: int, stride: int, out_level: int, periods: int = 1,
+    out_grid: str = "dense",
 ):
     """Fused-epilogue variant: output logic runs on the int32 register tile
     and o_ref receives packed uint8 levels (1, H_out, W_out, bco)."""
@@ -111,17 +164,32 @@ def radix_conv2d_epilogue_kernel(
     acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
                     method=method, kh=kh, kw=kw, stride=stride,
                     periods=periods)
-    # identical float ops to layers.q_requantize -> bit-exact twin
-    acc = acc + bias_ref[...]                      # (hw, bco) + (1, bco)
-    q = jnp.floor(acc.astype(jnp.float32) * mult_ref[...])
-    o_ref[0] = jnp.clip(q, 0, out_level).astype(jnp.uint8).reshape(
-        h_out, w_out, bco)
+    o_ref[0] = _epilogue_tile(acc, bias_ref, mult_ref, out_level=out_level,
+                              out_grid=out_grid, h_out=h_out, w_out=w_out,
+                              bco=bco)
+
+
+def radix_conv2d_sparse_epilogue_kernel(
+    x_ref, w_ref, occ_ref, bias_ref, mult_ref, o_ref, *, num_steps: int,
+    method: str, kh: int, kw: int, stride: int, out_level: int,
+    periods: int = 1, out_grid: str = "dense",
+):
+    """Occupancy-gated fused-epilogue variant."""
+    h_out, w_out = o_ref.shape[1], o_ref.shape[2]
+    bco = o_ref.shape[3]
+    x = x_ref[0].astype(jnp.int32)
+    acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
+                    method=method, kh=kh, kw=kw, stride=stride,
+                    periods=periods, occ=occ_ref[0])
+    o_ref[0] = _epilogue_tile(acc, bias_ref, mult_ref, out_level=out_level,
+                              out_grid=out_grid, h_out=h_out, w_out=w_out,
+                              bco=bco)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("num_steps", "method", "bco", "stride", "interpret",
-                     "out_steps", "periods"))
+                     "out_steps", "periods", "out_level", "out_grid"))
 def radix_conv2d_pallas(
     x_q: jax.Array,
     w_q: jax.Array,
@@ -135,17 +203,25 @@ def radix_conv2d_pallas(
     mult: Optional[jax.Array] = None,
     out_steps: Optional[int] = None,
     periods: int = 1,
+    out_level: Optional[int] = None,
+    out_grid: str = "dense",
+    occupancy: Optional[jax.Array] = None,
 ) -> jax.Array:
     """(N, H, W, Cin) uint8 @ (KH, KW, Cin, Cout) int8 -> VALID conv.
 
     Without ``mult``: int32 accumulators.  With ``mult`` (f32 ``(1, Cout)``)
     and optional ``bias`` (int32 ``(1, Cout)``): fused output-logic epilogue,
-    packed uint8 levels out, clamped to ``[0, 2^out_steps - 1]``
-    (``out_steps`` defaults to ``num_steps``; it differs when inputs carry
-    extra integer bits, e.g. after a sum-pool).  ``periods`` (phase coding,
-    bitserial only) replays the plane schedule with tiled per-phase weights
-    and an exact in-kernel divide.  Cout must be a multiple of ``bco``
-    (ops.py pads); ``stride`` subsamples inside the kernel."""
+    packed uint8 levels out, clamped to ``[0, out_level]`` and projected
+    onto ``out_grid`` ("dense" clip, or "pow2" for TTFS's log-spaced
+    re-timing); ``out_level`` defaults to ``2^out_steps - 1`` with
+    ``out_steps`` defaulting to ``num_steps`` (they differ when inputs
+    carry extra integer bits, e.g. after a sum-pool).  ``periods`` (phase
+    coding, bitserial only) replays the plane schedule with tiled
+    per-phase weights and an exact in-kernel divide.  ``occupancy``
+    (``(1, OCC_LANES)`` int32 from ``ops.plane_occupancy``) turns on the
+    sparsity-aware schedule (empty planes skipped/masked, bit-exact).
+    Cout must be a multiple of ``bco`` (ops.py pads); ``stride``
+    subsamples inside the kernel."""
     n, h, w, cin = x_q.shape
     kh, kw, cin2, cout = w_q.shape
     assert cin == cin2, (x_q.shape, w_q.shape)
@@ -159,36 +235,59 @@ def radix_conv2d_pallas(
         pl.BlockSpec((kh, kw, cin, bco), lambda b, co: (0, 0, 0, co)),
     ]
     o_spec = pl.BlockSpec((1, h_out, w_out, bco), lambda b, co: (b, 0, 0, co))
+    occ_spec = pl.BlockSpec((1, OCC_LANES), lambda b, co: (0, 0))
+    sparse = occupancy is not None
+    if sparse:
+        assert occupancy.shape == (1, OCC_LANES), occupancy.shape
+        occupancy = occupancy.astype(jnp.int32)
 
     if mult is None:
-        kernel = functools.partial(
-            radix_conv2d_kernel, num_steps=num_steps, method=method,
-            kh=kh, kw=kw, stride=stride, periods=periods)
+        if sparse:
+            kernel = functools.partial(
+                radix_conv2d_sparse_kernel, num_steps=num_steps,
+                method=method, kh=kh, kw=kw, stride=stride, periods=periods)
+            specs, args = in_specs + [occ_spec], (x_q, w_q, occupancy)
+        else:
+            kernel = functools.partial(
+                radix_conv2d_kernel, num_steps=num_steps, method=method,
+                kh=kh, kw=kw, stride=stride, periods=periods)
+            specs, args = in_specs, (x_q, w_q)
         return pl.pallas_call(
             kernel,
             grid=grid,
-            in_specs=in_specs,
+            in_specs=specs,
             out_specs=o_spec,
             out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), jnp.int32),
             interpret=interpret,
-        )(x_q, w_q)
+        )(*args)
 
     out_steps = num_steps if out_steps is None else out_steps
-    assert out_steps <= 8, "packed uint8 epilogue requires T <= 8"
+    out_level = (1 << out_steps) - 1 if out_level is None else out_level
+    assert out_level <= 255, "packed uint8 epilogue requires out_level <= 255"
     if bias is None:
         bias = jnp.zeros((1, cout), jnp.int32)
     assert bias.shape == (1, cout) and mult.shape == (1, cout), (
         bias.shape, mult.shape)
     row_spec = pl.BlockSpec((1, bco), lambda b, co: (0, co))
-    kernel = functools.partial(
-        radix_conv2d_epilogue_kernel, num_steps=num_steps, method=method,
-        kh=kh, kw=kw, stride=stride, out_level=(1 << out_steps) - 1,
-        periods=periods)
+    if sparse:
+        kernel = functools.partial(
+            radix_conv2d_sparse_epilogue_kernel, num_steps=num_steps,
+            method=method, kh=kh, kw=kw, stride=stride, out_level=out_level,
+            periods=periods, out_grid=out_grid)
+        specs = in_specs + [occ_spec, row_spec, row_spec]
+        args = (x_q, w_q, occupancy, bias, mult.astype(jnp.float32))
+    else:
+        kernel = functools.partial(
+            radix_conv2d_epilogue_kernel, num_steps=num_steps, method=method,
+            kh=kh, kw=kw, stride=stride, out_level=out_level,
+            periods=periods, out_grid=out_grid)
+        specs = in_specs + [row_spec, row_spec]
+        args = (x_q, w_q, bias, mult.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=in_specs + [row_spec, row_spec],
+        in_specs=specs,
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), jnp.uint8),
         interpret=interpret,
-    )(x_q, w_q, bias, mult.astype(jnp.float32))
+    )(*args)

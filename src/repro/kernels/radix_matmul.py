@@ -17,13 +17,28 @@ Two in-kernel strategies, selected statically:
   optimization the FPGA cannot make (no multipliers) but the MXU gets for
   free — the central hardware-adaptation insight of this reproduction.
 
+Sparsity-aware execution (DESIGN.md §8, docs/kernels.md)
+--------------------------------------------------------
+Passing ``occupancy`` (a ``(1, OCC_LANES)`` int32 row whose entry ``s``
+is 1 iff any activation spikes on bit plane ``s`` — ``ops.plane_occupancy``
+computes it in one bitwise-OR reduction) turns on the plane-occupancy
+schedule: the bitserial loop wraps each plane pass in a ``lax.cond`` and
+**skips the MXU pass entirely** when the plane is globally empty (the
+dynamic early-exit temporal codes like TTFS are built for — one spike per
+activation means most planes are empty for narrow value distributions),
+while the fused path ANDs the packed levels with the occupancy bit mask
+(a masked pass — empty bit lanes are provably zero, so this is exact).
+
 Fused epilogue (DESIGN.md §2)
 -----------------------------
 Passing ``bias``/``mult`` turns on the in-kernel *output logic*: on the
 last K-grid step the int32 accumulator (kept in a VMEM scratch tile, never
 written to HBM) gets bias-add, the requantization multiply
 (``layers.q_requantize`` semantics, bit-exact), and a clamp to
-``[0, 2^T - 1]`` — and the kernel emits **packed uint8 levels** directly.
+``[0, out_level]`` — and the kernel emits **packed uint8 levels** directly.
+``out_grid="pow2"`` additionally floors the clamped level onto the
+power-of-two grid ``{0} | {2^k}`` (``encoding.pow2_floor``), which is the
+TTFS output logic: the layer re-times exactly one output spike, in-kernel.
 This is the TPU twin of the paper's output unit writing T-bit activations
 straight into the pong buffer: inter-layer HBM traffic drops 4×
 (1 byte/element instead of a 4-byte raw accumulator), and the separate
@@ -45,14 +60,42 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
+    "OCC_LANES",
     "radix_matmul_kernel",
     "radix_matmul_epilogue_kernel",
     "radix_matmul_pallas",
 ]
 
+OCC_LANES = 128
+"""Lane-aligned width of the plane-occupancy row the kernels consume
+(entries beyond the actual bit count are ignored)."""
+
+
+def occ_mask(occ, num_steps: int) -> jax.Array:
+    """Bit mask of the occupied planes (``Σ occ[s] << s``) — the fused
+    dataflow's masked-pass operand.  Shared by the matmul and conv
+    kernels so the gating algebra cannot drift between them."""
+    mask = jnp.int32(0)
+    for s in range(num_steps):
+        mask = mask | (occ[s] << s)
+    return mask
+
+
+def gated(occ, shift: int, fn, zero) -> jax.Array:
+    """One occupancy-gated plane pass: run ``fn()`` only when plane
+    ``shift`` is occupied, else return the ``zero`` tile (``occ=None``
+    means ungated).  The ``lax.cond`` is the bitserial dynamic
+    early-exit; validated in interpret mode (CPU CI) — on a real TPU the
+    predicate is a VMEM-loaded scalar, which Mosaic must lower to an
+    scf.if for the skip to pay off (hardware validation pending; a
+    scalar-prefetch SMEM row is the fallback if it does not)."""
+    if occ is None:
+        return fn()
+    return jax.lax.cond(occ[shift] > 0, fn, lambda: zero)
+
 
 def _accumulate_tile(x, w, *, num_steps: int, method: str,
-                     periods: int = 1) -> jax.Array:
+                     periods: int = 1, occ=None) -> jax.Array:
     """(bm, bk) x (bk, bn) int32 partial product, bit-serial or single-pass.
 
     ``periods > 1`` (phase coding) replays the ``num_steps`` plane passes
@@ -60,76 +103,141 @@ def _accumulate_tile(x, w, *, num_steps: int, method: str,
     and divides the accumulator back down — exact, since the sum is
     ``periods ×`` the single-period value.  The fused path is unaffected:
     the radix identity already collapses one period into the packed level.
+
+    ``occ`` (per-bit occupancy values, indexable by shift) gates each
+    bitserial plane pass behind a ``lax.cond`` — an empty plane's MXU pass
+    never executes — and masks the fused pass's packed bits.  Exact either
+    way: a globally empty plane contributes zero.
     """
+
+    def dot(a):
+        return jax.lax.dot_general(
+            a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
     if method == "fused":
         # radix identity: one int MXU pass over packed levels
-        return jax.lax.dot_general(
-            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
-    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+        if occ is not None:
+            x = x & occ_mask(occ, num_steps)   # masked pass: occupied bits
+        return dot(x)
+
+    zero = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+
+    def plane_dot(shift):
+        plane = (x >> shift) & 1               # gate: spike present or not
+        # dynamic early-exit: the MXU pass runs only for occupied planes
+        return gated(occ, shift, lambda: dot(plane), zero)
+
+    acc = zero
     if periods == 1:
         # paper-faithful bit-serial Horner loop (T static, unrolled)
         for t in range(num_steps):
-            shift = num_steps - 1 - t
-            plane = (x >> shift) & 1           # gate: spike present or not
-            acc = (acc << 1) + jax.lax.dot_general(
-                plane, w, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
+            acc = (acc << 1) + plane_dot(num_steps - 1 - t)
         return acc
     # phase schedule: all periods * T time steps, per-phase weights
     for t in range(num_steps * periods):
         shift = num_steps - 1 - (t % num_steps)
-        plane = (x >> shift) & 1
-        acc = acc + (jax.lax.dot_general(
-            plane, w, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32) << shift)
+        acc = acc + (plane_dot(shift) << shift)
     return acc // periods
 
 
-def radix_matmul_kernel(x_ref, w_ref, o_ref, *, num_steps: int, method: str,
-                        periods: int = 1):
-    """One (bm, bk) x (bk, bn) tile; accumulates into o_ref across the K grid."""
-    k_idx = pl.program_id(2)
+def _project_levels(q, *, out_level: int, out_grid: str) -> jax.Array:
+    """Clamp a requantized float tile onto the schedule's level grid.
 
-    @pl.when(k_idx == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    ``"dense"``: ``clip(q, 0, out_level)``.  ``"pow2"``: the clip, then
+    THE ``encoding.pow2_floor`` projection (one shared implementation, so
+    the TTFS spec/ref/kernel twins cannot drift apart) — its where-chain
+    traces fine inside a Pallas kernel body."""
+    from repro.core.encoding import pow2_floor   # deferred: keep kernels
+    #                                              importable standalone
+    lvl = jnp.clip(q, 0, out_level).astype(jnp.int32)
+    if out_grid == "pow2":
+        lvl = pow2_floor(lvl, out_level.bit_length())
+    elif out_grid != "dense":
+        raise ValueError(f"unknown out_grid {out_grid!r}")
+    return lvl.astype(jnp.uint8)
 
-    x = x_ref[...].astype(jnp.int32)          # (bm, bk) packed levels
-    w = w_ref[...].astype(jnp.int32)          # (bk, bn) int weights
-    o_ref[...] += _accumulate_tile(x, w, num_steps=num_steps, method=method,
-                                   periods=periods)
 
-
-def radix_matmul_epilogue_kernel(
-    x_ref, w_ref, bias_ref, mult_ref, o_ref, acc_ref,
-    *, num_steps: int, method: str, out_level: int, periods: int = 1,
-):
-    """Fused-epilogue tile: int32 accumulation lives in the ``acc_ref`` VMEM
-    scratch; on the final K step the output logic (bias + requant multiply +
-    clamp) runs in-register and only the packed uint8 level reaches o_ref."""
+def _accumulate_step(x_ref, w_ref, occ_ref, acc_ref, *, num_steps, method,
+                     periods):
+    """Shared K-grid accumulation body (occ_ref is None when dense)."""
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.int32)
-    w = w_ref[...].astype(jnp.int32)
-    acc_ref[...] += _accumulate_tile(x, w, num_steps=num_steps, method=method,
-                                     periods=periods)
+    x = x_ref[...].astype(jnp.int32)          # (bm, bk) packed levels
+    w = w_ref[...].astype(jnp.int32)          # (bk, bn) int weights
+    occ = occ_ref[0] if occ_ref is not None else None
+    acc_ref[...] += _accumulate_tile(x, w, num_steps=num_steps,
+                                     method=method, periods=periods,
+                                     occ=occ)
 
-    @pl.when(k_idx == pl.num_programs(2) - 1)
+
+def radix_matmul_kernel(x_ref, w_ref, o_ref, *, num_steps: int, method: str,
+                        periods: int = 1):
+    """One (bm, bk) x (bk, bn) tile; accumulates into o_ref across the K grid."""
+    _accumulate_step(x_ref, w_ref, None, o_ref, num_steps=num_steps,
+                     method=method, periods=periods)
+
+
+def radix_matmul_sparse_kernel(x_ref, w_ref, occ_ref, o_ref, *,
+                               num_steps: int, method: str, periods: int = 1):
+    """Occupancy-gated tile: plane passes skip when their occupancy bit
+    is 0 (bitserial) / packed bits mask to the occupied lanes (fused)."""
+    _accumulate_step(x_ref, w_ref, occ_ref, o_ref, num_steps=num_steps,
+                     method=method, periods=periods)
+
+
+def _epilogue_store(acc_ref, bias_ref, mult_ref, o_ref, *, out_level: int,
+                    out_grid: str):
+    """The fused output logic: bias + requant multiply + grid projection.
+
+    Identical float ops to ``layers.q_requantize`` (then the grid
+    projection for non-dense schedules) -> bit-exact twin."""
+    acc = acc_ref[...] + bias_ref[...]                # (bm,bn) + (1,bn)
+    q = jnp.floor(acc.astype(jnp.float32) * mult_ref[...])
+    o_ref[...] = _project_levels(q, out_level=out_level, out_grid=out_grid)
+
+
+def radix_matmul_epilogue_kernel(
+    x_ref, w_ref, bias_ref, mult_ref, o_ref, acc_ref,
+    *, num_steps: int, method: str, out_level: int, periods: int = 1,
+    out_grid: str = "dense",
+):
+    """Fused-epilogue tile: int32 accumulation lives in the ``acc_ref`` VMEM
+    scratch; on the final K step the output logic (bias + requant multiply +
+    clamp + level-grid projection) runs in-register and only the packed
+    uint8 level reaches o_ref."""
+    _accumulate_step(x_ref, w_ref, None, acc_ref, num_steps=num_steps,
+                     method=method, periods=periods)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _epilogue():
-        # identical float ops to layers.q_requantize -> bit-exact twin
-        acc = acc_ref[...] + bias_ref[...]            # (bm,bn) + (1,bn)
-        q = jnp.floor(acc.astype(jnp.float32) * mult_ref[...])
-        o_ref[...] = jnp.clip(q, 0, out_level).astype(jnp.uint8)
+        _epilogue_store(acc_ref, bias_ref, mult_ref, o_ref,
+                        out_level=out_level, out_grid=out_grid)
+
+
+def radix_matmul_sparse_epilogue_kernel(
+    x_ref, w_ref, occ_ref, bias_ref, mult_ref, o_ref, acc_ref,
+    *, num_steps: int, method: str, out_level: int, periods: int = 1,
+    out_grid: str = "dense",
+):
+    """Occupancy-gated fused-epilogue tile (sparse accumulate + output
+    logic)."""
+    _accumulate_step(x_ref, w_ref, occ_ref, acc_ref, num_steps=num_steps,
+                     method=method, periods=periods)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        _epilogue_store(acc_ref, bias_ref, mult_ref, o_ref,
+                        out_level=out_level, out_grid=out_grid)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("num_steps", "method", "bm", "bk", "bn", "interpret",
-                     "out_steps", "periods"),
+                     "out_steps", "periods", "out_level", "out_grid"),
 )
 def radix_matmul_pallas(
     x_q: jax.Array,
@@ -145,18 +253,27 @@ def radix_matmul_pallas(
     mult: Optional[jax.Array] = None,
     out_steps: Optional[int] = None,
     periods: int = 1,
+    out_level: Optional[int] = None,
+    out_grid: str = "dense",
+    occupancy: Optional[jax.Array] = None,
 ) -> jax.Array:
     """(M, K) uint8 levels @ (K, N) int8 -> (M, N).
 
     Without ``mult``: raw int32 accumulators (the logits-layer path).
     With ``mult`` (f32 ``(1, N)``) and optional ``bias`` (int32 ``(1, N)``):
     the fused output-logic epilogue runs in-kernel and the result is packed
-    uint8 levels in ``[0, 2^out_steps - 1]``.  ``num_steps`` governs the
-    bit-serial input extraction; ``out_steps`` (default ``num_steps``) the
-    output clamp — they differ when inputs carry extra integer bits, e.g.
-    after a sum-pool whose division is folded into ``mult``.  ``periods``
-    (phase coding, bitserial only) replays the plane schedule that many
-    times with tiled per-phase weights and an exact in-kernel divide.
+    uint8 levels in ``[0, out_level]``.  ``num_steps`` governs the
+    bit-serial input extraction; ``out_level`` (default ``2^out_steps - 1``,
+    ``out_steps`` defaulting to ``num_steps``) the output clamp — they
+    differ when inputs carry extra integer bits, e.g. after a sum-pool
+    whose division is folded into ``mult``.  ``out_grid`` selects the
+    epilogue's level grid per the encoding's ``KernelSchedule`` ("dense"
+    clip, or "pow2" for TTFS's log-spaced re-timing).  ``periods`` (phase
+    coding, bitserial only) replays the plane schedule that many times
+    with tiled per-phase weights and an exact in-kernel divide.
+    ``occupancy`` (``(1, OCC_LANES)`` int32, from ``ops.plane_occupancy``)
+    turns on the sparsity-aware schedule: globally empty planes are
+    skipped (bitserial) or masked (fused), bit-exactly.
 
     Shapes must be multiples of the block sizes (ops.py pads).
     Block sizes default to MXU-aligned 128s; VMEM footprint per step is
@@ -172,36 +289,61 @@ def radix_matmul_pallas(
     x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
     w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
     o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    occ_spec = pl.BlockSpec((1, OCC_LANES), lambda i, j, kk: (0, 0))
+    sparse = occupancy is not None
+    if sparse:
+        assert occupancy.shape == (1, OCC_LANES), occupancy.shape
+        occupancy = occupancy.astype(jnp.int32)
 
     if mult is None:
-        kernel = functools.partial(
-            radix_matmul_kernel, num_steps=num_steps, method=method,
-            periods=periods)
+        if sparse:
+            kernel = functools.partial(
+                radix_matmul_sparse_kernel, num_steps=num_steps,
+                method=method, periods=periods)
+            in_specs = [x_spec, w_spec, occ_spec]
+            args = (x_q, w_q, occupancy)
+        else:
+            kernel = functools.partial(
+                radix_matmul_kernel, num_steps=num_steps, method=method,
+                periods=periods)
+            in_specs = [x_spec, w_spec]
+            args = (x_q, w_q)
         return pl.pallas_call(
             kernel,
             grid=grid,
-            in_specs=[x_spec, w_spec],
+            in_specs=in_specs,
             out_specs=o_spec,
             out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
             interpret=interpret,
-        )(x_q, w_q)
+        )(*args)
 
     out_steps = num_steps if out_steps is None else out_steps
-    assert out_steps <= 8, "packed uint8 epilogue requires T <= 8"
+    out_level = (1 << out_steps) - 1 if out_level is None else out_level
+    assert out_level <= 255, "packed uint8 epilogue requires out_level <= 255"
     if bias is None:
         bias = jnp.zeros((1, n), jnp.int32)
     assert bias.shape == (1, n) and mult.shape == (1, n), (bias.shape,
                                                           mult.shape)
     row_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
-    kernel = functools.partial(
-        radix_matmul_epilogue_kernel, num_steps=num_steps, method=method,
-        out_level=(1 << out_steps) - 1, periods=periods)
+    if sparse:
+        kernel = functools.partial(
+            radix_matmul_sparse_epilogue_kernel, num_steps=num_steps,
+            method=method, out_level=out_level, periods=periods,
+            out_grid=out_grid)
+        in_specs = [x_spec, w_spec, occ_spec, row_spec, row_spec]
+        args = (x_q, w_q, occupancy, bias, mult.astype(jnp.float32))
+    else:
+        kernel = functools.partial(
+            radix_matmul_epilogue_kernel, num_steps=num_steps, method=method,
+            out_level=out_level, periods=periods, out_grid=out_grid)
+        in_specs = [x_spec, w_spec, row_spec, row_spec]
+        args = (x_q, w_q, bias, mult.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[x_spec, w_spec, row_spec, row_spec],
+        in_specs=in_specs,
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint8),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q, bias, mult.astype(jnp.float32))
+    )(*args)

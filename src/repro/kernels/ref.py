@@ -90,31 +90,47 @@ def spike_encode_ref(x: jax.Array, num_steps: int, scale: float) -> jax.Array:
 
 # ---------------------------------------------------------------------------
 # Fused-epilogue oracles: the paper's output logic (bias + requantize
-# multiplier + clamp) spelled out on top of the raw accumulator oracles.
-# Float ops match core/layers.q_requantize exactly -> kernels must be
-# bit-exact against the (oracle + q_requantize) composition.
+# multiplier + clamp, then the encoding schedule's level-grid projection)
+# spelled out on top of the raw accumulator oracles.  Float ops match
+# core/layers.q_requantize exactly -> kernels must be bit-exact against
+# the (oracle + q_requantize) composition.
 # ---------------------------------------------------------------------------
 
 
-def requantize_ref(acc: jax.Array, num_steps: int, mult) -> jax.Array:
-    """Output-logic requantizer: ``clip(floor(acc * mult), 0, 2^T - 1)``."""
+def requantize_ref(
+    acc: jax.Array, num_steps: int, mult, *, grid: str = "dense"
+) -> jax.Array:
+    """Output-logic requantizer: ``clip(floor(acc * mult), 0, 2^T - 1)``.
+
+    ``grid="pow2"`` additionally floors the clipped level onto
+    ``{0} | {2^k}`` (``encoding.pow2_floor``) — the TTFS output logic
+    re-timing the single spike; the ``out_grid`` kernels implement."""
+    from repro.core.encoding import pow2_floor   # the one implementation
+
     lvl = (1 << num_steps) - 1
     q = jnp.floor(acc.astype(jnp.float32) * jnp.asarray(mult, jnp.float32))
-    return jnp.clip(q, 0, lvl).astype(jnp.uint8)
+    q = jnp.clip(q, 0, lvl).astype(jnp.int32)
+    if grid == "pow2":
+        q = pow2_floor(q, num_steps)
+    elif grid != "dense":
+        raise ValueError(grid)
+    return q.astype(jnp.uint8)
 
 
 def radix_matmul_epilogue_ref(
     x_q: jax.Array, w_q: jax.Array, bias: jax.Array, mult,
-    num_steps: int, *, periods: int = 1,
+    num_steps: int, *, periods: int = 1, grid: str = "dense",
 ) -> jax.Array:
     """Bit-serial matmul + fused output logic -> packed uint8 levels."""
     acc = radix_matmul_ref(x_q, w_q, num_steps, periods=periods)
-    return requantize_ref(acc + bias.astype(jnp.int32), num_steps, mult)
+    return requantize_ref(acc + bias.astype(jnp.int32), num_steps, mult,
+                          grid=grid)
 
 
 def radix_conv2d_epilogue_ref(
     x_q: jax.Array, w_q: jax.Array, bias: jax.Array, mult,
     num_steps: int, *, stride: int = 1, periods: int = 1,
+    grid: str = "dense",
 ) -> jax.Array:
     """Bit-serial strided VALID conv + fused output logic -> uint8 levels."""
     x = x_q.astype(jnp.int32)
@@ -137,4 +153,5 @@ def radix_conv2d_epilogue_ref(
             part = conv(((x >> shift) & 1).astype(jnp.int32)) << shift
             acc = part if acc is None else acc + part
         acc = acc // periods
-    return requantize_ref(acc + bias.astype(jnp.int32), num_steps, mult)
+    return requantize_ref(acc + bias.astype(jnp.int32), num_steps, mult,
+                          grid=grid)

@@ -17,9 +17,11 @@ driver stacks three layers (DESIGN.md §3):
 
 The target encoding is swappable from the CLI (``--encoding`` with
 ``--num-steps``/``--periods``; docs/encodings.md is the selection guide):
-kernels-capable specs (radix, phase) serve compiled fused-kernel plans,
-jnp-only specs (rate, TTFS) serve per-bucket jitted closures — same
-bucketing, queueing and stats machinery either way.
+kernels-capable specs (radix, TTFS, phase) serve compiled kernel plans
+with the sparsity-aware plane-occupancy schedule (docs/kernels.md —
+``Executable.stats()`` reports the skipped plane passes), while the
+jnp-only rate spec serves per-bucket jitted closures — same bucketing,
+queueing and stats machinery either way.
 
 Usage:
   python -m repro.launch.serve_cnn --arch vgg11 --smoke
@@ -28,7 +30,7 @@ Usage:
   python -m repro.launch.serve_cnn --arch lenet5 --smoke \\
       --encoding phase --num-steps 8 --periods 2
   python -m repro.launch.serve_cnn --arch fang_cnn --smoke \\
-      --encoding ttfs --pool-mode avg
+      --encoding ttfs --pool-mode avg --dataflow bitserial
 """
 
 from __future__ import annotations

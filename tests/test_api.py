@@ -76,23 +76,56 @@ class TestEncodingSpecs:
         with pytest.raises(ValueError, match="scale"):
             api.RateEncoding(4, scale=0.0)
 
-    def test_kernel_capable_specs_require_radix_levels(self):
-        """The fused epilogue clips to 2^T - 1 in-kernel; a subclass
-        declaring kernel dataflows with any other level count must be
-        rejected instead of silently diverging from its requantize."""
+    def test_kernel_capable_specs_require_consistent_schedule(self):
+        """Kernels capability is a per-spec KernelSchedule declaration;
+        a subclass declaring dataflows with a schedule its own level
+        algebra cannot ride (extraction bits too narrow for max_level,
+        or an unknown epilogue grid) must be rejected instead of
+        silently diverging from its requantize."""
         import dataclasses
         from typing import ClassVar, Tuple
 
         @dataclasses.dataclass(frozen=True)
-        class BadSpec(api.RateEncoding):
-            name: ClassVar[str] = "bad"
+        class NarrowSpec(api.RadixEncoding):
+            """Declares one bit fewer than its levels need."""
+
+            name: ClassVar[str] = "narrow"
             kernel_dataflows: ClassVar[Tuple[str, ...]] = ("fused",)
 
-        with pytest.raises(ValueError, match="2\\^T"):
-            BadSpec(4).validate_dataflow(None)
+            def kernel_schedule(self):
+                return dataclasses.replace(
+                    super().kernel_schedule(),
+                    packed_bits=self.num_steps - 1)
+
+        with pytest.raises(ValueError, match="schedule is inconsistent"):
+            NarrowSpec(4).validate_dataflow(None)
         from repro.kernels import ops
-        with pytest.raises(ValueError, match="2\\^T"):
-            ops._steps(BadSpec(4))
+        with pytest.raises(ValueError, match="schedule is inconsistent"):
+            ops._steps(NarrowSpec(4))
+
+        @dataclasses.dataclass(frozen=True)
+        class BadGridSpec(api.RadixEncoding):
+            name: ClassVar[str] = "badgrid"
+
+            def kernel_schedule(self):
+                return dataclasses.replace(
+                    super().kernel_schedule(), out_grid="fibonacci")
+
+        with pytest.raises(ValueError, match="out_grid"):
+            BadGridSpec(4).validate_dataflow(None)
+
+    def test_kernel_schedule_declarations(self):
+        """The shipped schedules: dense for radix/phase, pow2 for TTFS;
+        jnp-only specs have none."""
+        assert api.RadixEncoding(4).kernel_schedule() == api.KernelSchedule(
+            packed_bits=4, periods=1, out_level=15, out_grid="dense")
+        assert api.PhaseEncoding(8, periods=2).kernel_schedule() == \
+            api.KernelSchedule(packed_bits=4, periods=2, out_level=15,
+                               out_grid="dense")
+        assert api.TTFSEncoding(4).kernel_schedule() == api.KernelSchedule(
+            packed_bits=4, periods=1, out_level=15, out_grid="pow2")
+        with pytest.raises(ValueError, match="kernel dataflow"):
+            api.RateEncoding(4).kernel_schedule()
 
     def test_rate_integer_sigma_delta_exact(self):
         spec = api.RateEncoding(9)

@@ -43,9 +43,31 @@ def test_intra_repo_links_resolve(doc):
 
 
 def test_docs_exist():
-    for p in (REPO / "docs" / "encodings.md", REPO / "README.md",
-              REPO / "DESIGN.md"):
+    for p in (REPO / "docs" / "encodings.md", REPO / "docs" / "kernels.md",
+              REPO / "README.md", REPO / "DESIGN.md"):
         assert p.exists(), p
+
+
+def test_kernels_guide_is_cross_linked():
+    """docs/kernels.md (the kernels-path architecture guide) must be
+    discoverable from both the README and the encoding guide, and is
+    itself in DOC_FILES so its intra-repo links are drift-checked."""
+    assert "docs/kernels.md" in (REPO / "README.md").read_text()
+    assert "(kernels.md)" in (REPO / "docs" / "encodings.md").read_text()
+    assert (REPO / "docs" / "kernels.md") in DOC_FILES
+
+
+def test_kernels_guide_matches_code_surface():
+    """The guide documents real symbols: every backticked module path and
+    the schedule fields it tabulates must exist in the codebase."""
+    text = (REPO / "docs" / "kernels.md").read_text()
+    for rel in re.findall(r"`(src/[\w/]+\.py)`", text):
+        assert (REPO / rel).exists(), f"docs/kernels.md names missing {rel}"
+    from repro.core.encoding import KernelSchedule
+    import dataclasses as _dc
+    for field in _dc.fields(KernelSchedule):
+        assert f"`{field.name}`" in text, (
+            f"docs/kernels.md schedule table is missing {field.name}")
 
 
 def test_support_matrix_matches_spec_declarations():

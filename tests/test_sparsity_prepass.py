@@ -1,0 +1,244 @@
+"""The plane-occupancy sparsity prepass (ISSUE 5, DESIGN.md §8).
+
+Every compiled kernel plan runs a per-layer occupancy prepass: one
+bitwise-OR reduction finds spike planes NO activation uses, the bitserial
+dataflow skips their MXU passes behind a ``lax.cond`` (dynamic
+early-exit) and the fused dataflow masks their bit lanes out of the
+packed pass.  Both are exact — an all-zero plane contributes zero — so
+the contract under test is twofold:
+
+* **bit-exactness**: degenerate inputs (all-zero batches, a single
+  spiking pixel) through LeNet-5 plans equal the ``api.oracle``
+  spike-plane reference on both dataflows and all kernels-capable
+  encodings;
+* **observability**: the skip counts surface through
+  ``Executable.stats()`` (``plane_passes_skipped`` /
+  ``plane_passes_total``), are nonzero exactly when planes were empty,
+  and zero on the jnp backend (no plane schedule to skip).
+
+Kernel-level gating (occupancy rows straight into the Pallas calls) is
+covered against the ref.py oracles at the bottom.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import conversion
+from repro.kernels import ops, ref
+from repro.kernels.radix_conv import radix_conv2d_pallas
+from repro.kernels.radix_matmul import OCC_LANES, radix_matmul_pallas
+from repro.models import lenet
+
+RNG = np.random.default_rng(41)
+
+KERNEL_SPECS = [api.RadixEncoding(4), api.TTFSEncoding(4),
+                api.PhaseEncoding(8, periods=2)]
+
+
+def _make(spec, pool_mode="avg"):
+    static, params, hw = lenet.make(pool_mode=pool_mode, width_mult=0.25)
+    calib = jnp.asarray(RNG.uniform(0, 1, (4,) + hw), jnp.float32)
+    return conversion.convert(static, params, calib, encoding=spec), hw
+
+
+def _single_spike(hw, batch=2):
+    """A batch where exactly one pixel per image carries signal."""
+    x = np.zeros((batch,) + hw, np.float32)
+    for b in range(batch):
+        x[b, 3 + b, 4, 0] = 0.3    # a low level: occupies few bit planes
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: degenerate batches bit-exact with nonzero skip counts.
+# ---------------------------------------------------------------------------
+
+
+class TestPrepassEndToEnd:
+    @pytest.mark.parametrize("dataflow", ["fused", "bitserial"])
+    @pytest.mark.parametrize("spec", KERNEL_SPECS, ids=lambda s: s.name)
+    def test_all_zero_batch(self, spec, dataflow):
+        """An all-zero input has every first-layer plane empty: the plan
+        must skip passes AND still match the oracle bit-exactly (biases
+        can re-light later layers, so this is not trivially zero)."""
+        qnet, hw = _make(spec)
+        exe = api.Accelerator(backend="kernels", dataflow=dataflow).compile(
+            qnet, hw, buckets=(2,))
+        x = jnp.zeros((2,) + hw, jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(exe(x)),
+            np.asarray(api.oracle(qnet, x, mode="snn")))
+        stats = exe.stats()
+        assert stats["plane_passes_total"] > 0
+        assert stats["plane_passes_skipped"] > 0
+        assert stats["plane_passes_skipped"] <= stats["plane_passes_total"]
+
+    @pytest.mark.parametrize("dataflow", ["fused", "bitserial"])
+    @pytest.mark.parametrize("spec", KERNEL_SPECS, ids=lambda s: s.name)
+    def test_single_spike_batch(self, spec, dataflow):
+        """One spiking pixel per image: the quantized level occupies few
+        bit planes, so the prepass skips some first-layer passes while
+        staying bit-exact."""
+        qnet, hw = _make(spec)
+        exe = api.Accelerator(backend="kernels", dataflow=dataflow).compile(
+            qnet, hw, buckets=(2,))
+        x = _single_spike(hw)
+        np.testing.assert_array_equal(
+            np.asarray(exe(x)),
+            np.asarray(api.oracle(qnet, x, mode="snn")))
+        stats = exe.stats()
+        assert stats["plane_passes_skipped"] > 0
+
+    def test_counts_accumulate_across_calls(self):
+        qnet, hw = _make(api.RadixEncoding(4))
+        exe = api.Accelerator(backend="kernels").compile(qnet, hw,
+                                                         buckets=(2,))
+        x = jnp.zeros((2,) + hw, jnp.float32)
+        exe(x)
+        first = exe.stats()
+        exe(x)
+        second = exe.stats()
+        assert second["plane_passes_total"] == 2 * first["plane_passes_total"]
+        assert second["plane_passes_skipped"] == \
+            2 * first["plane_passes_skipped"]
+
+    def test_dense_input_skips_little_radix_much_ttfs(self):
+        """On a dense random batch radix occupies (almost) every plane;
+        TTFS's one-spike trains leave more planes empty — the sparsity
+        the prepass exists to harvest."""
+        x = None
+        skips = {}
+        for spec in (api.RadixEncoding(4), api.TTFSEncoding(4)):
+            qnet, hw = _make(spec)
+            if x is None:
+                x = jnp.asarray(RNG.uniform(0, 1, (4,) + hw), jnp.float32)
+            exe = api.Accelerator(backend="kernels").compile(qnet, hw,
+                                                             buckets=(4,))
+            np.testing.assert_array_equal(
+                np.asarray(exe(x)),
+                np.asarray(api.oracle(qnet, x, mode="snn")))
+            skips[spec.name] = exe.stats()["plane_passes_skipped"]
+        assert skips["ttfs"] >= skips["radix"]
+
+    def test_warmup_does_not_pollute_counters(self):
+        """Warmup executes every bucket on all-zero batches (near-total
+        skips); those must not swamp the stats of real traffic."""
+        qnet, hw = _make(api.RadixEncoding(4))
+        exe = api.Accelerator(backend="kernels").compile(
+            qnet, hw, buckets=(2,)).warmup()
+        assert exe.stats()["plane_passes_total"] == 0
+        x = jnp.asarray(RNG.uniform(0, 1, (2,) + hw), jnp.float32)
+        exe(x)
+        stats = exe.stats()
+        assert stats["plane_passes_total"] > 0
+        assert stats["plane_passes_skipped"] <= stats["plane_passes_total"]
+
+    def test_plan_stays_pure_under_outer_jit(self):
+        """Wrapping a compiled plan in an outer jax transformation must
+        not leak the traced skip counter into the plan object (the
+        counters just don't accumulate for traced calls)."""
+        import jax
+
+        qnet, hw = _make(api.RadixEncoding(4))
+        exe = api.Accelerator(backend="kernels").compile(qnet, hw,
+                                                         buckets=(2,))
+        plan = exe.plan_for(2)
+        x = jnp.zeros((2,) + hw, jnp.float32)
+        want = np.asarray(plan(x))
+        before = plan.plane_stats()
+        got = jax.jit(lambda v: plan(v))(x)
+        np.testing.assert_array_equal(np.asarray(got), want)
+        assert plan.plane_stats() == before      # no tracer leaked
+        plan(x)                                  # eager calls still count
+        assert plan.plane_stats()["plane_passes_total"] == \
+            2 * before["plane_passes_total"]
+
+    def test_jnp_backend_reports_zero_plane_passes(self):
+        qnet, hw = _make(api.RateEncoding(6))
+        exe = api.Accelerator(backend="jnp").compile(qnet, hw, buckets=(2,))
+        exe(jnp.zeros((2,) + hw, jnp.float32))
+        stats = exe.stats()
+        assert stats["plane_passes_skipped"] == 0
+        assert stats["plane_passes_total"] == 0
+
+
+# ---------------------------------------------------------------------------
+# The occupancy helper + kernel-level gating vs the ref oracles.
+# ---------------------------------------------------------------------------
+
+
+class TestOccupancyKernels:
+    def test_plane_occupancy_rows(self):
+        x = jnp.asarray([[0b1010, 0b0010], [0, 0b1000]], jnp.uint8)
+        row, bits = ops.plane_occupancy(x, 4)
+        assert row.shape == (1, OCC_LANES)
+        np.testing.assert_array_equal(np.asarray(bits), [0, 1, 0, 1])
+        np.testing.assert_array_equal(np.asarray(row[0, :4]), [0, 1, 0, 1])
+        assert int(np.asarray(row[0, 4:]).sum()) == 0
+        _, zbits = ops.plane_occupancy(jnp.zeros((3, 3), jnp.uint8), 4)
+        assert int(np.asarray(zbits).sum()) == 0
+
+    @pytest.mark.parametrize("method", ["fused", "bitserial"])
+    def test_gated_matmul_matches_ref(self, method):
+        """Occupancy-gated kernels == ungated ref oracle on inputs whose
+        empty planes the gate actually skips (values touch bits 1 and 3
+        only)."""
+        x = jnp.asarray(RNG.choice([0, 2, 8, 10], (8, 16)), jnp.uint8)
+        w = jnp.asarray(RNG.integers(-3, 4, (16, 8)), jnp.int8)
+        occ, bits = ops.plane_occupancy(x, 4)
+        assert int(np.asarray(bits).sum()) == 2          # planes 1 and 3
+        got = radix_matmul_pallas(x, w, num_steps=4, method=method,
+                                  bm=8, bk=16, bn=8, interpret=True,
+                                  occupancy=occ)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.radix_matmul_ref(x, w, 4)))
+
+    @pytest.mark.parametrize("method", ["fused", "bitserial"])
+    def test_gated_conv_matches_ref(self, method):
+        x = jnp.asarray(RNG.choice([0, 4], (1, 6, 6, 8)), jnp.uint8)
+        w = jnp.asarray(RNG.integers(-2, 3, (3, 3, 8, 8)), jnp.int8)
+        occ, bits = ops.plane_occupancy(x, 3)
+        assert int(np.asarray(bits).sum()) == 1          # plane 2 only
+        got = radix_conv2d_pallas(x, w, num_steps=3, method=method, bco=8,
+                                  interpret=True, occupancy=occ)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.radix_conv2d_ref(x, w, 3)))
+
+    @pytest.mark.parametrize("method", ["fused", "bitserial"])
+    def test_gated_epilogue_matches_ref(self, method):
+        x = jnp.asarray(RNG.choice([0, 1, 4, 5], (8, 16)), jnp.uint8)
+        w = jnp.asarray(RNG.integers(-3, 4, (16, 8)), jnp.int8)
+        bias = jnp.asarray(RNG.integers(-20, 20, (1, 8)), jnp.int32)
+        mult = jnp.full((1, 8), 0.031, jnp.float32)
+        occ, _ = ops.plane_occupancy(x, 3)
+        got = radix_matmul_pallas(x, w, num_steps=3, method=method,
+                                  bm=8, bk=16, bn=8, interpret=True,
+                                  occupancy=occ, bias=bias, mult=mult)
+        want = ref.radix_matmul_epilogue_ref(x, w, bias, mult, 3)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ops_wrapper_sparsity_flag(self):
+        """ops.radix_matmul(sparsity=True) runs the prepass internally
+        and stays bit-exact — the public sparsity-aware execution mode."""
+        spec = api.TTFSEncoding(4)
+        x = jnp.asarray(spec.quantize(
+            jnp.asarray(RNG.uniform(0, 0.3, (8, 16)), jnp.float32)),
+            jnp.uint8)
+        w = jnp.asarray(RNG.integers(-3, 4, (16, 8)), jnp.int8)
+        dense = ops.radix_matmul(x, w, None, spec, method="bitserial")
+        sparse = ops.radix_matmul(x, w, None, spec, method="bitserial",
+                                  sparsity=True)
+        np.testing.assert_array_equal(np.asarray(sparse), np.asarray(dense))
+
+    def test_gated_periodic_schedule_matches_ref(self):
+        """Occupancy gating composes with the phase period replay."""
+        x = jnp.asarray(RNG.choice([0, 2, 6], (8, 16)), jnp.uint8)
+        w = jnp.asarray(RNG.integers(-3, 4, (16, 8)), jnp.int8)
+        occ, _ = ops.plane_occupancy(x, 3)
+        got = radix_matmul_pallas(x, w, num_steps=3, method="bitserial",
+                                  bm=8, bk=16, bn=8, interpret=True,
+                                  periods=2, occupancy=occ)
+        want = ref.radix_matmul_ref(x, w, 3, periods=2)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

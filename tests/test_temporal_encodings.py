@@ -10,9 +10,12 @@ encodings*; this suite proves the two temporal schemes are first-class:
   raises with the supported options named — nothing silently falls
   through,
 * end-to-end plan-vs-``api.oracle`` bit-exactness on LeNet-5 and Fang
-  CNN-2 (TTFS on the jnp backend; phase additionally on the kernels
-  backend, both dataflows, with the period-repeated bitserial schedule),
-* the kernel-level period schedule against the ref.py oracles.
+  CNN-2 (TTFS and phase BOTH on the kernels backend, both dataflows —
+  TTFS through its pow2 epilogue grid and the occupancy-gated plane
+  schedule, phase through the period-repeated bitserial schedule),
+* the kernel-level period schedule and the pow2 epilogue grid against
+  the ref.py oracles (tests/test_sparsity_prepass.py covers the
+  occupancy machinery itself).
 """
 
 import jax.numpy as jnp
@@ -53,15 +56,20 @@ class TestDeclarations:
     def test_ttfs(self):
         spec = api.TTFSEncoding(4)
         assert spec.levels == 16                      # grid units
-        assert spec.backends == ("jnp",)
-        assert spec.kernel_dataflows == ()
+        assert spec.backends == ("kernels", "jnp")
+        assert spec.kernel_dataflows == ("fused", "bitserial")
+        assert spec.validate_dataflow(None) == "fused"
         assert spec.pool_modes == ("avg", "max")
         assert spec.radix_planes
         np.testing.assert_array_equal(spec.representable_levels(),
                                       [0, 1, 2, 4, 8])
         np.testing.assert_array_equal(spec.plane_weights(), [8, 4, 2, 1])
-        with pytest.raises(ValueError, match="kernel dataflow"):
-            spec.validate_dataflow(None)
+        # the kernels run TTFS through its declared schedule: radix
+        # extraction of the one-hot planes + pow2 epilogue grid (the
+        # in-kernel log-spaced re-timing of the single output spike)
+        sched = spec.kernel_schedule()
+        assert (sched.packed_bits, sched.periods) == (4, 1)
+        assert sched.out_level == 15 and sched.out_grid == "pow2"
 
     def test_phase(self):
         spec = api.PhaseEncoding(8, periods=2)
@@ -202,19 +210,32 @@ class TestValidation:
             for good in spec.pool_modes:
                 assert good in str(e.value)
 
-    def test_ttfs_on_kernels_backend_raises(self):
-        qnet, hw = _make(encoding=api.TTFSEncoding(4))
+    def test_rate_on_kernels_backend_raises(self):
+        """rate is the one remaining jnp-only spec — its sigma-delta
+        planes are not the bit planes of its packed count, so the
+        kernels path stays undeclared and the facade refuses loudly."""
+        qnet, hw = _make(encoding=api.RateEncoding(6))
         with pytest.raises(ValueError, match="kernels"):
             api.Accelerator(backend="kernels").compile(qnet, hw)
 
-    def test_ttfs_spec_rejected_by_kernel_wrappers(self):
-        with pytest.raises(ValueError, match="kernels"):
-            ops._schedule(api.TTFSEncoding(4))
+    def test_rate_spec_rejected_by_kernel_wrappers(self):
+        with pytest.raises(ValueError, match="kernel dataflow"):
+            ops._schedule(api.RateEncoding(6))
 
-    def test_phase_spec_accepted_by_kernel_wrappers(self):
-        assert ops._schedule(api.PhaseEncoding(8, periods=2)) == (4, 2)
-        assert ops._schedule(api.RadixEncoding(4)) == (4, 1)
-        assert ops._schedule(5) == (5, 1)
+    def test_specs_accepted_by_kernel_wrappers(self):
+        """ops._schedule resolves every kernels-capable spec (and bare
+        ints) to its declared KernelSchedule."""
+        sched = ops._schedule(api.PhaseEncoding(8, periods=2))
+        assert (sched.packed_bits, sched.periods) == (4, 2)
+        assert sched.out_grid == "dense"
+        sched = ops._schedule(api.RadixEncoding(4))
+        assert (sched.packed_bits, sched.periods) == (4, 1)
+        sched = ops._schedule(api.TTFSEncoding(4))
+        assert (sched.packed_bits, sched.periods) == (4, 1)
+        assert sched.out_grid == "pow2"
+        sched = ops._schedule(5)
+        assert (sched.packed_bits, sched.periods, sched.out_level,
+                sched.out_grid) == (5, 1, 31, "dense")
 
     def test_convert_rejects_bad_pools(self):
         static, params, input_hw = lenet.make(pool_mode="or",
@@ -254,6 +275,36 @@ class TestTTFSEndToEnd:
     def test_fang_plan_vs_oracle(self):
         qnet, hw = _make(fang, encoding=api.TTFSEncoding(5))
         exe = api.Accelerator(backend="jnp").compile(qnet, hw, buckets=(2,))
+        x = _x(2, hw)
+        np.testing.assert_array_equal(
+            np.asarray(exe(x)),
+            np.asarray(api.oracle(qnet, x, mode="snn")))
+
+    @pytest.mark.parametrize("dataflow", ["fused", "bitserial"])
+    @pytest.mark.parametrize("pool", ["avg", "max"])
+    def test_lenet_kernels_vs_oracle(self, dataflow, pool):
+        """Acceptance: TTFS LeNet-5 on the KERNELS backend, both
+        dataflows, bit-exact vs the spike-plane oracle — the pow2
+        epilogue grid and the occupancy-gated plane schedule change
+        nothing but the work done."""
+        qnet, hw = _make(pool_mode=pool, encoding=api.TTFSEncoding(4))
+        exe = api.Accelerator(backend="kernels", dataflow=dataflow).compile(
+            qnet, hw, buckets=(1, 4))
+        for n in (1, 3):
+            x = _x(n, hw)
+            want = api.oracle(qnet, x, mode="snn")
+            np.testing.assert_array_equal(np.asarray(exe(x)),
+                                          np.asarray(want))
+        stats = exe.stats()
+        assert stats["plane_passes_total"] > 0
+
+    @pytest.mark.parametrize("dataflow", ["fused", "bitserial"])
+    def test_fang_kernels_vs_oracle(self, dataflow):
+        """Acceptance: TTFS Fang CNN-2 on the KERNELS backend, both
+        dataflows, bit-exact vs the spike-plane oracle."""
+        qnet, hw = _make(fang, encoding=api.TTFSEncoding(5))
+        exe = api.Accelerator(backend="kernels", dataflow=dataflow).compile(
+            qnet, hw, buckets=(2,))
         x = _x(2, hw)
         np.testing.assert_array_equal(
             np.asarray(exe(x)),
@@ -371,3 +422,27 @@ class TestKernelPeriods:
         out = ops.radix_matmul(x, w, None, spec, method="bitserial")
         want = x.astype(jnp.int32) @ w.astype(jnp.int32)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    @pytest.mark.parametrize("method", ["fused", "bitserial"])
+    def test_pow2_epilogue_matches_ref(self, method):
+        """The kernels' out_grid="pow2" epilogue == the ref oracle's
+        grid="pow2" requantizer == TTFSEncoding.requantize, bit-exact."""
+        spec = api.TTFSEncoding(3)
+        x = jnp.asarray(spec.quantize(
+            jnp.asarray(RNG.uniform(0, 1, (8, 16)), jnp.float32)), jnp.uint8)
+        w = jnp.asarray(RNG.integers(-3, 4, (16, 8)), jnp.int8)
+        bias = jnp.asarray(RNG.integers(-20, 20, (1, 8)), jnp.int32)
+        mult = jnp.full((1, 8), 0.043, jnp.float32)
+        got = radix_matmul_pallas(
+            x, w, num_steps=3, method=method, bm=8, bk=16, bn=8,
+            interpret=True, bias=bias, mult=mult, out_grid="pow2")
+        want = ref.radix_matmul_epilogue_ref(x, w, bias, mult, 3,
+                                             grid="pow2")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        spec_requant = spec.requantize(
+            x.astype(jnp.int32) @ w.astype(jnp.int32) + bias, mult)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(spec_requant))
+        # every output level lands on the TTFS grid
+        grid = set(spec.representable_levels().tolist())
+        assert set(np.asarray(got).ravel().tolist()) <= grid
