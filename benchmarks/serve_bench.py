@@ -1,7 +1,7 @@
-"""Batched serving benchmark: bucket-ladder latency + mixed-size streams.
+"""Batched serving benchmark: bucket ladder, mixed streams, chaos drills.
 
-Two measurements per architecture (lenet5 / fang_cnn / vgg11-smoke), both
-over ``repro.api`` executables (fused-epilogue kernel plans, DESIGN.md §3):
+Three measurements (archs: lenet5 / fang_cnn / vgg11-smoke), all over
+``repro.api`` executables (fused-epilogue kernel plans, DESIGN.md §3):
 
 * **per-bucket steady state** — the pre-compiled plan for each batch bucket
   timed directly: p50/p95 latency per call and images/sec.  This is the
@@ -10,25 +10,39 @@ over ``repro.api`` executables (fused-epilogue kernel plans, DESIGN.md §3):
   micro-batching queue.  Requests pad to buckets; the ``Executable.stats()``
   counters prove the steady state never recompiles (asserted here AND
   pinned by tests/test_serve.py — a recompile regression fails the bench).
+* **chaos drills** (``--chaos`` runs them standalone; docs/serving.md) —
+  deterministic fault injection (``repro.runtime.resilience.FaultPlan``)
+  into the first arch's server: transient fail-every-Nth, one
+  permanently-poisoned request in a stream, and latency spikes.  Each
+  scenario row records the injected fault counts next to the recovery
+  counters (retried / quarantined / shed / rejected / degraded_flushes),
+  the extra successful flushes the recovery cost, and a bit-exactness
+  check of every healthy ticket against the un-faulted oracle — fault
+  *rates* in, recovery *outcomes* out.
 
 On this CPU container the Pallas kernels run in interpret mode, so absolute
 numbers are not TPU performance; the bench tracks the *serving* overheads
-(bucketing waste, queue latency, dispatch) which are real on any backend.
-Results go to stdout as CSV and to ``BENCH_serve.json`` at the repo root so
-the trajectory is machine-readable across PRs.
+(bucketing waste, queue latency, dispatch, fault recovery) which are real
+on any backend.  Results go to stdout as CSV and to ``BENCH_serve.json``
+at the repo root so the trajectory is machine-readable across PRs.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
+import math
 import pathlib
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import engine
 from repro.launch import serve_cnn
+from repro.runtime import resilience as rz
 
 _JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
 
@@ -88,17 +102,173 @@ def _stream_row(server, arch, n_requests, max_request, rng, log):
             "padded_rows": stats["padded_rows"], "flushes": queue.flushes}
 
 
+class _FakeClock:
+    """Deterministic queue clock for the chaos drills (latency injection
+    advances it, so straggler detection is load-independent)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _noop(_dt):
+    return None
+
+
+def _counter_delta(server, before):
+    after = server.stats()
+    return {k: after[k] - before[k]
+            for k in ("rejected", "shed", "retried", "quarantined",
+                      "degraded_flushes", "failures")}
+
+
+def _healthy_bit_exact(server, reqs, tickets, skip=()):
+    """Every healthy ticket's logits vs the un-faulted oracle."""
+    for i, (r, t) in enumerate(zip(reqs, tickets)):
+        if i in skip or not t.ok:
+            continue
+        ref = api.oracle(server.qnet, jnp.asarray(r), mode="packed")
+        if not np.array_equal(np.asarray(t.result), np.asarray(ref)):
+            return False
+    return True
+
+
+def _chaos_scenarios(server, rng, log):
+    """Fault-rate -> recovery rows for BENCH_serve.json's chaos section.
+
+    Every drill reuses the resilience layer end to end: FaultPlan ->
+    ChaosServer -> MicroBatchQueue (bisecting quarantine, retry budget,
+    health machine) — the numbers here are the serving twin's graceful-
+    degradation story, not synthetic unit counters."""
+    item = server.item_shape
+
+    def req(n=1):
+        return rng.uniform(0, 1, (n,) + item).astype(np.float32)
+
+    rows = []
+
+    # --- transient: every 3rd infer call fails, retries recover all ---
+    plan = rz.FaultPlan(fail_every=3)
+    clock = _FakeClock()
+    before = dict(server.stats())
+    q = serve_cnn.MicroBatchQueue(
+        rz.ChaosServer(server, plan, delay=_noop), max_batch=1,
+        timeout_s=0.0, clock=clock, sleep=clock.advance,
+        retry=rz.RetryPolicy(max_retries=2, backoff_s=0.0))
+    reqs = [req() for _ in range(24)]
+    tickets = [q.submit(r) for r in reqs]
+    q.flush()
+    delta = _counter_delta(server, before)
+    rows.append({
+        "scenario": "transient_fail_every_3",
+        "requests": len(reqs),
+        "injected": dict(plan.injected),
+        "infer_calls": plan.calls,
+        "resolved_ok": sum(t.ok for t in tickets),
+        "counters": delta,
+        "recovery_reconciles": delta["retried"] == plan.injected[
+            "transient"],
+        "bit_exact_healthy": _healthy_bit_exact(server, reqs, tickets),
+    })
+
+    # --- poison: 1 NaN request in a 32-stream, bisecting quarantine ---
+    n, poison_at = 32, 11
+    plan = rz.FaultPlan(poison_nan=True)
+    clock = _FakeClock()
+    before = dict(server.stats())
+    retry = rz.RetryPolicy(max_retries=1, backoff_s=0.0)
+    q = serve_cnn.MicroBatchQueue(
+        rz.ChaosServer(server, plan, delay=_noop), max_batch=n,
+        timeout_s=1e9, clock=clock, sleep=clock.advance, retry=retry)
+    reqs = [req() for _ in range(n)]
+    reqs[poison_at][:] = np.nan
+    tickets = [q.submit(r) for r in reqs]
+    q.flush()
+    delta = _counter_delta(server, before)
+    quarantine_bound = math.ceil(math.log2(n)) + 1
+    rows.append({
+        "scenario": "poison_1_of_32",
+        "requests": n,
+        "injected": dict(plan.injected),
+        "infer_calls": plan.calls,
+        "resolved_ok": sum(t.ok for t in tickets),
+        "quarantined_at_flush_cost": q.flushes - 1,   # extra vs clean run
+        "quarantine_bound_log2": quarantine_bound,
+        "within_bound": q.flushes - 1 <= quarantine_bound,
+        "counters": delta,
+        "bit_exact_healthy": _healthy_bit_exact(server, reqs, tickets,
+                                                skip=(poison_at,)),
+    })
+
+    # --- latency spike: stragglers degrade, smaller groups recover ---
+    plan = rz.FaultPlan(latency_every=5, latency_s=0.5, base_latency_s=0.01)
+    clock = _FakeClock()
+    before = dict(server.stats())
+    health = rz.HealthMonitor(drain_after=10, recover_after=2)
+    q = serve_cnn.MicroBatchQueue(
+        rz.ChaosServer(server, plan, delay=clock.advance), max_batch=4,
+        timeout_s=1e9, clock=clock, sleep=clock.advance, health=health,
+        degraded_max_batch=2)
+    reqs = [req() for _ in range(28)]
+    tickets = [q.submit(r) for r in reqs]
+    q.flush()
+    delta = _counter_delta(server, before)
+    rows.append({
+        "scenario": "latency_spike_every_5",
+        "requests": len(reqs),
+        "injected": dict(plan.injected),
+        "infer_calls": plan.calls,
+        "resolved_ok": sum(t.ok for t in tickets),
+        "counters": delta,
+        "degraded": delta["degraded_flushes"] > 0,
+        "final_health": q.health.state,
+        "bit_exact_healthy": _healthy_bit_exact(server, reqs, tickets),
+    })
+
+    for row in rows:
+        c = row["counters"]
+        log(f"chaos,{row['scenario']},requests={row['requests']},"
+            f"injected={sum(row['injected'].values())},"
+            f"ok={row['resolved_ok']},retried={c['retried']},"
+            f"quarantined={c['quarantined']},shed={c['shed']},"
+            f"rejected={c['rejected']},degraded={c['degraded_flushes']},"
+            f"bit_exact={row['bit_exact_healthy']}")
+    return rows
+
+
+def run_chaos(log=print, arch="lenet5", T=4, pool_mode="or", seed=0,
+              buckets=(1, 4, 8), server=None):
+    """The chaos section alone (reused by run(); ``--chaos`` mode merges
+    it into an existing BENCH_serve.json without re-timing the ladder)."""
+    rng = np.random.default_rng(seed + 1)
+    if server is None:
+        qnet, item = serve_cnn.build_qnet(arch, smoke=True,
+                                          pool_mode=pool_mode, num_steps=T,
+                                          seed=seed)
+        server = serve_cnn.CNNServer(qnet, item, buckets=buckets)
+        server.warmup()
+    return {"arch": arch, "scenarios": _chaos_scenarios(server, rng, log)}
+
+
 def run(log=print, archs=ARCHS, buckets=(1, 4, 8), iters=5,
         n_requests=24, max_request=6, T=4, pool_mode="or", seed=0,
-        json_path=_JSON_PATH):
+        json_path=_JSON_PATH, chaos=True):
     rng = np.random.default_rng(seed)
     per_arch = {}
+    first_server = None
     for arch in archs:
         qnet, item = serve_cnn.build_qnet(arch, smoke=True,
                                           pool_mode=pool_mode, num_steps=T,
                                           seed=seed)
         server = serve_cnn.CNNServer(qnet, item, buckets=buckets)
         server.warmup()
+        if first_server is None:
+            first_server = (arch, server)
         per_arch[arch] = {
             "item_shape": list(item),
             "buckets": _bucket_rows(server, arch, buckets, iters, rng, log),
@@ -117,6 +287,13 @@ def run(log=print, archs=ARCHS, buckets=(1, 4, 8), iters=5,
                    "default_bucket_ladder": list(engine.DEFAULT_BUCKETS)},
         "archs": per_arch,
     }
+    if chaos and first_server is not None:
+        # chaos runs AFTER cache_stats snapshots, against the first arch's
+        # warmed server — its counters never leak into the clean sections.
+        payload["chaos"] = run_chaos(log=log, arch=first_server[0], T=T,
+                                     pool_mode=pool_mode, seed=seed,
+                                     buckets=buckets,
+                                     server=first_server[1])
     if json_path is not None:
         pathlib.Path(json_path).write_text(json.dumps(payload, indent=2)
                                            + "\n")
@@ -124,8 +301,26 @@ def run(log=print, archs=ARCHS, buckets=(1, 4, 8), iters=5,
     return payload
 
 
-def main():
-    run()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the chaos drills and merge the section "
+                         "into the existing BENCH_serve.json")
+    ap.add_argument("--no-chaos", action="store_true",
+                    help="skip the chaos drills in a full run")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.chaos and args.no_chaos:
+        ap.error("--chaos and --no-chaos are mutually exclusive")
+    if args.chaos:
+        section = run_chaos(seed=args.seed)
+        payload = (json.loads(_JSON_PATH.read_text())
+                   if _JSON_PATH.exists() else {"bench": "serve"})
+        payload["chaos"] = section
+        _JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"serve,json={_JSON_PATH}")
+        return
+    run(seed=args.seed, chaos=not args.no_chaos)
 
 
 if __name__ == "__main__":

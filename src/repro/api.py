@@ -189,6 +189,7 @@ class Executable:
                 buckets, method="jnp", encoding=encoding,
                 compile_fn=compile_fn)
         self.buckets = self._cache.buckets
+        self._stat_providers: list = []
 
     def __repr__(self) -> str:
         return (f"Executable({self.encoding}, backend={self.backend!r}, "
@@ -224,15 +225,29 @@ class Executable:
         overhead."""
         return self._cache.plan_for(self.qnet, bucket, self.item_shape)
 
+    def attach_stats(self, provider) -> "Executable":
+        """Register an extra stats provider — a zero-arg callable
+        returning a dict merged into :meth:`stats` — so layers above the
+        executable (e.g. the serving queue's resilience counters,
+        DESIGN.md §3) surface through the one stats call.  Providers
+        merge in registration order; returns self for chaining."""
+        self._stat_providers.append(provider)
+        return self
+
     def stats(self) -> dict:
         """Plan-cache counters: ``hits`` / ``compiles`` / ``executions``
-        / ``padded_rows`` / ``pruned`` (zero steady-state recompiles),
-        plus the sparsity-prepass counters ``plane_passes_skipped`` /
+        / ``padded_rows`` / ``pruned`` / ``failures`` (zero steady-state
+        recompiles; ``failures`` counts plan calls that raised — the
+        serving queue's recovery path, DESIGN.md §3), plus the
+        sparsity-prepass counters ``plane_passes_skipped`` /
         ``plane_passes_total`` (all-zero spike planes the kernel plans
         early-exited or masked, DESIGN.md §8 — zeros on the jnp
-        backend, which has no plane schedule to skip)."""
+        backend, which has no plane schedule to skip), plus any dicts
+        from :meth:`attach_stats` providers."""
         d = self._cache.stats.as_dict()
         d.update(self._cache.plane_stats())
+        for provider in self._stat_providers:
+            d.update(provider())
         return d
 
     def traffic(self) -> dict:

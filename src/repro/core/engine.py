@@ -719,6 +719,7 @@ class PlanCacheStats:
     pruned: int = 0          # entries dropped after their net was GC'd
     executions: int = 0      # plan calls (chunks count individually)
     padded_rows: int = 0     # bucket-padding rows executed and sliced off
+    failures: int = 0        # run() calls that raised (build or execute)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -859,7 +860,19 @@ class PlanCache:
 
     def run(self, qnet: conversion.QuantizedNet, x: jax.Array) -> jax.Array:
         """Arbitrary-batch inference: pad to the nearest bucket / chunk by
-        the top bucket, slice the logits back to the request size."""
+        the top bucket, slice the logits back to the request size.
+
+        A raised plan build/execution error increments ``stats.failures``
+        before propagating — the serving layer's fault-recovery path
+        (DESIGN.md §3) reconciles its retry/quarantine counters against
+        it."""
+        try:
+            return self._run(qnet, x)
+        except Exception:
+            self.stats.failures += 1
+            raise
+
+    def _run(self, qnet: conversion.QuantizedNet, x: jax.Array) -> jax.Array:
         n = x.shape[0]
         item = tuple(x.shape[1:])
         top = self.buckets[-1]

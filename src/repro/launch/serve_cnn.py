@@ -23,6 +23,18 @@ with the sparsity-aware plane-occupancy schedule (docs/kernels.md —
 jnp-only rate spec serves per-bucket jitted closures — same bucketing,
 queueing and stats machinery either way.
 
+The queue is fault-tolerant (docs/serving.md; policy objects in
+``repro.runtime.resilience``): admissions are bounded with backpressure,
+tickets carry deadlines and are shed once expired, a failing flush is
+recovered by **bisecting quarantine** (a poison request is isolated in
+O(log n) re-flushes and fails alone with a bounded retry budget while
+healthy co-batched tickets complete), and a healthy → degraded →
+draining health machine over per-flush latencies falls back to smaller
+flush groups before refusing admissions.  Every shed/failed ticket
+*resolves* with a typed terminal error; the ``rejected / shed / retried
+/ quarantined / degraded_flushes`` counters ride along in
+``server.stats()``.
+
 Usage:
   python -m repro.launch.serve_cnn --arch vgg11 --smoke
   python -m repro.launch.serve_cnn --arch lenet5 --requests 64 --buckets 1,4,8
@@ -47,6 +59,7 @@ import numpy as np
 
 from repro import api
 from repro.core import conversion, engine
+from repro.runtime import resilience
 
 __all__ = [
     "ARCHS",
@@ -161,7 +174,12 @@ class CNNServer:
 
     The server owns no execution machinery of its own: batching buckets,
     plan caching, data-parallel sharding and the stats counters all live
-    on the executable (``server.exe``)."""
+    on the executable (``server.exe``).  The serving-resilience counters
+    (``resilience``, a :class:`~repro.runtime.resilience.ResilienceStats`
+    mutated by the server's :class:`MicroBatchQueue`) are attached to the
+    executable's stats surface, so ``server.stats()`` reports
+    rejected/shed/retried/quarantined/degraded_flushes next to the
+    plan-cache counters."""
 
     def __init__(
         self,
@@ -180,6 +198,8 @@ class CNNServer:
             backend=backend, dataflow=dataflow,
         ).compile(qnet, self.item_shape, parallel=data_parallel,
                   buckets=buckets)
+        self.resilience = resilience.ResilienceStats()
+        self.exe.attach_stats(self.resilience.as_dict)
 
     def warmup(self) -> None:
         """Compile every bucket up front (serving never compiles again)."""
@@ -205,20 +225,38 @@ class CNNServer:
 
 @dataclasses.dataclass
 class Ticket:
-    """Handle returned by :meth:`MicroBatchQueue.submit`."""
+    """Handle returned by :meth:`MicroBatchQueue.submit`.
+
+    A ticket always reaches a terminal state: either ``result`` holds
+    the logits, or ``error`` holds a
+    :class:`~repro.runtime.resilience.ServeError` (rejected at submit,
+    shed on deadline, or quarantined as poisoned) — never a dangling
+    ``result is None`` forever.  ``deadline`` is an absolute queue-clock
+    time; expired tickets are shed before they reach a flush."""
 
     size: int
     t_submit: float
+    deadline: Optional[float] = None      # absolute clock time; None = none
     result: Optional[jax.Array] = None
-    latency_s: Optional[float] = None     # submit -> results materialized
+    error: Optional[Exception] = None     # terminal ServeError
+    latency_s: Optional[float] = None     # submit -> resolved (either way)
 
     @property
     def done(self) -> bool:
+        """Terminal: resolved with logits OR a typed error."""
+        return self.result is not None or self.error is not None
+
+    @property
+    def ok(self) -> bool:
+        """Resolved successfully (logits available)."""
         return self.result is not None
 
 
+ADMISSION_POLICIES = ("reject", "flush")
+
+
 class MicroBatchQueue:
-    """Collect-until-full-or-timeout micro-batcher in front of a server.
+    """Fault-tolerant collect-until-full-or-timeout micro-batcher.
 
     Requests (single images or small batches) accumulate; the queue flushes
     as **one** batched ``server.infer`` call when either
@@ -228,11 +266,37 @@ class MicroBatchQueue:
     * the oldest pending request has waited ``timeout_s`` (bounded latency
       under trickle load — the batch pads up to its bucket instead).
 
+    Hostile traffic is survived by policy, not luck (docs/serving.md;
+    DESIGN.md §3 failure-mode table):
+
+    * **Bounded admission** — ``pending_images`` never exceeds
+      ``max_pending``.  An over-bound submit is *rejected* (the ticket
+      resolves immediately with
+      :class:`~repro.runtime.resilience.AdmissionError`) or, with
+      ``admission="flush"``, the queue applies backpressure by flushing
+      synchronously to make room first.
+    * **Deadlines** — a ticket whose deadline passed while queued is shed
+      (resolves with :class:`~repro.runtime.resilience.DeadlineExceeded`)
+      before it wastes a flush.
+    * **Bisecting quarantine** — a failing flush is split in half and the
+      halves re-flushed, so one poisoned request is isolated in O(log n)
+      re-flushes and fails alone (after a bounded
+      :class:`~repro.runtime.resilience.RetryPolicy` backoff budget for
+      transient faults) while every healthy co-batched ticket completes
+      bit-exact; the poisoned ticket resolves with
+      :class:`~repro.runtime.resilience.RequestPoisoned`.
+    * **Health machine** — per-flush latencies feed a
+      :class:`~repro.runtime.resilience.HealthMonitor` (StragglerMonitor
+      median/MAD underneath).  Degraded serving flushes in groups of at
+      most ``degraded_max_batch`` images (a smaller bucket, which also
+      shards over fewer devices); draining refuses admissions until
+      ``health.resume()``.
+
     Single-threaded and event-driven: callers drive time via
-    :meth:`submit` / :meth:`poll` (``clock`` injectable, so tests are
-    deterministic).  Latency recorded per ticket spans submit -> logits
-    materialized (device-synchronized), i.e. queue wait + padded-bucket
-    compute — the number a serving SLO cares about.
+    :meth:`submit` / :meth:`poll` (``clock`` and the backoff ``sleep``
+    injectable, so chaos tests are deterministic).  Latency recorded per
+    ticket spans the *original* submit -> resolved, through any retries
+    — the number a serving SLO cares about.
     """
 
     def __init__(
@@ -242,25 +306,65 @@ class MicroBatchQueue:
         max_batch: Optional[int] = None,
         timeout_s: float = 0.005,
         clock: Callable[[], float] = time.monotonic,
+        max_pending: Optional[int] = None,
+        admission: str = "reject",
+        default_deadline_s: Optional[float] = None,
+        retry: Optional[resilience.RetryPolicy] = resilience.RetryPolicy(),
+        health: Optional[resilience.HealthMonitor] = None,
+        degraded_max_batch: Optional[int] = None,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         self.server = server
         self.max_batch = int(max_batch or server.exe.buckets[-1])
         self.timeout_s = float(timeout_s)
         self.clock = clock
+        if admission not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"admission must be one of {ADMISSION_POLICIES}, got "
+                f"{admission!r}")
+        self.admission = admission
+        self.max_pending = int(max_pending if max_pending is not None
+                               else 8 * self.max_batch)
+        if self.max_pending < 1:
+            raise ValueError(
+                f"max_pending must be >= 1, got {self.max_pending}")
+        self.default_deadline_s = default_deadline_s
+        self.retry = retry
+        self.health = health if health is not None \
+            else resilience.HealthMonitor()
+        if degraded_max_batch is None:
+            smaller = [b for b in server.exe.buckets if b < self.max_batch]
+            degraded_max_batch = smaller[-1] if smaller else self.max_batch
+        self.degraded_max_batch = max(1, int(degraded_max_batch))
+        self._sleep = sleep
+        self.counters = getattr(server, "resilience", None)
+        if self.counters is None:
+            self.counters = resilience.ResilienceStats()
         self._pending: List[Tuple[np.ndarray, Ticket]] = []
         self._count = 0
-        self.flushes = 0
+        self.flushes = 0          # successful infer flushes (incl. halves)
 
     @property
     def pending_images(self) -> int:
         return self._count
 
-    def submit(self, x) -> Ticket:
+    def _reject(self, ticket: Ticket, reason: str) -> Ticket:
+        ticket.error = resilience.AdmissionError(reason)
+        ticket.latency_s = 0.0
+        self.counters.rejected += 1
+        return ticket
+
+    def submit(self, x, *, deadline_s: Optional[float] = None) -> Ticket:
         """Enqueue one request (item or (n,)+item batch); may flush.
 
         Shape-validates here, not at flush time: a malformed request must
-        fail its own submit, never poison the co-batched tickets already
-        queued."""
+        fail its own submit (``ValueError`` — a caller bug, not a fault),
+        never poison the co-batched tickets already queued.  Admission
+        failures are *faults*, not bugs: the returned ticket resolves
+        immediately with an
+        :class:`~repro.runtime.resilience.AdmissionError` instead of
+        raising.  ``deadline_s`` (default ``default_deadline_s``) is a
+        relative deadline from now; expired tickets are shed pre-flush."""
         x = np.asarray(x, np.float32)
         if x.ndim == len(self.server.item_shape):
             x = x[None]
@@ -270,17 +374,53 @@ class MicroBatchQueue:
                 f"{self.server.item_shape}")
         if x.shape[0] == 0:
             raise ValueError("empty request (0 images)")
-        ticket = Ticket(size=x.shape[0], t_submit=self.clock())
+        now = self.clock()
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        ticket = Ticket(size=x.shape[0], t_submit=now,
+                        deadline=None if deadline_s is None
+                        else now + deadline_s)
+        if not self.health.accepting:
+            return self._reject(
+                ticket, f"server draining (health={self.health.state}); "
+                "not accepting new requests")
+        if self._count + ticket.size > self.max_pending:
+            if self.admission == "flush":
+                self.flush()          # backpressure: drain to make room
+            if self._count + ticket.size > self.max_pending:
+                return self._reject(
+                    ticket, f"queue at admission bound: {self._count} "
+                    f"pending + {ticket.size} > max_pending="
+                    f"{self.max_pending}")
         self._pending.append((x, ticket))
-        self._count += x.shape[0]
-        self.poll()
+        self._count += ticket.size
+        self.poll(now)
         return ticket
 
+    def _shed_expired(self, now: float) -> None:
+        """Resolve-and-drop every pending ticket whose deadline passed."""
+        if all(t.deadline is None for _, t in self._pending):
+            return
+        kept = []
+        for x, ticket in self._pending:
+            if ticket.deadline is not None and now >= ticket.deadline:
+                ticket.error = resilience.DeadlineExceeded(
+                    f"deadline passed {now - ticket.deadline:.4f}s before "
+                    "flush")
+                ticket.latency_s = now - ticket.t_submit
+                self.counters.shed += 1
+                self._count -= ticket.size
+            else:
+                kept.append((x, ticket))
+        self._pending = kept
+
     def poll(self, now: Optional[float] = None) -> bool:
-        """Flush if full or the oldest request timed out; True if flushed."""
+        """Shed expired tickets, then flush if full or the oldest request
+        timed out; True if flushed."""
+        now = self.clock() if now is None else now
+        self._shed_expired(now)
         if not self._pending:
             return False
-        now = self.clock() if now is None else now
         oldest = self._pending[0][1].t_submit
         if self._count >= self.max_batch or now - oldest >= self.timeout_s:
             self.flush()
@@ -288,24 +428,91 @@ class MicroBatchQueue:
         return False
 
     def flush(self) -> None:
-        """Run everything pending as one batched call; resolve tickets."""
+        """Run everything pending; every involved ticket reaches a
+        terminal state (logits, shed, or quarantined) — flush itself
+        never raises on an infer fault."""
+        self._shed_expired(self.clock())
         if not self._pending:
             return
         pending, self._pending, self._count = self._pending, [], 0
-        batch = np.concatenate([x for x, _ in pending], axis=0)
+        if self.health.degraded:
+            groups = self._split(pending, self.degraded_max_batch)
+            self.counters.degraded_flushes += len(groups)
+        else:
+            groups = [pending]
+        for group in groups:
+            self._run_group(group)
+
+    @staticmethod
+    def _split(pending, cap: int):
+        """Greedy FIFO grouping at <= cap images per group (a single
+        request larger than cap keeps its own group — requests are never
+        split)."""
+        groups, cur, n = [], [], 0
+        for x, ticket in pending:
+            if cur and n + ticket.size > cap:
+                groups.append(cur)
+                cur, n = [], 0
+            cur.append((x, ticket))
+            n += ticket.size
+        if cur:
+            groups.append(cur)
+        return groups
+
+    def _run_group(self, group) -> None:
+        """One batched infer over ``group``; on failure, bisect (multi-
+        ticket) or retry-then-quarantine (single ticket)."""
+        batch = group[0][0] if len(group) == 1 else np.concatenate(
+            [x for x, _ in group], axis=0)
+        t0 = self.clock()
         try:
             logits = self.server.infer(batch)
             jax.block_until_ready(logits)
-        except Exception:
-            # restore the queue so co-batched tickets are not orphaned by
-            # a transient infer failure (callers may retry the flush)
-            self._pending = pending + self._pending
-            self._count += batch.shape[0]
-            raise
+        except Exception as err:
+            self.health.record_failure()
+            if len(group) > 1:
+                # bisecting quarantine: O(log n) re-flushes isolate one
+                # poison request; healthy halves complete on their own
+                mid = len(group) // 2
+                self._run_group(group[:mid])
+                self._run_group(group[mid:])
+                return
+            self._retry_single(group[0], err)
+            return
+        self._resolve(group, logits, t0)
+
+    def _retry_single(self, item, err: Exception) -> None:
+        """Bounded backoff retries for an isolated ticket; quarantine on
+        an exhausted budget."""
+        x, ticket = item
+        budget = self.retry.max_retries if self.retry is not None else 0
+        for attempt in range(budget):
+            self.counters.retried += 1
+            self._sleep(self.retry.backoff(attempt))
+            t0 = self.clock()
+            try:
+                logits = self.server.infer(x)
+                jax.block_until_ready(logits)
+            except Exception as again:
+                self.health.record_failure()
+                err = again
+                continue
+            self._resolve([item], logits, t0)
+            return
+        poisoned = resilience.RequestPoisoned(
+            f"request of {ticket.size} image(s) failed alone after "
+            f"{budget} retries: {err}")
+        poisoned.__cause__ = err
+        ticket.error = poisoned
+        ticket.latency_s = self.clock() - ticket.t_submit
+        self.counters.quarantined += 1
+
+    def _resolve(self, group, logits, t0: float) -> None:
         done = self.clock()
         self.flushes += 1
+        self.health.record_flush(done - t0)
         off = 0
-        for x, ticket in pending:
+        for x, ticket in group:
             ticket.result = logits[off:off + x.shape[0]]
             ticket.latency_s = done - ticket.t_submit
             off += x.shape[0]
@@ -322,13 +529,16 @@ def run_request_stream(
     *,
     seed: int = 0,
     drain: bool = True,
+    deadline_s: Optional[float] = None,
 ) -> List[Ticket]:
     """Submit a stream of random requests of the given sizes; returns the
-    resolved tickets (drains the queue at the end)."""
+    tickets (drains the queue at the end, so every ticket is terminal —
+    resolved, shed, rejected or quarantined)."""
     rng = np.random.default_rng(seed)
     item = queue.server.item_shape
     tickets = [queue.submit(rng.uniform(0, 1, (int(n),) + item)
-                            .astype(np.float32)) for n in sizes]
+                            .astype(np.float32), deadline_s=deadline_s)
+               for n in sizes]
     if drain:
         queue.flush()
     return tickets
@@ -339,7 +549,13 @@ def _percentiles(latencies_ms: Sequence[float]) -> Tuple[float, float]:
             float(np.percentile(latencies_ms, 95)))
 
 
-def main() -> None:
+def _parse_args(argv: Optional[Sequence[str]] = None) -> argparse.Namespace:
+    """Parse + *loudly* validate CLI args (``argparse.ArgumentParser
+    .error`` -> exit 2).  Silent acceptance of a negative timeout, a
+    non-positive request count, or an unsorted/duplicate bucket ladder
+    used to produce confusing downstream behavior; every constraint now
+    fails at the CLI boundary with the offending value named.  The
+    validated bucket ladder is returned as ``args.bucket_ladder``."""
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true")
@@ -356,7 +572,8 @@ def main() -> None:
                     help="default: kernels when the encoding supports it, "
                          "else jnp")
     ap.add_argument("--buckets", default="1,8,32",
-                    help="comma-separated batch bucket ladder")
+                    help="comma-separated batch bucket ladder (strictly "
+                         "ascending positive ints)")
     ap.add_argument("--dataflow", default=None,
                     choices=["fused", "bitserial"],
                     help="in-kernel dataflow (kernels backend; default: "
@@ -365,11 +582,56 @@ def main() -> None:
     ap.add_argument("--max-request", type=int, default=8,
                     help="request sizes drawn uniformly from [1, this]")
     ap.add_argument("--timeout-ms", type=float, default=2.0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; expired tickets are shed "
+                         "with DeadlineExceeded (docs/serving.md)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission bound on pending images (default "
+                         "8 x max batch)")
+    ap.add_argument("--admission", default="reject",
+                    choices=sorted(ADMISSION_POLICIES),
+                    help="over-bound submits: reject with AdmissionError, "
+                         "or flush (synchronous backpressure)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="retry budget for an isolated failing request "
+                         "before quarantine")
     ap.add_argument("--data-parallel", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    buckets = tuple(int(b) for b in args.buckets.split(","))
+    if args.num_steps <= 0:
+        ap.error(f"--num-steps must be positive, got {args.num_steps}")
+    if args.requests <= 0:
+        ap.error(f"--requests must be positive, got {args.requests}")
+    if args.max_request <= 0:
+        ap.error(f"--max-request must be positive, got {args.max_request}")
+    if args.timeout_ms < 0:
+        ap.error(f"--timeout-ms must be >= 0, got {args.timeout_ms}")
+    if args.deadline_ms is not None and args.deadline_ms <= 0:
+        ap.error(f"--deadline-ms must be positive, got {args.deadline_ms}")
+    if args.max_pending is not None and args.max_pending < 1:
+        ap.error(f"--max-pending must be >= 1, got {args.max_pending}")
+    if args.retries < 0:
+        ap.error(f"--retries must be >= 0, got {args.retries}")
+    if args.data_parallel is not None and args.data_parallel < 1:
+        ap.error(
+            f"--data-parallel must be >= 1, got {args.data_parallel}")
+    try:
+        buckets = tuple(int(b) for b in args.buckets.split(","))
+    except ValueError:
+        ap.error(f"--buckets must be comma-separated ints, got "
+                 f"{args.buckets!r}")
+    if not buckets or any(b < 1 for b in buckets) or \
+            list(buckets) != sorted(set(buckets)):
+        ap.error("--buckets must be strictly ascending positive ints "
+                 f"(no duplicates), got {args.buckets!r}")
+    args.bucket_ladder = buckets
+    return args
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    args = _parse_args(argv)
+    buckets = args.bucket_ladder
     spec = make_encoding(args.encoding, args.num_steps,
                          periods=args.periods)
     backend = args.backend or ("kernels" if "kernels" in spec.backends
@@ -388,23 +650,34 @@ def main() -> None:
           f"{time.monotonic() - t0:.1f}s; "
           f"compiles={server.stats()['compiles']}")
 
-    queue = MicroBatchQueue(server, timeout_s=args.timeout_ms / 1e3)
+    queue = MicroBatchQueue(
+        server, timeout_s=args.timeout_ms / 1e3,
+        max_pending=args.max_pending, admission=args.admission,
+        default_deadline_s=None if args.deadline_ms is None
+        else args.deadline_ms / 1e3,
+        retry=resilience.RetryPolicy(max_retries=args.retries))
     rng = np.random.default_rng(args.seed)
     sizes = rng.integers(1, args.max_request + 1, args.requests)
     t0 = time.monotonic()
     tickets = run_request_stream(queue, sizes, seed=args.seed)
     wall = time.monotonic() - t0
-    lat = [t.latency_s * 1e3 for t in tickets]
-    p50, p95 = _percentiles(lat)
-    images = int(sum(t.size for t in tickets))
+    ok = [t for t in tickets if t.ok]
+    lat = [t.latency_s * 1e3 for t in ok]
+    p50, p95 = _percentiles(lat) if lat else (float("nan"), float("nan"))
+    images = int(sum(t.size for t in ok))
     stats = server.stats()
-    print(f"[serve_cnn] {len(tickets)} requests / {images} images in "
+    print(f"[serve_cnn] {len(tickets)} requests / {images} images served in "
           f"{wall:.2f}s -> {images / wall:.1f} img/s; "
           f"latency p50={p50:.1f}ms p95={p95:.1f}ms")
     print(f"[serve_cnn] cache: hits={stats['hits']} "
           f"compiles={stats['compiles']} (steady-state recompiles="
           f"{stats['compiles'] - len(server.exe.buckets)}) "
           f"padded_rows={stats['padded_rows']} flushes={queue.flushes}")
+    print(f"[serve_cnn] resilience: health={queue.health.state} "
+          f"rejected={stats['rejected']} shed={stats['shed']} "
+          f"retried={stats['retried']} quarantined={stats['quarantined']} "
+          f"degraded_flushes={stats['degraded_flushes']} "
+          f"failures={stats['failures']}")
 
 
 if __name__ == "__main__":

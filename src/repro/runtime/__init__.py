@@ -1,7 +1,32 @@
-"""Runtime fault tolerance: elastic re-sharding, stragglers, restart."""
+"""Runtime fault tolerance: elastic re-sharding, stragglers, restart,
+serving resilience (admission / deadlines / quarantine / chaos)."""
 
 from repro.runtime.straggler import StragglerMonitor
 from repro.runtime.elastic import reshard_checkpoint
 from repro.runtime.restart import RestartableRun
+from repro.runtime.resilience import (
+    AdmissionError,
+    ChaosServer,
+    DeadlineExceeded,
+    FaultPlan,
+    HealthMonitor,
+    RequestPoisoned,
+    ResilienceStats,
+    RetryPolicy,
+    ServeError,
+)
 
-__all__ = ["StragglerMonitor", "reshard_checkpoint", "RestartableRun"]
+__all__ = [
+    "StragglerMonitor",
+    "reshard_checkpoint",
+    "RestartableRun",
+    "ServeError",
+    "AdmissionError",
+    "DeadlineExceeded",
+    "RequestPoisoned",
+    "RetryPolicy",
+    "ResilienceStats",
+    "HealthMonitor",
+    "FaultPlan",
+    "ChaosServer",
+]

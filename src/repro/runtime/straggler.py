@@ -48,13 +48,20 @@ class StragglerMonitor:
         self.window.append(dt)
         return flagged
 
+    @staticmethod
+    def _median(xs: List[float]) -> float:
+        """True median of a sorted list (even n: mean of the middle two
+        — the upper-element shortcut biases the outlier threshold high)."""
+        n = len(xs)
+        mid = n // 2
+        return xs[mid] if n % 2 else 0.5 * (xs[mid - 1] + xs[mid])
+
     def _stats(self) -> Tuple[float, float]:
         if not self.window:
             return 0.0, 0.0
         xs = sorted(self.window)
-        n = len(xs)
-        med = xs[n // 2]
-        mad = sorted(abs(x - med) for x in xs)[n // 2]
+        med = self._median(xs)
+        mad = self._median(sorted(abs(x - med) for x in xs))
         return med, mad
 
     def is_outlier(self, dt: float) -> bool:

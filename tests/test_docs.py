@@ -44,6 +44,7 @@ def test_intra_repo_links_resolve(doc):
 
 def test_docs_exist():
     for p in (REPO / "docs" / "encodings.md", REPO / "docs" / "kernels.md",
+              REPO / "docs" / "serving.md",
               REPO / "README.md", REPO / "DESIGN.md"):
         assert p.exists(), p
 
@@ -68,6 +69,40 @@ def test_kernels_guide_matches_code_surface():
     for field in _dc.fields(KernelSchedule):
         assert f"`{field.name}`" in text, (
             f"docs/kernels.md schedule table is missing {field.name}")
+
+
+def test_serving_guide_is_cross_linked():
+    """docs/serving.md (the resilience guide) must be discoverable from
+    both the README and DESIGN.md §3, and is itself in DOC_FILES so its
+    intra-repo links are drift-checked."""
+    assert "docs/serving.md" in (REPO / "README.md").read_text()
+    assert "docs/serving.md" in (REPO / "DESIGN.md").read_text()
+    assert (REPO / "docs" / "serving.md") in DOC_FILES
+
+
+def test_serving_guide_matches_code_surface():
+    """The guide documents real symbols: every backticked ``src/...py``
+    path exists, the error taxonomy and ResilienceStats counters it
+    tabulates are the live ones, and the counters all surface through a
+    served model's stats()."""
+    text = (REPO / "docs" / "serving.md").read_text()
+    for rel in re.findall(r"`(src/[\w/]+\.py)`", text):
+        assert (REPO / rel).exists(), f"docs/serving.md names missing {rel}"
+    from repro.runtime import resilience
+    import dataclasses as _dc
+    for err in ("ServeError", "AdmissionError", "DeadlineExceeded",
+                "RequestPoisoned"):
+        assert hasattr(resilience, err), err
+        assert f"`{err}`" in text, (
+            f"docs/serving.md taxonomy table is missing {err}")
+    for field in _dc.fields(resilience.ResilienceStats):
+        assert f"`{field.name}`" in text, (
+            f"docs/serving.md counter list is missing {field.name}")
+    # the DESIGN.md failure-mode table names the same counters
+    design = (REPO / "DESIGN.md").read_text()
+    for field in _dc.fields(resilience.ResilienceStats):
+        assert f"`{field.name}`" in design, (
+            f"DESIGN.md failure-mode table is missing {field.name}")
 
 
 def test_support_matrix_matches_spec_declarations():

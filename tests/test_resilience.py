@@ -1,0 +1,451 @@
+"""Serving resilience under injected faults (DESIGN.md §3, docs/serving.md).
+
+The chaos suite (``chaos`` pytest marker, wired into the fast CI gate):
+a deterministic :class:`~repro.runtime.resilience.FaultPlan` injects
+fail-every-Nth-flush, permanent-poison (NaN image), latency-spike and
+shard-loss faults into ``CNNServer.infer`` through a
+:class:`~repro.runtime.resilience.ChaosServer` proxy, and the tests pin
+the recovery contract:
+
+* a poisoned request is quarantined in <= ceil(log2(batch)) + 1 extra
+  successful flushes while every healthy co-batched ticket resolves
+  bit-exact vs an un-faulted run,
+* transient faults are retried (bounded budget, exponential backoff) and
+  `retried` reconciles with the injected count,
+* latency spikes degrade health -> smaller flush groups -> recovery,
+* persistent trouble escalates to draining, which refuses admissions,
+* pending depth never exceeds the admission bound, and every ticket
+  reaches a terminal state (no dangling tickets, ever).
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import conversion
+from repro.launch import serve_cnn
+from repro.models import lenet
+from repro.runtime import resilience as rz
+from repro.runtime.restart import FaultInjected
+from repro.runtime.straggler import StragglerMonitor
+
+RNG = np.random.default_rng(11)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _noop(_dt):
+    return None
+
+
+@pytest.fixture(scope="module")
+def server():
+    static, params, input_hw = lenet.make(pool_mode="or", width_mult=0.25)
+    calib = jnp.asarray(RNG.uniform(0, 1, (4,) + input_hw), jnp.float32)
+    qnet = conversion.convert(static, params, calib, num_steps=4)
+    srv = serve_cnn.CNNServer(qnet, input_hw, buckets=(1, 4, 8, 32))
+    srv.warmup()
+    return srv
+
+
+def _req(server, n=1):
+    return RNG.uniform(0, 1, (n,) + server.item_shape).astype(np.float32)
+
+
+def _queue(server, clock, **kw):
+    kw.setdefault("timeout_s", 1e9)
+    kw.setdefault("max_batch", 32)
+    return serve_cnn.MicroBatchQueue(server, clock=clock,
+                                     sleep=clock.advance, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Policy objects.
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_backoff_and_validation():
+    p = rz.RetryPolicy(max_retries=3, backoff_s=0.01, backoff_mult=2.0)
+    assert [p.backoff(a) for a in range(3)] == pytest.approx(
+        [0.01, 0.02, 0.04])
+    with pytest.raises(ValueError, match="max_retries"):
+        rz.RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff"):
+        rz.RetryPolicy(backoff_mult=0.5)
+
+
+def test_error_taxonomy_is_serve_error():
+    for cls in (rz.AdmissionError, rz.DeadlineExceeded, rz.RequestPoisoned):
+        assert issubclass(cls, rz.ServeError)
+        assert issubclass(cls, RuntimeError)
+
+
+def test_health_monitor_state_machine():
+    mon = rz.HealthMonitor(StragglerMonitor(threshold=3.0, warmup=0),
+                           drain_after=2, recover_after=2)
+    assert mon.state == rz.HEALTHY and mon.accepting
+    for _ in range(4):
+        mon.record_flush(0.01)
+    assert mon.record_flush(1.0) == rz.DEGRADED          # straggler
+    assert mon.degraded and mon.accepting
+    mon.record_flush(0.01)
+    assert mon.record_flush(0.01) == rz.HEALTHY          # recover_after=2
+    mon.record_flush(1.0)
+    assert mon.record_failure() == rz.DRAINING           # 2 consecutive bad
+    assert not mon.accepting
+    mon.resume()
+    assert mon.state == rz.HEALTHY and mon.accepting
+
+
+def test_fault_plan_validation_and_counters():
+    with pytest.raises(ValueError, match="fail_every"):
+        rz.FaultPlan(fail_every=0)
+    plan = rz.FaultPlan(fail_every=2)
+    x = np.zeros((1, 2, 2, 1), np.float32)
+    plan.apply(x, _noop)                                 # call 1: clean
+    with pytest.raises(FaultInjected, match="transient"):
+        plan.apply(x, _noop)                             # call 2: injected
+    assert plan.injected["transient"] == 1 and plan.total_injected == 1
+
+
+# ---------------------------------------------------------------------------
+# Admission control + deadlines.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_admission_bound_never_exceeded(server):
+    before = dict(server.stats())
+    clock = FakeClock()
+    q = _queue(server, clock, max_batch=64, max_pending=8)
+    depths = []
+    tickets = []
+    for _ in range(14):
+        tickets.append(q.submit(_req(server)))
+        depths.append(q.pending_images)
+    assert max(depths) <= 8                      # bound held throughout
+    rejected = [t for t in tickets if isinstance(t.error, rz.AdmissionError)]
+    assert len(rejected) == 6                    # 14 submitted, 8 admitted
+    assert all(t.done for t in rejected)         # terminal, not dangling
+    q.flush()
+    assert all(t.done for t in tickets)
+    assert server.stats()["rejected"] - before["rejected"] == 6
+
+
+@pytest.mark.chaos
+def test_admission_flush_mode_applies_backpressure(server):
+    """admission='flush' drains synchronously instead of rejecting: all
+    tickets resolve, the bound still holds."""
+    before = dict(server.stats())
+    clock = FakeClock()
+    q = _queue(server, clock, max_batch=64, max_pending=4,
+               admission="flush")
+    tickets = [q.submit(_req(server)) for _ in range(10)]
+    q.flush()
+    assert all(t.ok for t in tickets)
+    assert server.stats()["rejected"] == before["rejected"]
+
+
+def test_oversized_request_rejected_even_when_empty(server):
+    clock = FakeClock()
+    q = _queue(server, clock, max_batch=64, max_pending=4)
+    t = q.submit(_req(server, 5))
+    assert isinstance(t.error, rz.AdmissionError)
+    assert q.pending_images == 0
+
+
+@pytest.mark.chaos
+def test_expired_deadline_sheds_before_flush(server):
+    before = dict(server.stats())
+    clock = FakeClock()
+    q = _queue(server, clock)
+    t_dead = q.submit(_req(server), deadline_s=0.005)
+    t_live = q.submit(_req(server))
+    clock.advance(0.010)
+    q.flush()
+    assert isinstance(t_dead.error, rz.DeadlineExceeded)
+    assert t_dead.done and not t_dead.ok
+    assert t_dead.latency_s == pytest.approx(0.010)
+    assert t_live.ok
+    assert server.stats()["shed"] - before["shed"] == 1
+
+
+def test_default_deadline_applies_to_all_submits(server):
+    clock = FakeClock()
+    q = _queue(server, clock, default_deadline_s=0.002)
+    t = q.submit(_req(server))
+    clock.advance(0.003)
+    q.poll()                                     # sheds the expired ticket
+    assert isinstance(t.error, rz.DeadlineExceeded)
+    assert q.pending_images == 0
+
+
+# ---------------------------------------------------------------------------
+# Bisecting quarantine: the poison-request acceptance drill.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_poison_request_quarantined_in_log_flushes_healthy_bit_exact(server):
+    """One permanently-poisoned request (NaN image) in a 32-request
+    stream: the poison resolves as RequestPoisoned in <=
+    ceil(log2(32)) + 1 extra successful flushes, every healthy ticket
+    resolves bit-exact vs an un-faulted run, and the counters reconcile
+    with the injected fault counts."""
+    before = dict(server.stats())
+    n, poison_at = 32, 11
+    reqs = [_req(server) for _ in range(n)]
+    reqs[poison_at][:] = np.nan
+    retry = rz.RetryPolicy(max_retries=1, backoff_s=0.001)
+
+    plan = rz.FaultPlan(poison_nan=True)
+    chaos = rz.ChaosServer(server, plan, delay=_noop)
+    clock = FakeClock()
+    q = _queue(chaos, clock, max_batch=n, retry=retry)
+    tickets = [q.submit(r) for r in reqs]        # nth submit fills -> flush
+    assert all(t.done for t in tickets)          # nothing dangles
+
+    poisoned = tickets[poison_at]
+    assert isinstance(poisoned.error, rz.RequestPoisoned)
+    assert isinstance(poisoned.error.__cause__, FaultInjected)
+    healthy = [t for i, t in enumerate(tickets) if i != poison_at]
+    assert all(t.ok for t in healthy)
+
+    # un-faulted twin: the same clean batch through the oracle
+    for i, (r, t) in enumerate(zip(reqs, tickets)):
+        if i == poison_at:
+            continue
+        ref = api.oracle(server.qnet, jnp.asarray(r), mode="packed")
+        np.testing.assert_array_equal(np.asarray(t.result), np.asarray(ref))
+
+    # an un-faulted run flushes once; quarantine costs at most
+    # ceil(log2(n)) + 1 extra successful flushes
+    assert q.flushes - 1 <= math.ceil(math.log2(n)) + 1
+    # total infer attempts: 1 root + 2 per bisect level + the retries
+    assert plan.calls <= 1 + 2 * math.ceil(math.log2(n)) + retry.max_retries
+
+    after = server.stats()
+    assert after["quarantined"] - before["quarantined"] == 1
+    assert after["retried"] - before["retried"] == retry.max_retries
+    # every injected poison fault is one failing attempt on the poison
+    # path: root + one per level + the leaf + its retries
+    assert plan.injected["poison"] == (
+        1 + math.ceil(math.log2(n)) + retry.max_retries)
+    assert plan.injected["transient"] == 0
+
+
+@pytest.mark.chaos
+def test_two_poison_requests_both_quarantined(server):
+    before = dict(server.stats())
+    n = 16
+    reqs = [_req(server) for _ in range(n)]
+    reqs[2][:] = np.nan
+    reqs[13][:] = np.nan
+    chaos = rz.ChaosServer(server, rz.FaultPlan(poison_nan=True),
+                           delay=_noop)
+    clock = FakeClock()
+    q = _queue(chaos, clock, max_batch=n,
+               retry=rz.RetryPolicy(max_retries=0))
+    tickets = [q.submit(r) for r in reqs]
+    assert all(t.done for t in tickets)
+    assert isinstance(tickets[2].error, rz.RequestPoisoned)
+    assert isinstance(tickets[13].error, rz.RequestPoisoned)
+    assert sum(t.ok for t in tickets) == n - 2
+    assert server.stats()["quarantined"] - before["quarantined"] == 2
+
+
+@pytest.mark.chaos
+def test_poison_never_splits_a_multi_image_request(server):
+    """Bisection works on ticket boundaries: a poisoned 3-image request
+    co-batched with healthy requests fails as ONE unit; the healthy
+    requests complete."""
+    reqs = [_req(server, 2), _req(server, 3), _req(server, 2)]
+    reqs[1][:] = np.nan
+    chaos = rz.ChaosServer(server, rz.FaultPlan(poison_nan=True),
+                           delay=_noop)
+    clock = FakeClock()
+    q = _queue(chaos, clock, retry=rz.RetryPolicy(max_retries=0))
+    tickets = [q.submit(r) for r in reqs]
+    q.flush()
+    assert tickets[0].ok and tickets[2].ok
+    assert isinstance(tickets[1].error, rz.RequestPoisoned)
+    assert tickets[1].size == 3
+
+
+# ---------------------------------------------------------------------------
+# Transient faults: fail-every-Nth flush.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_fail_every_nth_flush_all_tickets_recover(server):
+    """Every 3rd infer call fails transiently; single-ticket flushes are
+    retried (the call counter moves on, so the retry succeeds) and
+    `retried` reconciles exactly with the injected transient count."""
+    before = dict(server.stats())
+    plan = rz.FaultPlan(fail_every=3)
+    chaos = rz.ChaosServer(server, plan, delay=_noop)
+    clock = FakeClock()
+    q = _queue(chaos, clock, max_batch=1, timeout_s=0.0,
+               retry=rz.RetryPolicy(max_retries=2, backoff_s=0.0))
+    tickets = [q.submit(_req(server)) for _ in range(12)]
+    q.flush()
+    assert all(t.ok for t in tickets)
+    after = server.stats()
+    assert plan.injected["transient"] > 0
+    assert after["retried"] - before["retried"] == plan.injected["transient"]
+    assert after["quarantined"] == before["quarantined"]
+
+
+# ---------------------------------------------------------------------------
+# Health machine: latency spikes, shard loss, draining.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_latency_spike_degrades_then_recovers(server):
+    """Injected latency spikes flag the straggler window -> DEGRADED ->
+    smaller flush groups (degraded_flushes counts them) -> consecutive
+    clean flushes recover to HEALTHY."""
+    before = dict(server.stats())
+    clock = FakeClock()
+    plan = rz.FaultPlan(latency_every=5, latency_s=0.5,
+                        base_latency_s=0.01)
+    chaos = rz.ChaosServer(server, plan, delay=clock.advance)
+    health = rz.HealthMonitor(
+        StragglerMonitor(window=16, threshold=3.0, warmup=2),
+        drain_after=10, recover_after=2)
+    q = _queue(chaos, clock, max_batch=4, health=health,
+               degraded_max_batch=2)
+
+    def round_of_four():
+        # 4 single-image submits; the 4th fills max_batch -> one flush
+        return [q.submit(_req(server)) for _ in range(4)]
+
+    # 4 clean flushes prime the straggler window; the 5th call spikes
+    for _ in range(4):
+        assert all(t.ok for t in round_of_four())
+    assert health.state == rz.HEALTHY
+    spiked = round_of_four()
+    assert all(t.ok for t in spiked)               # slow, not failed
+    assert health.state == rz.DEGRADED
+    assert plan.injected["latency"] == 1
+
+    # degraded: the next 4-image flush runs as 2 groups of <= 2 images
+    assert all(t.ok for t in round_of_four())
+    assert server.stats()["degraded_flushes"] - before["degraded_flushes"] \
+        == 2
+    # those two clean sub-flushes satisfy recover_after=2
+    assert health.state == rz.HEALTHY
+
+
+@pytest.mark.chaos
+def test_shard_loss_served_through_degraded_small_batches(server):
+    """From the shard-loss point on, batches over the surviving capacity
+    fail; bisection still resolves the in-flight flush, the health
+    machine degrades, and follow-up traffic is served in small groups
+    without any quarantine."""
+    before = dict(server.stats())
+    plan = rz.FaultPlan(shard_loss_after=0, shard_rows=2)
+    chaos = rz.ChaosServer(server, plan, delay=_noop)
+    clock = FakeClock()
+    health = rz.HealthMonitor(
+        StragglerMonitor(window=16, threshold=4.0, warmup=2),
+        drain_after=10, recover_after=32)
+    q = _queue(chaos, clock, max_batch=8, health=health,
+               degraded_max_batch=2, retry=rz.RetryPolicy(max_retries=0))
+    first_wave = [q.submit(_req(server)) for _ in range(8)]
+    q.flush()
+    assert all(t.ok for t in first_wave)           # bisected down to pairs
+    assert health.state == rz.DEGRADED
+    assert plan.injected["shard"] > 0
+
+    second_wave = [q.submit(_req(server)) for _ in range(6)]
+    q.flush()
+    assert all(t.ok for t in second_wave)
+    after = server.stats()
+    assert after["degraded_flushes"] - before["degraded_flushes"] >= 3
+    assert after["quarantined"] == before["quarantined"]
+
+
+@pytest.mark.chaos
+def test_draining_refuses_admissions_until_resume(server):
+    before = dict(server.stats())
+    clock = FakeClock()
+    health = rz.HealthMonitor(drain_after=1, recover_after=1)
+    q = _queue(server, clock, health=health)
+    pending = q.submit(_req(server))
+    health.record_failure()                        # HEALTHY -> DRAINING
+    assert health.state == rz.DRAINING
+    refused = q.submit(_req(server))
+    assert isinstance(refused.error, rz.AdmissionError)
+    assert "draining" in str(refused.error)
+    q.flush()                                      # pending still drains
+    assert pending.ok
+    assert server.stats()["rejected"] - before["rejected"] == 1
+    health.resume()
+    accepted = q.submit(_req(server))
+    q.flush()
+    assert accepted.ok
+
+
+# ---------------------------------------------------------------------------
+# Engine plumbing: failed plan calls are counted.
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_failures_counter(server):
+    from repro.core import engine
+
+    def broken_compile(qnet, shape):
+        def plan(x):
+            raise RuntimeError("dead shard")
+        return plan
+
+    cache = engine.PlanCache((1, 4), method="jnp",
+                             compile_fn=broken_compile)
+    with pytest.raises(RuntimeError, match="dead shard"):
+        cache.run(server.qnet, jnp.zeros((2,) + server.item_shape))
+    assert cache.stats.failures == 1
+    assert cache.stats.executions == 0
+
+
+def test_executable_attach_stats_merges_provider(server):
+    assert server.stats()["rejected"] >= 0         # resilience attached
+    exe = server.exe
+    exe.attach_stats(lambda: {"custom_probe": 7})
+    try:
+        assert server.stats()["custom_probe"] == 7
+    finally:
+        exe._stat_providers.pop()
+
+
+# ---------------------------------------------------------------------------
+# Chaos through the stream driver (end-to-end shape of the bench).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_run_request_stream_under_chaos_resolves_everything(server):
+    plan = rz.FaultPlan(fail_every=4)
+    chaos = rz.ChaosServer(server, plan, delay=_noop)
+    clock = FakeClock()
+    q = _queue(chaos, clock, max_batch=4, timeout_s=0.0,
+               retry=rz.RetryPolicy(max_retries=2, backoff_s=0.0))
+    tickets = serve_cnn.run_request_stream(q, [1, 2, 1, 3, 1, 1, 2, 1],
+                                           seed=3)
+    assert all(t.done for t in tickets)
+    assert all(t.ok for t in tickets)              # transients all recover
+    assert q.pending_images == 0

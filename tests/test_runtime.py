@@ -120,6 +120,30 @@ def test_straggler_monitor_flags_outliers():
     assert mon.record(31, 1.0) is True
 
 
+def test_straggler_stats_true_even_median():
+    """Regression: even-length windows used the *upper* middle element
+    (``xs[n // 2]``) for both median and MAD, biasing the outlier
+    threshold high — a real straggler could hide under the inflated
+    median.  The true even-n median is the mean of the middle two."""
+    mon = StragglerMonitor(warmup=0)
+    for i, dt in enumerate((0.1, 0.2, 0.3, 0.4)):
+        mon.record(i, dt)
+    med, mad = mon._stats()
+    assert med == pytest.approx(0.25)          # not the biased 0.3
+    # deviations from 0.25: [0.15, 0.05, 0.05, 0.15] -> median 0.10
+    assert mad == pytest.approx(0.10)          # not the biased 0.15
+
+
+def test_straggler_even_window_catches_formerly_hidden_outlier():
+    """With the upper-element median (0.2 over window [0.1, 0.2]) and
+    MAD 0.1, a 0.55s step passed as healthy; the true median 0.15 /
+    MAD 0.05 flags it."""
+    mon = StragglerMonitor(threshold=4.0, warmup=0)
+    mon.record(0, 0.1)
+    mon.record(1, 0.2)
+    assert mon.is_outlier(0.55) is True
+
+
 def test_mitigation_escalates_and_promotes_spare():
     pol = MitigationPolicy(rebalance_after=2, evict_after=4)
     pol.register_spare("spare-1")

@@ -127,18 +127,76 @@ def test_queue_rejects_bad_shape_without_poisoning_batch(server):
     assert good.done and good.result.shape[0] == 2
 
 
-def test_queue_restores_pending_on_infer_failure(server, monkeypatch):
-    """A transient infer failure must not orphan co-batched tickets."""
-    q = serve_cnn.MicroBatchQueue(server, max_batch=16, timeout_s=1e9)
+def test_transient_infer_failure_recovers_in_flush(server, monkeypatch):
+    """A transient infer failure (one OOM) must not orphan co-batched
+    tickets: flush recovers internally (bisect + retry), FIFO order is
+    preserved across the recovery, no ticket is executed twice after it
+    resolves, and latency spans the ORIGINAL submit."""
+    before = dict(server.stats())
+    clock = FakeClock()
+    q = serve_cnn.MicroBatchQueue(server, max_batch=16, timeout_s=1e9,
+                                  clock=clock, sleep=clock.advance)
+    reqs = [_req(server, 2), _req(server, 3), _req(server, 1)]
+    tickets = [q.submit(r) for r in reqs]
+    real_infer = server.infer
+    calls, fails = [], {"left": 1}
+
+    def flaky(x):
+        calls.append(int(np.asarray(x).shape[0]))
+        if fails["left"]:
+            fails["left"] -= 1
+            raise RuntimeError("transient oom")
+        return real_infer(x)
+
+    monkeypatch.setattr(server, "infer", flaky)
+    clock.advance(0.010)                             # queue wait pre-fault
+    q.flush()
+    # full batch (6) failed once -> bisect: [t0] (2 rows) then [t1, t2]
+    # (4 rows) each succeed exactly once -> no duplicated execution
+    assert calls == [6, 2, 4]
+    assert all(t.ok for t in tickets)
+    # FIFO: each ticket's logits match its own request, in submit order
+    for r, t in zip(reqs, tickets):
+        ref = api.oracle(server.qnet, jnp.asarray(r), mode="packed")
+        np.testing.assert_array_equal(np.asarray(t.result), np.asarray(ref))
+    # latency spans the original submit (includes the pre-fault wait),
+    # and the recovery never touched the retry budget (bisect halves
+    # succeeded on their own)
+    assert all(t.latency_s >= 0.010 for t in tickets)
+    after = server.stats()
+    assert after["retried"] == before["retried"]
+    assert after["quarantined"] == before["quarantined"]
+
+
+def test_single_ticket_transient_fault_retries_with_backoff(server,
+                                                            monkeypatch):
+    """An isolated failing ticket burns the retry budget with exponential
+    backoff (driven through the injected sleep) and then succeeds —
+    `retried` counts attempts, latency spans the original submit."""
+    before = dict(server.stats())
+    clock = FakeClock()
+    retry = serve_cnn.resilience.RetryPolicy(max_retries=3, backoff_s=0.004,
+                                             backoff_mult=2.0)
+    q = serve_cnn.MicroBatchQueue(server, max_batch=16, timeout_s=1e9,
+                                  clock=clock, sleep=clock.advance,
+                                  retry=retry)
     t = q.submit(_req(server, 3))
-    monkeypatch.setattr(server, "infer",
-                        lambda x: (_ for _ in ()).throw(RuntimeError("oom")))
-    with pytest.raises(RuntimeError, match="oom"):
-        q.flush()
-    assert not t.done and q.pending_images == 3      # queue intact
-    monkeypatch.undo()
-    q.flush()                                        # retry succeeds
-    assert t.done and t.result.shape[0] == 3
+    real_infer = server.infer
+    fails = {"left": 2}
+
+    def flaky(x):
+        if fails["left"]:
+            fails["left"] -= 1
+            raise RuntimeError("transient oom")
+        return real_infer(x)
+
+    monkeypatch.setattr(server, "infer", flaky)
+    q.flush()
+    assert t.ok and t.result.shape[0] == 3
+    after = server.stats()
+    assert after["retried"] - before["retried"] == 2
+    # backoff slept 0.004 then 0.008 on the fake clock; latency spans it
+    assert t.latency_s == pytest.approx(0.012)
 
 
 def test_build_qnet_registry_archs():
@@ -172,3 +230,23 @@ def test_serve_bench_payload(tmp_path):
     assert arch["stream"]["steady_state_recompiles"] == 0
     assert arch["stream"]["images"] > 0
     assert payload["config"]["devices"] >= 1
+    # chaos section: fault rates in, recovery outcomes out, all reconciled
+    chaos = payload["chaos"]
+    assert chaos["arch"] == "lenet5"
+    names = [row["scenario"] for row in chaos["scenarios"]]
+    assert names == ["transient_fail_every_3", "poison_1_of_32",
+                     "latency_spike_every_5"]
+    for row in chaos["scenarios"]:
+        assert row["bit_exact_healthy"]
+        assert set(row["injected"]) == {"transient", "poison", "latency",
+                                        "shard"}
+        assert set(row["counters"]) == {"rejected", "shed", "retried",
+                                        "quarantined", "degraded_flushes",
+                                        "failures"}
+    transient, poison, latency = chaos["scenarios"]
+    assert transient["recovery_reconciles"]
+    assert transient["resolved_ok"] == transient["requests"]
+    assert poison["within_bound"]
+    assert poison["counters"]["quarantined"] == 1
+    assert poison["resolved_ok"] == poison["requests"] - 1
+    assert latency["degraded"] and latency["counters"]["degraded_flushes"] > 0
