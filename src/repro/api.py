@@ -230,7 +230,11 @@ class Executable:
         returning a dict merged into :meth:`stats` — so layers above the
         executable (e.g. the serving queue's resilience counters,
         DESIGN.md §3) surface through the one stats call.  Providers
-        merge in registration order; returns self for chaining."""
+        merge in registration order; a provider key that collides with a
+        core counter (e.g. ``failures``, ``hits``) or an earlier
+        provider's key makes :meth:`stats` raise ``ValueError`` instead
+        of silently shadowing the existing value.  Returns self for
+        chaining."""
         self._stat_providers.append(provider)
         return self
 
@@ -247,7 +251,14 @@ class Executable:
         d = self._cache.stats.as_dict()
         d.update(self._cache.plane_stats())
         for provider in self._stat_providers:
-            d.update(provider())
+            extra = provider()
+            clash = sorted(set(extra) & set(d))
+            if clash:
+                raise ValueError(
+                    f"attach_stats provider key(s) {clash} collide with "
+                    "existing stats keys; namespace provider keys "
+                    "instead of shadowing core counters")
+            d.update(extra)
         return d
 
     def traffic(self) -> dict:

@@ -275,9 +275,12 @@ class MicroBatchQueue:
       :class:`~repro.runtime.resilience.AdmissionError`) or, with
       ``admission="flush"``, the queue applies backpressure by flushing
       synchronously to make room first.
-    * **Deadlines** — a ticket whose deadline passed while queued is shed
-      (resolves with :class:`~repro.runtime.resilience.DeadlineExceeded`)
-      before it wastes a flush.
+    * **Deadlines** — a ticket whose deadline passed is shed (resolves
+      with :class:`~repro.runtime.resilience.DeadlineExceeded`) before
+      it wastes a flush, and again mid-recovery: the retry path checks
+      the deadline around every backoff, so an isolated failing ticket
+      never burns retry budget — or resolves — after its caller stopped
+      waiting.
     * **Bisecting quarantine** — a failing flush is split in half and the
       halves re-flushed, so one poisoned request is isolated in O(log n)
       re-flushes and fails alone (after a bounded
@@ -287,10 +290,13 @@ class MicroBatchQueue:
       :class:`~repro.runtime.resilience.RequestPoisoned`.
     * **Health machine** — per-flush latencies feed a
       :class:`~repro.runtime.resilience.HealthMonitor` (StragglerMonitor
-      median/MAD underneath).  Degraded serving flushes in groups of at
-      most ``degraded_max_batch`` images (a smaller bucket, which also
-      shards over fewer devices); draining refuses admissions until
-      ``health.resume()``.
+      median/MAD underneath).  A faulting flush group counts as exactly
+      *one* unhealthy sample, no matter how many bisection sub-flushes
+      and retries its recovery takes — one hostile request degrades the
+      server but cannot alone escalate it to draining.  Degraded serving
+      flushes in groups of at most ``degraded_max_batch`` images (a
+      smaller bucket, which also shards over fewer devices); draining
+      refuses admissions until ``health.resume()``.
 
     Single-threaded and event-driven: callers drive time via
     :meth:`submit` / :meth:`poll` (``clock`` and the backoff ``sleep``
@@ -397,18 +403,28 @@ class MicroBatchQueue:
         self.poll(now)
         return ticket
 
+    def _shed_if_expired(self, ticket: Ticket,
+                         now: Optional[float] = None) -> bool:
+        """Resolve ``ticket`` with ``DeadlineExceeded`` if its deadline
+        passed; True if shed.  Applied both while queued (pre-flush) and
+        mid-retry — a ticket must never burn backoff budget, or resolve,
+        after the caller has stopped waiting."""
+        now = self.clock() if now is None else now
+        if ticket.deadline is None or now < ticket.deadline:
+            return False
+        ticket.error = resilience.DeadlineExceeded(
+            f"deadline passed {now - ticket.deadline:.4f}s ago")
+        ticket.latency_s = now - ticket.t_submit
+        self.counters.shed += 1
+        return True
+
     def _shed_expired(self, now: float) -> None:
         """Resolve-and-drop every pending ticket whose deadline passed."""
         if all(t.deadline is None for _, t in self._pending):
             return
         kept = []
         for x, ticket in self._pending:
-            if ticket.deadline is not None and now >= ticket.deadline:
-                ticket.error = resilience.DeadlineExceeded(
-                    f"deadline passed {now - ticket.deadline:.4f}s before "
-                    "flush")
-                ticket.latency_s = now - ticket.t_submit
-                self.counters.shed += 1
+            if self._shed_if_expired(ticket, now):
                 self._count -= ticket.size
             else:
                 kept.append((x, ticket))
@@ -437,11 +453,15 @@ class MicroBatchQueue:
         pending, self._pending, self._count = self._pending, [], 0
         if self.health.degraded:
             groups = self._split(pending, self.degraded_max_batch)
-            self.counters.degraded_flushes += len(groups)
         else:
             groups = [pending]
         for group in groups:
-            self._run_group(group)
+            if self._run_group(group):
+                # one fault event = ONE unhealthy health sample, however
+                # many bisection sub-flushes and retries it took to
+                # isolate — a single poisoned request must degrade the
+                # server, never single-handedly drive it to draining
+                self.health.record_failure()
 
     @staticmethod
     def _split(pending, cap: int):
@@ -459,42 +479,52 @@ class MicroBatchQueue:
             groups.append(cur)
         return groups
 
-    def _run_group(self, group) -> None:
+    def _run_group(self, group) -> bool:
         """One batched infer over ``group``; on failure, bisect (multi-
-        ticket) or retry-then-quarantine (single ticket)."""
+        ticket) or retry-then-quarantine (single ticket).  Returns True
+        if any infer attempt in the subtree faulted — the *caller*
+        (``flush``) records at most one health failure per top-level
+        group, not one per bisection level or retry attempt."""
         batch = group[0][0] if len(group) == 1 else np.concatenate(
             [x for x, _ in group], axis=0)
+        if self.health.degraded:
+            self.counters.degraded_flushes += 1
         t0 = self.clock()
         try:
             logits = self.server.infer(batch)
             jax.block_until_ready(logits)
         except Exception as err:
-            self.health.record_failure()
             if len(group) > 1:
                 # bisecting quarantine: O(log n) re-flushes isolate one
                 # poison request; healthy halves complete on their own
                 mid = len(group) // 2
                 self._run_group(group[:mid])
                 self._run_group(group[mid:])
-                return
+                return True
             self._retry_single(group[0], err)
-            return
+            return True
         self._resolve(group, logits, t0)
+        return False
 
     def _retry_single(self, item, err: Exception) -> None:
-        """Bounded backoff retries for an isolated ticket; quarantine on
-        an exhausted budget."""
+        """Bounded backoff retries for an isolated ticket; shed the
+        moment the ticket's deadline passes (before *and* after each
+        backoff — a retry must not resolve work the caller stopped
+        waiting for), quarantine on an exhausted budget."""
         x, ticket = item
         budget = self.retry.max_retries if self.retry is not None else 0
         for attempt in range(budget):
+            if self._shed_if_expired(ticket):
+                return
             self.counters.retried += 1
             self._sleep(self.retry.backoff(attempt))
+            if self._shed_if_expired(ticket):
+                return
             t0 = self.clock()
             try:
                 logits = self.server.infer(x)
                 jax.block_until_ready(logits)
             except Exception as again:
-                self.health.record_failure()
                 err = again
                 continue
             self._resolve([item], logits, t0)

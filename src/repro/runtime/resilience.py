@@ -136,10 +136,13 @@ class ResilienceStats:
     counters."""
 
     rejected: int = 0          # submits refused by admission control
-    shed: int = 0              # tickets expired (deadline) before flush
+    shed: int = 0              # tickets expired (deadline): pre-flush
+    #                            in the queue, or mid-retry backoff
     retried: int = 0           # single-ticket retry attempts (backoff)
     quarantined: int = 0       # tickets resolved as RequestPoisoned
-    degraded_flushes: int = 0  # flush groups run under degraded health
+    degraded_flushes: int = 0  # flush groups *actually executed* while
+    #                            health was degraded (counted at infer
+    #                            time, incl. bisection sub-flushes)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -226,7 +229,14 @@ class HealthMonitor:
 
     def record_failure(self) -> str:
         """Feed one failed flush (an exception is an unhealthy sample,
-        whatever its wall time); returns the state."""
+        whatever its wall time); returns the state.
+
+        Callers must record at most ONE failure per originating flush:
+        the queue's bisecting quarantine turns a single fault event into
+        O(log n) failing sub-flushes plus retries, and counting each of
+        those as a consecutive unhealthy sample would let one poisoned
+        request march the streak straight to draining (which only an
+        operator ``resume()`` leaves)."""
         self._unhealthy()
         return self.state
 

@@ -267,6 +267,85 @@ def test_two_poison_requests_both_quarantined(server):
 
 
 @pytest.mark.chaos
+def test_poison_at_head_of_batch_server_stays_accepting(server):
+    """Regression: a poisoned request at index 0 of a batch used to
+    record a health failure at every bisection level AND every retry
+    attempt — ceil(log2 n) + max_retries *consecutive* unhealthy
+    samples from ONE fault event, which with the default drain_after=4
+    drove the monitor to DRAINING (recoverable only by an operator
+    ``resume()``).  One hostile request must never take the server out
+    of rotation: a faulting flush is exactly one unhealthy sample."""
+    before = dict(server.stats())
+    n = 8
+    reqs = [_req(server) for _ in range(n)]
+    reqs[0][:] = np.nan                          # poison leads the batch
+    chaos = rz.ChaosServer(server, rz.FaultPlan(poison_nan=True),
+                           delay=_noop)
+    clock = FakeClock()
+    q = _queue(chaos, clock, max_batch=n,
+               retry=rz.RetryPolicy(max_retries=2, backoff_s=0.001))
+    assert q.health.drain_after == 4             # the default that bit
+    tickets = [q.submit(r) for r in reqs]        # nth submit -> flush
+    assert isinstance(tickets[0].error, rz.RequestPoisoned)
+    assert all(t.ok for t in tickets[1:])
+    # one fault event == one unhealthy sample: degraded, NOT draining
+    assert q.health.state == rz.DEGRADED
+    assert q.health.accepting
+    follow_up = q.submit(_req(server))           # still in rotation
+    assert follow_up.error is None
+    q.flush()
+    assert follow_up.ok
+    assert server.stats()["quarantined"] - before["quarantined"] == 1
+
+
+@pytest.mark.chaos
+def test_retry_path_respects_deadline(server):
+    """A ticket that failed into the retry path is shed with
+    DeadlineExceeded the moment its deadline passes mid-backoff — it
+    must not burn the remaining retry budget (or resolve successfully)
+    after the caller stopped waiting."""
+    before = dict(server.stats())
+    clock = FakeClock()
+    chaos = rz.ChaosServer(server, rz.FaultPlan(poison_nan=True),
+                           delay=_noop)
+    q = _queue(chaos, clock,
+               retry=rz.RetryPolicy(max_retries=4, backoff_s=1.0,
+                                    backoff_mult=1.0))
+    r = _req(server)
+    r[:] = np.nan
+    t = q.submit(r, deadline_s=1.5)
+    q.flush()
+    assert isinstance(t.error, rz.DeadlineExceeded)
+    assert t.done and not t.ok
+    after = server.stats()
+    assert after["shed"] - before["shed"] == 1
+    assert after["quarantined"] == before["quarantined"]
+    # backoff began twice (t=0, t=1.0); the deadline check after the
+    # second backoff (t=2.0 >= 1.5) sheds before retries 3 and 4 burn
+    assert after["retried"] - before["retried"] == 2
+
+
+@pytest.mark.chaos
+def test_degraded_flushes_counts_executed_groups_only(server):
+    """degraded_flushes tallies groups *actually executed* under
+    degraded health: a healthy flush that fails and bisects contributes
+    nothing (regression: the counter used to be bumped per planned
+    group before anything ran)."""
+    before = dict(server.stats())
+    chaos = rz.ChaosServer(server, rz.FaultPlan(poison_nan=True),
+                           delay=_noop)
+    clock = FakeClock()
+    q = _queue(chaos, clock, retry=rz.RetryPolicy(max_retries=0))
+    reqs = [_req(server) for _ in range(4)]
+    reqs[0][:] = np.nan
+    tickets = [q.submit(r) for r in reqs]
+    q.flush()
+    assert isinstance(tickets[0].error, rz.RequestPoisoned)
+    assert all(t.ok for t in tickets[1:])
+    assert server.stats()["degraded_flushes"] == before["degraded_flushes"]
+
+
+@pytest.mark.chaos
 def test_poison_never_splits_a_multi_image_request(server):
     """Bisection works on ticket boundaries: a poisoned 3-image request
     co-batched with healthy requests fails as ONE unit; the healthy
@@ -428,6 +507,24 @@ def test_executable_attach_stats_merges_provider(server):
     exe.attach_stats(lambda: {"custom_probe": 7})
     try:
         assert server.stats()["custom_probe"] == 7
+    finally:
+        exe._stat_providers.pop()
+
+
+def test_executable_attach_stats_rejects_key_collision(server):
+    """A provider key shadowing a core PlanCache counter (or an earlier
+    provider's key) must fail loudly, not silently overwrite."""
+    exe = server.exe
+    exe.attach_stats(lambda: {"failures": 999})    # core counter name
+    try:
+        with pytest.raises(ValueError, match="failures.*collide"):
+            server.stats()
+    finally:
+        exe._stat_providers.pop()
+    exe.attach_stats(lambda: {"rejected": 1})      # resilience provider key
+    try:
+        with pytest.raises(ValueError, match="rejected.*collide"):
+            server.stats()
     finally:
         exe._stat_providers.pop()
 
