@@ -167,6 +167,7 @@ class Executable:
         dataflow: Optional[str],
         parallel: Optional[int],
         buckets: Sequence[int],
+        autotune: bool = False,
     ):
         self.qnet = qnet                     # strong ref: exe keeps net alive
         self.item_shape = tuple(int(d) for d in item_shape)
@@ -174,10 +175,11 @@ class Executable:
         self.backend = backend
         self.dataflow = dataflow
         self.parallel = parallel
+        self.autotune = bool(autotune)
         if backend == "kernels":
             self._cache = engine.PlanCache(
                 buckets, method=dataflow, data_parallel=parallel,
-                encoding=encoding)
+                encoding=encoding, autotune=autotune)
         else:
             spec = encoding
 
@@ -246,10 +248,22 @@ class Executable:
         sparsity-prepass counters ``plane_passes_skipped`` /
         ``plane_passes_total`` (all-zero spike planes the kernel plans
         early-exited or masked, DESIGN.md §8 — zeros on the jnp
-        backend, which has no plane schedule to skip), plus any dicts
-        from :meth:`attach_stats` providers."""
+        backend, which has no plane schedule to skip), plus an
+        ``autotune`` sub-dict — whether compile-time kernel sweeps were
+        ``enabled``, the winner-table counters (``hits`` / ``misses`` /
+        ``sweeps`` / ``disk_hits``), and one ``layers`` row per
+        (bucket, kernel layer) with the strategy each plan baked in
+        (docs/kernels.md §7) — plus any dicts from
+        :meth:`attach_stats` providers."""
+        from repro.kernels import autotune as autotune_mod
+
         d = self._cache.stats.as_dict()
         d.update(self._cache.plane_stats())
+        d["autotune"] = {
+            "enabled": self.autotune,
+            **autotune_mod.default_cache().stats.as_dict(),
+            "layers": self._cache.tuned_tiles(),
+        }
         for provider in self._stat_providers:
             extra = provider()
             clash = sorted(set(extra) & set(d))
@@ -330,6 +344,7 @@ class Accelerator:
         encoding: Optional[EncodingSpec] = None,
         parallel: Optional[int] = None,
         buckets: Optional[Sequence[int]] = None,
+        autotune: bool = False,
     ) -> Executable:
         """Compile ``qnet`` for deployment; returns an :class:`Executable`.
 
@@ -341,6 +356,16 @@ class Accelerator:
         gcd(bucket, devices)).  ``encoding`` overrides the net's stored
         spec (it must match the folded multiplier algebra — normally you
         pass the encoding to :func:`convert` once and never here).
+
+        ``autotune=True`` (kernels backend only) times the legal kernel
+        strategies per layer at plan-compile time — Pallas tile shapes,
+        MXU dot lowerings proven bit-exact by
+        :func:`repro.kernels.autotune.exact_lowering`, the
+        plane-parallel grid, and the jitted XLA twin — and bakes each
+        winner into the plan.  Winners persist in a process + on-disk
+        table (``$REPRO_AUTOTUNE_CACHE``), so only the first compile of
+        a problem shape pays the sweep; results are bit-identical either
+        way.  Inspect the choices via ``Executable.stats()["autotune"]``.
 
         Raises:
             ValueError: the encoding does not run on this backend (see
@@ -359,13 +384,18 @@ class Accelerator:
         dataflow = None
         if self.backend == "kernels":
             dataflow = spec.validate_dataflow(self.dataflow)
-        elif parallel is not None and parallel != 1:
-            raise ValueError(
-                "parallel (data-parallel bucket plans) requires "
-                "backend='kernels'")
+        else:
+            if parallel is not None and parallel != 1:
+                raise ValueError(
+                    "parallel (data-parallel bucket plans) requires "
+                    "backend='kernels'")
+            if autotune:
+                raise ValueError(
+                    "autotune sweeps kernel strategies and requires "
+                    "backend='kernels'")
         spec.validate_static(qnet.static)
         item = tuple(int(d) for d in input_spec)
         if buckets is None:
             buckets = engine.DEFAULT_BUCKETS
         return Executable(qnet, item, spec, self.backend, dataflow,
-                          parallel, buckets)
+                          parallel, buckets, autotune=autotune)

@@ -250,6 +250,11 @@ class CompiledPlan:
     _skipped: Optional[jax.Array] = dataclasses.field(default=None,
                                                       repr=False)
     _calls: int = dataclasses.field(default=0, repr=False)
+    tuned_tiles: List[dict] = dataclasses.field(default_factory=list)
+    """Per kernel layer: the resolved execution strategy — layer name +
+    the :class:`~repro.kernels.autotune.KernelConfig` fields (impl, MXU
+    dot lowering, tile shapes, plane-parallel flag) and whether it came
+    from an autotune sweep or is the untuned default."""
 
     def __call__(self, x: jax.Array) -> jax.Array:
         out, skipped = self._fn(self._params, x)
@@ -321,6 +326,7 @@ def _compile_plan_impl(
     method: Optional[str] = "fused",
     data_parallel: int = 1,
     spec: Optional[encoding.EncodingSpec] = None,
+    autotune: bool = False,
 ) -> CompiledPlan:
     """Compile ``qnet`` into a single jitted fused-epilogue kernel pipeline.
 
@@ -360,6 +366,20 @@ def _compile_plan_impl(
     axis (weights replicated, activations batch-sharded) — the serving
     stack's scale-out lever (DESIGN.md §3).  Bit-exact equal to the
     single-device plan.
+
+    ``autotune=True`` resolves each kernel layer's execution strategy
+    (:class:`~repro.kernels.autotune.KernelConfig`: Pallas tile shapes /
+    MXU dot lowering / plane-parallel grid, or the jitted XLA twin) by
+    timing the legal candidates on representative random activations at
+    plan-compile time — tuning cannot happen inside the jit trace, so it
+    runs eagerly here and the winning strategy is baked into the layer
+    closure.  Winners are cached per problem key (process + on-disk
+    table), so recompiles and other plans reuse them; the chosen
+    strategies surface as ``CompiledPlan.tuned_tiles`` →
+    ``Executable.stats()["autotune"]``.  Every candidate is bit-exact
+    (non-default dot lowerings are only legal when
+    ``autotune.exact_lowering`` proves them so), so this knob never
+    changes results.
     """
     spec = spec if spec is not None else qnet.spec
     method = spec.validate_dataflow(method)  # kernels-capable specs only
@@ -367,8 +387,10 @@ def _compile_plan_impl(
         raise ValueError(f"data_parallel must be >= 1, got {data_parallel}")
     if data_parallel > 1:
         return _data_parallel_plan(qnet, input_shape, method, data_parallel,
-                                   spec)
-    from repro.kernels import ops as kops          # deferred: optional path
+                                   spec, autotune=autotune)
+    from repro.kernels import autotune as autotune_mod   # deferred:
+    from repro.kernels import ops as kops                # optional path
+    from repro.kernels.autotune import KernelConfig
     from repro.kernels.radix_conv import radix_conv2d_pallas
     from repro.kernels.radix_matmul import radix_matmul_pallas
 
@@ -400,16 +422,37 @@ def _compile_plan_impl(
         raise ValueError(f"input_shape must be NHWC or NF, got {input_shape}")
     scatter: Optional[Tuple[int, int, int]] = None  # (spatial, c_real, c_pad)
 
-    mp, bm = kops._block(batch)
     rows = batch                   # current physical row count (batch dim)
     bits = T                       # integer bits carried by activations
     steps: List[Tuple[Callable, dict]] = []
     infos: List[PlanLayerInfo] = []
+    tuned: List[dict] = []
     n_layers = len(qnet.static)
     total_passes = 0               # static plane-pass budget (all layers)
+    tune_rng = np.random.default_rng(0)   # representative tuning inputs
 
     def _elems(shape) -> int:
         return int(np.prod(shape))
+
+    def _resolve_cfg(name, key_fn, cand_fn, build):
+        """One layer's execution strategy: a tuned winner (the sweep runs
+        HERE, eagerly — candidates cannot be timed inside the jit trace;
+        cached winners make recompiles instant) or the untuned default.
+        The choice is recorded in ``tuned_tiles`` either way."""
+        if autotune:
+            kcfg = autotune_mod.tune(key_fn(), cand_fn(), build)
+        else:
+            kcfg = KernelConfig()
+        tuned.append({"layer": name, "tuned": bool(autotune),
+                      **kcfg.as_dict()})
+        return kcfg
+
+    def _tune_sample(shape, nbits):
+        """Random packed levels standing in for this layer's activations
+        during the timing sweep (uniform over the level range — every
+        plane occupied, so sweeps don't overfit to sparsity luck)."""
+        dt = np.uint8 if nbits <= 8 else np.int32
+        return jnp.asarray(tune_rng.integers(0, 1 << nbits, shape, dtype=dt))
 
     def _occ(state, in_bits):
         """Plane-occupancy prepass (DESIGN.md §8): one bitwise-OR
@@ -431,33 +474,80 @@ def _compile_plan_impl(
                         kops.same_pads(w, kw, stride), (0, 0))
             hp = h + (pads[1][0] + pads[1][1] if pads else 0)
             wp = w + (pads[2][0] + pads[2][1] if pads else 0)
+            in_shape_phys = (batch, h, w, c_pad)   # this layer's input
+            in_bits = bits
             h = (hp - kh) // stride + 1
             w = (wp - kw) // stride + 1
-            cop, bco = kops._block(cout)
-            w_p = jnp.pad(qp["w_q"],
-                          ((0, 0), (0, 0), (0, c_pad - cin), (0, cop - cout)))
+            w_cin = jnp.pad(qp["w_q"],
+                            ((0, 0), (0, 0), (0, c_pad - cin), (0, 0)))
             last = qp["mult"] is None
-            if last:
-                p = {"w": w_p, "b": jnp.asarray(qp["b_int"], jnp.int32)}
+            name = f"conv{kh}x{kw}x{cin}->{cout}" + (f"/s{stride}"
+                                                     if stride > 1 else "")
 
-                def apply(state, p, *, pads=pads, stride=stride, bco=bco,
-                          in_bits=bits, cout=cout):
-                    if pads is not None:
-                        state = jnp.pad(state, pads)
-                    occ, skipped = _occ(state, in_bits)
-                    acc = radix_conv2d_pallas(
-                        state, p["w"], num_steps=in_bits, method=method,
-                        bco=bco, stride=stride, interpret=interp,
-                        periods=periods, occupancy=occ,
-                    )[..., :cout]
-                    return acc + p["b"], skipped
-            else:
+            def build_conv(kcfg, *, pads=pads, stride=stride, in_bits=in_bits,
+                           cout=cout, w_cin=w_cin, qp=qp, last=last):
+                """(out_channels, params, apply) for one conv strategy.
+
+                The XLA twin keeps out-channels unpadded (the backend
+                compiler needs no alignment — downstream layers fold
+                whatever physical channel count they're handed); the
+                Pallas path pads to the config's bco multiple."""
+                if kcfg.impl == "xla":
+                    if last:
+                        p = {"w": w_cin,
+                             "b": jnp.asarray(qp["b_int"], jnp.int32)}
+
+                        def apply(state, p, *, kcfg=kcfg):
+                            if pads is not None:
+                                state = jnp.pad(state, pads)
+                            occ, skipped = _occ(state, in_bits)
+                            acc = kops._xla_conv2d(
+                                state, p["w"], None, None, occ,
+                                num_steps=in_bits, method=method,
+                                stride=stride, periods=periods,
+                                mxu_dtype=kcfg.mxu_dtype)
+                            return acc + p["b"], skipped
+                        return cout, p, apply
+                    bias_row, mult_row = kops.epilogue_rows(
+                        qp["b_int"], qp["mult"], cout, cout, encoding=spec)
+                    p = {"w": w_cin, "bias": bias_row, "mult": mult_row}
+
+                    def apply(state, p, *, kcfg=kcfg):
+                        if pads is not None:
+                            state = jnp.pad(state, pads)
+                        occ, skipped = _occ(state, in_bits)
+                        return kops._xla_conv2d(
+                            state, p["w"], p["bias"], p["mult"], occ,
+                            num_steps=in_bits, method=method, stride=stride,
+                            periods=periods, mxu_dtype=kcfg.mxu_dtype,
+                            out_level=sched.out_level,
+                            out_grid=out_grid), skipped
+                    return cout, p, apply
+
+                cop, bco = kops._block(cout, pref=kcfg.bco)
+                w_p = jnp.pad(w_cin, ((0, 0), (0, 0), (0, 0),
+                                      (0, cop - cout)))
+                pp = kcfg.plane_parallel and method == "bitserial"
+                if last:
+                    p = {"w": w_p, "b": jnp.asarray(qp["b_int"], jnp.int32)}
+
+                    def apply(state, p, *, bco=bco, kcfg=kcfg, pp=pp):
+                        if pads is not None:
+                            state = jnp.pad(state, pads)
+                        occ, skipped = _occ(state, in_bits)
+                        acc = radix_conv2d_pallas(
+                            state, p["w"], num_steps=in_bits, method=method,
+                            bco=bco, stride=stride, interpret=interp,
+                            periods=periods, occupancy=occ,
+                            mxu_dtype=kcfg.mxu_dtype, plane_parallel=pp,
+                        )[..., :cout]
+                        return acc + p["b"], skipped
+                    return cop, p, apply
                 bias_row, mult_row = kops.epilogue_rows(
                     qp["b_int"], qp["mult"], cout, cop, encoding=spec)
                 p = {"w": w_p, "bias": bias_row, "mult": mult_row}
 
-                def apply(state, p, *, pads=pads, stride=stride, bco=bco,
-                          in_bits=bits):
+                def apply(state, p, *, bco=bco, kcfg=kcfg, pp=pp):
                     if pads is not None:
                         state = jnp.pad(state, pads)
                     occ, skipped = _occ(state, in_bits)
@@ -466,15 +556,36 @@ def _compile_plan_impl(
                         bco=bco, stride=stride, interpret=interp,
                         periods=periods, occupancy=occ,
                         bias=p["bias"], mult=p["mult"], out_steps=T,
-                        out_level=sched.out_level,
-                        out_grid=out_grid), skipped
+                        out_level=sched.out_level, out_grid=out_grid,
+                        mxu_dtype=kcfg.mxu_dtype, plane_parallel=pp,
+                    ), skipped
+                return cop, p, apply
+
+            layer_sched = encoding.KernelSchedule(
+                packed_bits=in_bits, periods=periods, out_grid=out_grid)
+            sample = _tune_sample(in_shape_phys, in_bits) if autotune \
+                else None
+
+            def _build_thunk(c, *, build_conv=build_conv, sample=sample):
+                _, p_c, a_c = build_conv(c)
+                return lambda: a_c(sample, p_c)[0]
+
+            kcfg = _resolve_cfg(
+                name,
+                lambda hp=hp, wp=wp, c_pad=c_pad: autotune_mod.conv_key(
+                    hp, wp, c_pad, kh, kw, cout, stride, layer_sched,
+                    method, batch=batch, epilogue=not last, sparsity=True),
+                lambda hp=hp, wp=wp, c_pad=c_pad: autotune_mod.conv_candidates(
+                    hp, wp, c_pad, kh, kw, cout, layer_sched, method,
+                    interpret=interp, act_dtypes=("u8",)),
+                _build_thunk)
+            cop, p, apply = build_conv(kcfg)
 
             total_passes += bits * periods
             steps.append((apply, p))
             out_shape = (batch, h, w, cout)
             infos.append(PlanLayerInfo(
-                name=f"conv{kh}x{kw}x{cin}->{cout}" + (f"/s{stride}"
-                                                       if stride > 1 else ""),
+                name=name,
                 out_shape=out_shape,
                 out_dtype="int32" if last else "uint8",
                 act_write_bytes=_elems(out_shape) * (4 if last else 1),
@@ -498,35 +609,74 @@ def _compile_plan_impl(
                 scatter = None
             elif f_pad > fin:
                 w_q = jnp.pad(w_q, ((0, f_pad - fin), (0, 0)))
-            kp, bk = kops._block(f_pad)
-            if kp > f_pad:
-                w_q = jnp.pad(w_q, ((0, kp - f_pad), (0, 0)))
-            np_, bn = kops._block(fout)
-            w_p = jnp.pad(w_q, ((0, 0), (0, np_ - fout)))
-            row_pad = mp - rows
-            col_pad = kp - f_pad
             last = qp["mult"] is None
-            if last:
-                p = {"w": w_p, "b": jnp.asarray(qp["b_int"], jnp.int32)}
+            in_bits = bits
+            name = f"linear{fin}->{fout}"
 
-                def apply(state, p, *, bk=bk, bn=bn, in_bits=bits,
-                          row_pad=row_pad, col_pad=col_pad, fout=fout):
-                    if row_pad or col_pad:
-                        state = jnp.pad(state, ((0, row_pad), (0, col_pad)))
-                    occ, skipped = _occ(state, in_bits)
-                    acc = radix_matmul_pallas(
-                        state, p["w"], num_steps=in_bits, method=method,
-                        bm=bm, bk=bk, bn=bn, interpret=interp,
-                        periods=periods, occupancy=occ,
-                    )[:batch, :fout]
-                    return acc + p["b"], skipped
-            else:
+            def build_linear(kcfg, *, w_q=w_q, qp=qp, last=last,
+                             in_bits=in_bits, fout=fout, rows=rows,
+                             f_pad=f_pad):
+                """(padded_fout, padded_rows, params, apply) for one
+                strategy.  XLA keeps everything unpadded; Pallas pads
+                rows/contraction/output to the config's tile multiples."""
+                if kcfg.impl == "xla":
+                    if last:
+                        p = {"w": w_q,
+                             "b": jnp.asarray(qp["b_int"], jnp.int32)}
+
+                        def apply(state, p, *, kcfg=kcfg):
+                            occ, skipped = _occ(state, in_bits)
+                            acc = kops._xla_matmul(
+                                state, p["w"], None, None, occ,
+                                num_steps=in_bits, method=method,
+                                periods=periods,
+                                mxu_dtype=kcfg.mxu_dtype)[:batch]
+                            return acc + p["b"], skipped
+                        return fout, rows, p, apply
+                    bias_row, mult_row = kops.epilogue_rows(
+                        qp["b_int"], qp["mult"], fout, fout, encoding=spec)
+                    p = {"w": w_q, "bias": bias_row, "mult": mult_row}
+
+                    def apply(state, p, *, kcfg=kcfg):
+                        occ, skipped = _occ(state, in_bits)
+                        return kops._xla_matmul(
+                            state, p["w"], p["bias"], p["mult"], occ,
+                            num_steps=in_bits, method=method,
+                            periods=periods, mxu_dtype=kcfg.mxu_dtype,
+                            out_level=sched.out_level,
+                            out_grid=out_grid), skipped
+                    return fout, rows, p, apply
+
+                mp, bm = kops._block(rows, pref=kcfg.bm)
+                kp, bk = kops._block(f_pad, pref=kcfg.bk)
+                np_, bn = kops._block(fout, pref=kcfg.bn)
+                w_p = jnp.pad(w_q, ((0, kp - f_pad), (0, np_ - fout)))
+                row_pad = mp - rows
+                col_pad = kp - f_pad
+                pp = kcfg.plane_parallel and method == "bitserial"
+                if last:
+                    p = {"w": w_p, "b": jnp.asarray(qp["b_int"], jnp.int32)}
+
+                    def apply(state, p, *, bm=bm, bk=bk, bn=bn, pp=pp,
+                              row_pad=row_pad, col_pad=col_pad, kcfg=kcfg):
+                        if row_pad or col_pad:
+                            state = jnp.pad(state,
+                                            ((0, row_pad), (0, col_pad)))
+                        occ, skipped = _occ(state, in_bits)
+                        acc = radix_matmul_pallas(
+                            state, p["w"], num_steps=in_bits, method=method,
+                            bm=bm, bk=bk, bn=bn, interpret=interp,
+                            periods=periods, occupancy=occ,
+                            mxu_dtype=kcfg.mxu_dtype, plane_parallel=pp,
+                        )[:batch, :fout]
+                        return acc + p["b"], skipped
+                    return np_, mp, p, apply
                 bias_row, mult_row = kops.epilogue_rows(
                     qp["b_int"], qp["mult"], fout, np_, encoding=spec)
                 p = {"w": w_p, "bias": bias_row, "mult": mult_row}
 
-                def apply(state, p, *, bk=bk, bn=bn, in_bits=bits,
-                          row_pad=row_pad, col_pad=col_pad):
+                def apply(state, p, *, bm=bm, bk=bk, bn=bn, pp=pp,
+                          row_pad=row_pad, col_pad=col_pad, kcfg=kcfg):
                     if row_pad or col_pad:
                         state = jnp.pad(state, ((0, row_pad), (0, col_pad)))
                     occ, skipped = _occ(state, in_bits)
@@ -535,14 +685,36 @@ def _compile_plan_impl(
                         bm=bm, bk=bk, bn=bn, interpret=interp,
                         periods=periods, occupancy=occ,
                         bias=p["bias"], mult=p["mult"], out_steps=T,
-                        out_level=sched.out_level,
-                        out_grid=out_grid), skipped
+                        out_level=sched.out_level, out_grid=out_grid,
+                        mxu_dtype=kcfg.mxu_dtype, plane_parallel=pp,
+                    ), skipped
+                return np_, mp, p, apply
+
+            layer_sched = encoding.KernelSchedule(
+                packed_bits=in_bits, periods=periods, out_grid=out_grid)
+            sample = _tune_sample((rows, f_pad), in_bits) if autotune \
+                else None
+
+            def _build_thunk(c, *, build_linear=build_linear, sample=sample):
+                _, _, p_c, a_c = build_linear(c)
+                return lambda: a_c(sample, p_c)[0]
+
+            kcfg = _resolve_cfg(
+                name,
+                lambda rows=rows, f_pad=f_pad: autotune_mod.matmul_key(
+                    rows, f_pad, fout, layer_sched, method,
+                    epilogue=not last, sparsity=True),
+                lambda rows=rows, f_pad=f_pad: autotune_mod.matmul_candidates(
+                    rows, f_pad, fout, layer_sched, method,
+                    interpret=interp, act_dtypes=("u8",)),
+                _build_thunk)
+            np_, mp, p, apply = build_linear(kcfg)
 
             total_passes += bits * periods
             steps.append((apply, p))
             out_shape = (batch, fout)
             infos.append(PlanLayerInfo(
-                name=f"linear{fin}->{fout}",
+                name=name,
                 out_shape=out_shape,
                 out_dtype="int32" if last else "uint8",
                 act_write_bytes=_elems(out_shape) * (4 if last else 1),
@@ -615,6 +787,7 @@ def _compile_plan_impl(
         _fn=jax.jit(forward),
         _params=params,
         plane_passes_per_call=total_passes,
+        tuned_tiles=tuned,
     )
 
 
@@ -660,7 +833,8 @@ def _cached_plan(qnet, input_shape, method) -> CompiledPlan:
     return plan
 
 
-def _data_parallel_plan(qnet, input_shape, method, data_parallel, spec=None):
+def _data_parallel_plan(qnet, input_shape, method, data_parallel, spec=None,
+                        autotune=False):
     """shard_map a per-device plan over the batch axis (DESIGN.md §3)."""
     from jax.sharding import PartitionSpec as P
 
@@ -674,7 +848,7 @@ def _data_parallel_plan(qnet, input_shape, method, data_parallel, spec=None):
             f"data_parallel={data_parallel} exceeds {ndev} visible devices")
     inner = _compile_plan_impl(
         qnet, (batch // data_parallel,) + tuple(input_shape[1:]),
-        method=method, spec=spec)
+        method=method, spec=spec, autotune=autotune)
     mesh = compat.make_mesh((data_parallel,), ("batch",))
     # weights replicated, input/output sharded along batch (the logits AND
     # the per-shard skip counters — each shard ran its own prepass); no
@@ -699,6 +873,7 @@ def _data_parallel_plan(qnet, input_shape, method, data_parallel, spec=None):
         _params=inner._params,
         data_parallel=data_parallel,
         plane_passes_per_call=inner.plane_passes_per_call * data_parallel,
+        tuned_tiles=inner.tuned_tiles,
     )
 
 
@@ -759,6 +934,7 @@ class PlanCache:
         data_parallel: Optional[int] = None,
         encoding: Optional["encoding.EncodingSpec"] = None,
         compile_fn: Optional[Callable] = None,
+        autotune: bool = False,
     ):
         bs = tuple(sorted({int(b) for b in buckets}))
         if not bs or bs[0] < 1:
@@ -776,6 +952,7 @@ class PlanCache:
         # (per-bucket jitted closures share the bucketing/chunking/stats
         # machinery with kernel plans).
         self._compile_fn = compile_fn
+        self.autotune = bool(autotune)   # sweep kernel configs at compile
         self.stats = PlanCacheStats()
         self._plans: dict = {}   # key -> (weakref(qnet), plan callable)
 
@@ -812,6 +989,18 @@ class PlanCache:
                     out[k] += v
         return out
 
+    def tuned_tiles(self) -> List[dict]:
+        """Per-layer kernel strategies of every live cached plan, one row
+        per (bucket, layer): the layer name, whether a timed sweep picked
+        the strategy (``tuned``) or it is the untuned default, and the
+        winning :class:`~repro.kernels.autotune.KernelConfig` fields.
+        Empty for jnp-backend closures (no kernel strategies to pick)."""
+        out: List[dict] = []
+        for key, (_, plan) in self._plans.items():
+            for row in getattr(plan, "tuned_tiles", None) or []:
+                out.append({"bucket": key[1], **row})
+        return out
+
     def _shards_for(self, bucket: int) -> int:
         avail = len(jax.devices())
         want = avail if self.data_parallel is None else min(
@@ -835,7 +1024,7 @@ class PlanCache:
             plan = _compile_plan_impl(
                 qnet, shape, method=self.method,
                 data_parallel=self._shards_for(int(bucket)),
-                spec=self.encoding)
+                spec=self.encoding, autotune=self.autotune)
         self._plans[key] = (weakref.ref(qnet), plan)
         self.stats.compiles += 1
         return plan

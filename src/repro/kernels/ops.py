@@ -17,6 +17,15 @@ tests/test_fused_epilogue.py sweep shapes, T, strides, methods).
 docs/kernels.md): one bitwise-OR reduction finds bit planes no activation
 spikes on, and the kernels skip (bitserial) or mask (fused) them —
 bit-exact, and where TTFS's one-spike trains pay off.
+
+Autotuning (docs/kernels.md §7): ``autotune=True`` resolves an execution
+strategy (:class:`~repro.kernels.autotune.KernelConfig` — Pallas tile
+shapes + MXU dot lowering + plane-parallel grid, or the jitted XLA twin
+of the same plane-pass math) by timing the legal candidates on the actual
+inputs and caching the winner per ``(shape, schedule, dataflow, backend)``
+in the process + on-disk table.  ``config=`` pins an explicit strategy.
+Every strategy is bit-exact — non-default dot lowerings are only ever
+candidates when ``autotune.exact_lowering`` proves them so.
 """
 
 from __future__ import annotations
@@ -28,11 +37,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.encoding import EncodingSpec, KernelSchedule
+from repro.kernels import autotune as autotune_mod
+from repro.kernels.autotune import KernelConfig
 from repro.kernels.radix_conv import radix_conv2d_pallas
-from repro.kernels.radix_matmul import OCC_LANES, radix_matmul_pallas
+from repro.kernels.radix_matmul import (
+    OCC_LANES,
+    _project_levels,
+    gated,
+    mxu_dot,
+    occ_mask,
+    radix_matmul_pallas,
+)
 from repro.kernels.spike_encode import spike_encode_pallas
 
 __all__ = [
+    "KernelConfig",
     "radix_matmul",
     "radix_conv2d",
     "radix_encode",
@@ -139,6 +158,202 @@ def epilogue_rows(
     return bias, mrow
 
 
+# ---------------------------------------------------------------------------
+# XLA strategy twins: the same plane-pass math as the Pallas kernels
+# (same occupancy gating, same fused epilogue floats -> bit-exact against
+# the same oracles), but expressed as plain jitted XLA ops so the backend
+# compiler picks the blocking.  On CPU — where Pallas runs in interpret
+# mode and every grid step is Python overhead — this twin with
+# ``mxu_dtype="f32"`` is what actually closes the gap to dense; the
+# autotuner discovers that rather than hard-coding it.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_steps", "method", "periods", "mxu_dtype",
+                     "out_level", "out_grid", "acc_dtype"))
+def _xla_matmul(x2, w2, bias, mult, occ, *, num_steps, method, periods=1,
+                mxu_dtype="int32", out_level=None, out_grid="dense",
+                acc_dtype="int32"):
+    """Jitted XLA twin of ``radix_matmul_pallas`` (unpadded shapes)."""
+    # ``mxu_dot`` lowers both operands itself, so the packed input and the
+    # weight go in untouched on the fused path: under ``mxu_dtype="f32"``
+    # the activation converts uint8 -> f32 directly (no int32 detour) and
+    # a weight captured as a jit constant converts once at compile time —
+    # that is what holds this twin at dense-GEMM speed.  The bit algebra
+    # (occupancy masks, plane shifts) still needs an integer view.
+    w = w2
+    occ_row = occ[0] if occ is not None else None
+    if method == "fused":
+        x = x2
+        if occ_row is not None:
+            x = x.astype(jnp.int32) & occ_mask(occ_row, num_steps)
+        acc = mxu_dot(x, w, mxu_dtype, acc_dtype)
+    else:
+        x = x2.astype(jnp.int32)
+        zero = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+
+        def plane(shift):
+            p = (x >> shift) & 1
+            return gated(occ_row, shift, lambda: mxu_dot(p, w, mxu_dtype),
+                         zero)
+
+        acc = zero
+        if periods == 1:
+            for t in range(num_steps):        # the paper's Horner schedule
+                acc = (acc << 1) + plane(num_steps - 1 - t)
+        else:
+            for t in range(num_steps * periods):
+                shift = num_steps - 1 - (t % num_steps)
+                acc = acc + (plane(shift) << shift)
+            acc = acc // periods
+    if mult is None:
+        return acc
+    q = jnp.floor((acc + bias).astype(jnp.float32) * mult)
+    return _project_levels(q, out_level=out_level, out_grid=out_grid)
+
+
+def _conv_lowered(p, w, stride, mxu_dtype, acc_dtype="int32"):
+    """One plane/packed conv under the selected lowering.  int32 out,
+    except ``acc_dtype="f32"`` (the f32 boundary layout) keeps the
+    exact-integer f32 accumulator — same contract as ``mxu_dot``."""
+    if mxu_dtype == "int8":
+        p, w, pet = p.astype(jnp.int8), w.astype(jnp.int8), jnp.int32
+    elif mxu_dtype == "f32":
+        p, w, pet = (p.astype(jnp.float32), w.astype(jnp.float32),
+                     jnp.float32)
+    else:
+        p, w, pet = p.astype(jnp.int32), w.astype(jnp.int32), jnp.int32
+    out = jax.lax.conv_general_dilated(
+        p, w, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=pet)
+    if acc_dtype == "f32" and mxu_dtype == "f32":
+        return out
+    return out.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_steps", "method", "stride", "periods", "mxu_dtype",
+                     "out_level", "out_grid", "acc_dtype"))
+def _xla_conv2d(x_q, w_q, bias, mult, occ, *, num_steps, method, stride=1,
+                periods=1, mxu_dtype="int32", out_level=None,
+                out_grid="dense", acc_dtype="int32"):
+    """Jitted XLA twin of ``radix_conv2d_pallas`` (VALID, pre-padded)."""
+    # same operand-lowering contract as ``_xla_matmul``: ``_conv_lowered``
+    # casts per ``mxu_dtype``; only the bit algebra needs integer views
+    w = w_q
+    occ_row = occ[0] if occ is not None else None
+    if method == "fused":
+        x = x_q
+        if occ_row is not None:
+            x = x.astype(jnp.int32) & occ_mask(occ_row, num_steps)
+        acc = _conv_lowered(x, w, stride, mxu_dtype, acc_dtype)
+    else:
+        x = x_q.astype(jnp.int32)
+        h_out = (x.shape[1] - w.shape[0]) // stride + 1
+        w_out = (x.shape[2] - w.shape[1]) // stride + 1
+        zero = jnp.zeros((x.shape[0], h_out, w_out, w.shape[3]), jnp.int32)
+
+        def plane(shift):
+            p = (x >> shift) & 1
+            return gated(occ_row, shift,
+                         lambda: _conv_lowered(p, w, stride, mxu_dtype),
+                         zero)
+
+        acc = zero
+        if periods == 1:
+            for t in range(num_steps):        # the paper's Horner schedule
+                acc = (acc << 1) + plane(num_steps - 1 - t)
+        else:
+            for t in range(num_steps * periods):
+                shift = num_steps - 1 - (t % num_steps)
+                acc = acc + (plane(shift) << shift)
+            acc = acc // periods
+    if mult is None:
+        return acc
+    q = jnp.floor((acc + bias).astype(jnp.float32) * mult)
+    return _project_levels(q, out_level=out_level, out_grid=out_grid)
+
+
+# ---------------------------------------------------------------------------
+# Strategy execution + autotune resolution.
+# ---------------------------------------------------------------------------
+
+
+def _resolve_config(config, autotune, sample, key_fn, cand_fn, build_fn):
+    """Pick the strategy for one call: explicit ``config`` wins; else a
+    tuned winner when ``autotune`` (sweeping only outside a jit trace —
+    inside one, fall back to the already-cached winner or the default);
+    else the untuned default."""
+    if config is not None:
+        return config
+    if not autotune:
+        return KernelConfig()
+    if isinstance(sample, jax.core.Tracer):
+        return autotune_mod.default_cache().get(key_fn()) or KernelConfig()
+    return autotune_mod.tune(key_fn(), cand_fn(), build_fn)
+
+
+def _matmul_with_config(cfg, x2, w_q, b_int, mult, sched, spec, method,
+                        sparsity):
+    """Execute one matmul strategy on (m, k) x (k, n) unpadded inputs."""
+    num_steps, periods = sched.packed_bits, sched.periods
+    m, k = x2.shape
+    n = w_q.shape[-1]
+    # occupancy reduces exactly from either layout (f32 levels are exact
+    # small integers; plane_occupancy casts to int32 itself)
+    occ = plane_occupancy(x2, num_steps)[0] if sparsity else None
+    if cfg.act_dtype == "f32":
+        if method != "fused" or cfg.impl != "xla":
+            raise ValueError(
+                "act_dtype='f32' is only legal on the fused XLA twin "
+                "(bit-serial plane extraction needs the packed layout)")
+        x2 = x2.astype(jnp.float32)   # no-op when the caller owns the layout
+    # the f32 boundary layout keeps the accumulator in exact-integer f32
+    # too (same mantissa gate): the int32 convert is an unfused extra
+    # pass over the output that a strategy with an f32 boundary never
+    # needs — raw callers get f32, the epilogue consumes f32 natively
+    acc_dtype = "f32" if cfg.act_dtype == "f32" else "int32"
+
+    if cfg.impl == "xla":
+        if mult is None:
+            out = _xla_matmul(x2, w_q, None, None, occ, num_steps=num_steps,
+                              method=method, periods=periods,
+                              mxu_dtype=cfg.mxu_dtype, acc_dtype=acc_dtype)
+            return out if b_int is None else out + b_int
+        bias_row, mult_row = epilogue_rows(b_int, mult, n, n, encoding=spec)
+        return _xla_matmul(x2, w_q, bias_row, mult_row, occ,
+                           num_steps=num_steps, method=method,
+                           periods=periods, mxu_dtype=cfg.mxu_dtype,
+                           out_level=sched.out_level,
+                           out_grid=sched.out_grid, acc_dtype=acc_dtype)
+
+    mp, bm = _block(m, pref=cfg.bm)
+    kp, bk = _block(k, pref=cfg.bk)
+    np_, bn = _block(n, pref=cfg.bn)
+    xp = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+    pp = cfg.plane_parallel and method == "bitserial"
+    if mult is None:
+        out = radix_matmul_pallas(
+            xp, wp, num_steps=num_steps, method=method,
+            bm=bm, bk=bk, bn=bn, interpret=_interpret(), periods=periods,
+            occupancy=occ, mxu_dtype=cfg.mxu_dtype, plane_parallel=pp,
+        )[:m, :n]
+        return out if b_int is None else out + b_int
+    bias_row, mult_row = epilogue_rows(b_int, mult, n, np_, encoding=spec)
+    return radix_matmul_pallas(
+        xp, wp, num_steps=num_steps, method=method,
+        bm=bm, bk=bk, bn=bn, interpret=_interpret(), periods=periods,
+        bias=bias_row, mult=mult_row, occupancy=occ,
+        out_level=sched.out_level, out_grid=sched.out_grid,
+        mxu_dtype=cfg.mxu_dtype, plane_parallel=pp,
+    )[:m, :n]
+
+
 def radix_matmul(
     x_q: jax.Array,
     w_q: jax.Array,
@@ -148,6 +363,8 @@ def radix_matmul(
     method: str = "bitserial",
     mult=None,
     sparsity: bool = False,
+    autotune: bool = False,
+    config: Optional[KernelConfig] = None,
 ) -> jax.Array:
     """(..., K) packed levels @ (K, N) int8 (+bias) -> (..., N).
 
@@ -158,36 +375,82 @@ def radix_matmul(
     packed uint8 levels.  ``sparsity=True`` runs the plane-occupancy
     prepass: bit planes no activation spikes on are skipped in-kernel
     (bitserial) or masked out of the packed pass (fused) — bit-exact,
-    since empty planes contribute zero."""
+    since empty planes contribute zero.  ``autotune=True`` times the
+    legal strategies on these inputs and reuses the cached winner on
+    repeat shapes; ``config=`` pins one explicitly (both bit-exact)."""
     sched = _schedule(num_steps)
     spec = num_steps if isinstance(num_steps, EncodingSpec) else None
-    num_steps, periods = sched.packed_bits, sched.periods
     lead = x_q.shape[:-1]
     k = x_q.shape[-1]
     n = w_q.shape[-1]
     x2 = x_q.reshape(-1, k)
     m = x2.shape[0]
 
-    mp, bm = _block(m)
-    kp, bk = _block(k)
-    np_, bn = _block(n)
-    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
-    w2 = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
-    occ = plane_occupancy(x2, num_steps)[0] if sparsity else None
+    cfg = _resolve_config(
+        config, autotune, x2,
+        key_fn=lambda: autotune_mod.matmul_key(
+            m, k, n, sched, method, epilogue=mult is not None,
+            sparsity=sparsity),
+        cand_fn=lambda: autotune_mod.matmul_candidates(
+            m, k, n, sched, method, interpret=_interpret()),
+        build_fn=lambda c: (lambda: _matmul_with_config(
+            c, x2, w_q, b_int, mult, sched, spec, method, sparsity)),
+    )
+    return _matmul_with_config(
+        cfg, x2, w_q, b_int, mult, sched, spec, method, sparsity,
+    ).reshape(*lead, n)
+
+
+def _conv_with_config(cfg, x_q, w_q, b_int, mult, sched, spec, method,
+                      stride, sparsity):
+    """Execute one conv strategy on pre-padded NHWC x HWIO inputs."""
+    num_steps, periods = sched.packed_bits, sched.periods
+    cout = w_q.shape[-1]
+    occ = plane_occupancy(x_q, num_steps)[0] if sparsity else None
+    if cfg.act_dtype == "f32":
+        if method != "fused" or cfg.impl != "xla":
+            raise ValueError(
+                "act_dtype='f32' is only legal on the fused XLA twin "
+                "(bit-serial plane extraction needs the packed layout)")
+        x_q = x_q.astype(jnp.float32)  # no-op when the caller owns the layout
+    # same accumulator contract as the matmul twin: f32 boundary layout
+    # -> exact-integer f32 accumulator, no unfused int32 convert pass
+    acc_dtype = "f32" if cfg.act_dtype == "f32" else "int32"
+
+    if cfg.impl == "xla":
+        if mult is None:
+            out = _xla_conv2d(x_q, w_q, None, None, occ,
+                              num_steps=num_steps, method=method,
+                              stride=stride, periods=periods,
+                              mxu_dtype=cfg.mxu_dtype, acc_dtype=acc_dtype)
+            return out if b_int is None else out + b_int
+        bias_row, mult_row = epilogue_rows(b_int, mult, cout, cout,
+                                           encoding=spec)
+        return _xla_conv2d(x_q, w_q, bias_row, mult_row, occ,
+                           num_steps=num_steps, method=method,
+                           stride=stride, periods=periods,
+                           mxu_dtype=cfg.mxu_dtype,
+                           out_level=sched.out_level,
+                           out_grid=sched.out_grid, acc_dtype=acc_dtype)
+
+    cop, bco = _block(cout, pref=cfg.bco)
+    w_p = jnp.pad(w_q, ((0, 0), (0, 0), (0, 0), (0, cop - cout)))
+    pp = cfg.plane_parallel and method == "bitserial"
     if mult is None:
-        out = radix_matmul_pallas(
-            x2, w2, num_steps=num_steps, method=method,
-            bm=bm, bk=bk, bn=bn, interpret=_interpret(), periods=periods,
-            occupancy=occ,
-        )[:m, :n].reshape(*lead, n)
+        out = radix_conv2d_pallas(
+            x_q, w_p, num_steps=num_steps, method=method, bco=bco,
+            stride=stride, interpret=_interpret(), periods=periods,
+            occupancy=occ, mxu_dtype=cfg.mxu_dtype, plane_parallel=pp,
+        )[..., :cout]
         return out if b_int is None else out + b_int
-    bias_row, mult_row = epilogue_rows(b_int, mult, n, np_, encoding=spec)
-    return radix_matmul_pallas(
-        x2, w2, num_steps=num_steps, method=method,
-        bm=bm, bk=bk, bn=bn, interpret=_interpret(), periods=periods,
+    bias_row, mult_row = epilogue_rows(b_int, mult, cout, cop, encoding=spec)
+    return radix_conv2d_pallas(
+        x_q, w_p, num_steps=num_steps, method=method, bco=bco,
+        stride=stride, interpret=_interpret(), periods=periods,
         bias=bias_row, mult=mult_row, occupancy=occ,
         out_level=sched.out_level, out_grid=sched.out_grid,
-    )[:m, :n].reshape(*lead, n)
+        mxu_dtype=cfg.mxu_dtype, plane_parallel=pp,
+    )[..., :cout]
 
 
 def radix_conv2d(
@@ -201,6 +464,8 @@ def radix_conv2d(
     method: str = "bitserial",
     mult=None,
     sparsity: bool = False,
+    autotune: bool = False,
+    config: Optional[KernelConfig] = None,
 ) -> jax.Array:
     """NHWC packed levels * HWIO int8 -> NHWC conv (+bias).
 
@@ -211,10 +476,11 @@ def radix_conv2d(
     the h_out x w_out surviving outputs are ever computed.  ``mult``
     turns on the fused output-logic epilogue (packed uint8 levels out);
     ``sparsity=True`` runs the plane-occupancy prepass (empty planes
-    skipped/masked in-kernel, bit-exact)."""
+    skipped/masked in-kernel, bit-exact).  ``autotune=True`` times the
+    legal strategies on these inputs and reuses the cached winner on
+    repeat shapes; ``config=`` pins one explicitly (both bit-exact)."""
     sched = _schedule(num_steps)
     spec = num_steps if isinstance(num_steps, EncodingSpec) else None
-    num_steps, periods = sched.packed_bits, sched.periods
     kh, kw, cin, cout = w_q.shape
     if padding == "SAME":
         ph = same_pads(x_q.shape[1], kh, stride)
@@ -223,23 +489,21 @@ def radix_conv2d(
     elif padding != "VALID":
         raise ValueError(padding)
 
-    cop, bco = _block(cout)
-    w_p = jnp.pad(w_q, ((0, 0), (0, 0), (0, 0), (0, cop - cout)))
-    occ = plane_occupancy(x_q, num_steps)[0] if sparsity else None
-    if mult is None:
-        out = radix_conv2d_pallas(
-            x_q, w_p, num_steps=num_steps, method=method, bco=bco,
-            stride=stride, interpret=_interpret(), periods=periods,
-            occupancy=occ,
-        )[..., :cout]
-        return out if b_int is None else out + b_int
-    bias_row, mult_row = epilogue_rows(b_int, mult, cout, cop, encoding=spec)
-    return radix_conv2d_pallas(
-        x_q, w_p, num_steps=num_steps, method=method, bco=bco,
-        stride=stride, interpret=_interpret(), periods=periods,
-        bias=bias_row, mult=mult_row, occupancy=occ,
-        out_level=sched.out_level, out_grid=sched.out_grid,
-    )[..., :cout]
+    cfg = _resolve_config(
+        config, autotune, x_q,
+        key_fn=lambda: autotune_mod.conv_key(
+            x_q.shape[1], x_q.shape[2], cin, kh, kw, cout, stride, sched,
+            method, batch=x_q.shape[0], epilogue=mult is not None,
+            sparsity=sparsity),
+        cand_fn=lambda: autotune_mod.conv_candidates(
+            x_q.shape[1], x_q.shape[2], cin, kh, kw, cout, sched, method,
+            interpret=_interpret()),
+        build_fn=lambda c: (lambda: _conv_with_config(
+            c, x_q, w_q, b_int, mult, sched, spec, method, stride,
+            sparsity)),
+    )
+    return _conv_with_config(cfg, x_q, w_q, b_int, mult, sched, spec,
+                             method, stride, sparsity)
 
 
 def radix_encode(

@@ -44,11 +44,13 @@ from typing import Literal, Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.radix_matmul import (
     OCC_LANES,
     _project_levels,
     gated,
+    mxu_dot,
     occ_mask,
 )
 
@@ -60,7 +62,7 @@ __all__ = [
 
 
 def _conv_acc(x, w_ref, h_out, w_out, bco, *, num_steps, method, kh, kw,
-              stride, periods=1, occ=None):
+              stride, periods=1, occ=None, mxu_dtype="int32"):
     """Strided VALID conv of an (H, W, Cin) int32 block -> (h_out*w_out, bco).
 
     The (kh, kw) loops mirror the adder-array row/column iteration; each
@@ -80,11 +82,10 @@ def _conv_acc(x, w_ref, h_out, w_out, bco, *, num_steps, method, kh, kw,
                 # rows/cols on the stride grid only — no discarded outputs
                 window = plane[r:r + (h_out - 1) * stride + 1:stride,
                                c:c + (w_out - 1) * stride + 1:stride, :]
-                acc = acc + jax.lax.dot_general(
+                acc = acc + mxu_dot(
                     window.reshape(h_out * w_out, cin),
                     w_ref[r, c].astype(jnp.int32),
-                    (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.int32,
+                    mxu_dtype,
                 )
         return acc
 
@@ -113,7 +114,7 @@ def _conv_acc(x, w_ref, h_out, w_out, bco, *, num_steps, method, kh, kw,
 
 def radix_conv2d_kernel(
     x_ref, w_ref, o_ref, *, num_steps: int, method: str, kh: int, kw: int,
-    stride: int, periods: int = 1,
+    stride: int, periods: int = 1, mxu_dtype: str = "int32",
 ):
     """x_ref: (1, H, W, Cin) packed levels; w_ref: (kh, kw, Cin, bco);
     o_ref: (1, H_out, W_out, bco) int32."""
@@ -122,13 +123,13 @@ def radix_conv2d_kernel(
     x = x_ref[0].astype(jnp.int32)            # (H, W, Cin)
     acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
                     method=method, kh=kh, kw=kw, stride=stride,
-                    periods=periods)
+                    periods=periods, mxu_dtype=mxu_dtype)
     o_ref[0] = acc.reshape(h_out, w_out, bco)
 
 
 def radix_conv2d_sparse_kernel(
     x_ref, w_ref, occ_ref, o_ref, *, num_steps: int, method: str, kh: int,
-    kw: int, stride: int, periods: int = 1,
+    kw: int, stride: int, periods: int = 1, mxu_dtype: str = "int32",
 ):
     """Occupancy-gated variant of :func:`radix_conv2d_kernel`."""
     h_out, w_out = o_ref.shape[1], o_ref.shape[2]
@@ -136,7 +137,7 @@ def radix_conv2d_sparse_kernel(
     x = x_ref[0].astype(jnp.int32)
     acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
                     method=method, kh=kh, kw=kw, stride=stride,
-                    periods=periods, occ=occ_ref[0])
+                    periods=periods, occ=occ_ref[0], mxu_dtype=mxu_dtype)
     o_ref[0] = acc.reshape(h_out, w_out, bco)
 
 
@@ -154,7 +155,7 @@ def _epilogue_tile(acc, bias_ref, mult_ref, *, out_level, out_grid,
 def radix_conv2d_epilogue_kernel(
     x_ref, w_ref, bias_ref, mult_ref, o_ref, *, num_steps: int, method: str,
     kh: int, kw: int, stride: int, out_level: int, periods: int = 1,
-    out_grid: str = "dense",
+    out_grid: str = "dense", mxu_dtype: str = "int32",
 ):
     """Fused-epilogue variant: output logic runs on the int32 register tile
     and o_ref receives packed uint8 levels (1, H_out, W_out, bco)."""
@@ -163,7 +164,7 @@ def radix_conv2d_epilogue_kernel(
     x = x_ref[0].astype(jnp.int32)
     acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
                     method=method, kh=kh, kw=kw, stride=stride,
-                    periods=periods)
+                    periods=periods, mxu_dtype=mxu_dtype)
     o_ref[0] = _epilogue_tile(acc, bias_ref, mult_ref, out_level=out_level,
                               out_grid=out_grid, h_out=h_out, w_out=w_out,
                               bco=bco)
@@ -172,7 +173,7 @@ def radix_conv2d_epilogue_kernel(
 def radix_conv2d_sparse_epilogue_kernel(
     x_ref, w_ref, occ_ref, bias_ref, mult_ref, o_ref, *, num_steps: int,
     method: str, kh: int, kw: int, stride: int, out_level: int,
-    periods: int = 1, out_grid: str = "dense",
+    periods: int = 1, out_grid: str = "dense", mxu_dtype: str = "int32",
 ):
     """Occupancy-gated fused-epilogue variant."""
     h_out, w_out = o_ref.shape[1], o_ref.shape[2]
@@ -180,16 +181,155 @@ def radix_conv2d_sparse_epilogue_kernel(
     x = x_ref[0].astype(jnp.int32)
     acc = _conv_acc(x, w_ref, h_out, w_out, bco, num_steps=num_steps,
                     method=method, kh=kh, kw=kw, stride=stride,
-                    periods=periods, occ=occ_ref[0])
+                    periods=periods, occ=occ_ref[0], mxu_dtype=mxu_dtype)
     o_ref[0] = _epilogue_tile(acc, bias_ref, mult_ref, out_level=out_level,
                               out_grid=out_grid, h_out=h_out, w_out=w_out,
                               bco=bco)
 
 
+def _conv_plane_contrib(x_ref, w_ref, occ_ref, *, num_steps, kh, kw, stride,
+                        h_out, w_out, bco, mxu_dtype):
+    """One plane-parallel grid step's (h_out*w_out, bco) contribution.
+
+    The plane index is grid dimension 2 (innermost), so the weight block
+    — whose index map ignores it — stays VMEM-resident across all
+    ``T x periods`` plane passes (weight-stationary).  The Horner chain
+    is reassociated into ``(plane_t conv w) << shift_t`` terms, exact in
+    int32."""
+    x = x_ref[0].astype(jnp.int32)
+    cin = x.shape[-1]
+    t_idx = pl.program_id(2)
+    shift = num_steps - 1 - jax.lax.rem(t_idx, num_steps)
+    plane = (x >> shift) & 1
+    zero = jnp.zeros((h_out * w_out, bco), jnp.int32)
+    occ = occ_ref[0] if occ_ref is not None else None
+
+    def taps():
+        acc = zero
+        for r in range(kh):
+            for c in range(kw):
+                window = plane[r:r + (h_out - 1) * stride + 1:stride,
+                               c:c + (w_out - 1) * stride + 1:stride, :]
+                acc = acc + mxu_dot(
+                    window.reshape(h_out * w_out, cin),
+                    w_ref[r, c].astype(jnp.int32),
+                    mxu_dtype,
+                )
+        return acc << shift
+
+    return gated(occ, shift, taps, zero)
+
+
+def radix_conv2d_plane_kernel(
+    x_ref, w_ref, o_ref, *, num_steps: int, kh: int, kw: int, stride: int,
+    periods: int = 1, mxu_dtype: str = "int32",
+):
+    """Plane-parallel tile: o_ref is the int32 accumulator across the
+    plane grid dimension; the phase divide lands on the final plane."""
+    h_out, w_out, bco = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+    t_idx = pl.program_id(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    contrib = _conv_plane_contrib(
+        x_ref, w_ref, None, num_steps=num_steps, kh=kh, kw=kw, stride=stride,
+        h_out=h_out, w_out=w_out, bco=bco, mxu_dtype=mxu_dtype)
+    o_ref[0] = o_ref[0] + contrib.reshape(h_out, w_out, bco)
+    if periods > 1:
+        @pl.when(t_idx == num_steps * periods - 1)
+        def _div():
+            o_ref[...] = o_ref[...] // periods
+
+
+def radix_conv2d_plane_sparse_kernel(
+    x_ref, w_ref, occ_ref, o_ref, *, num_steps: int, kh: int, kw: int,
+    stride: int, periods: int = 1, mxu_dtype: str = "int32",
+):
+    """Occupancy-gated plane-parallel tile (empty plane -> the grid
+    step's whole tap sweep is skipped)."""
+    h_out, w_out, bco = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+    t_idx = pl.program_id(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    contrib = _conv_plane_contrib(
+        x_ref, w_ref, occ_ref, num_steps=num_steps, kh=kh, kw=kw,
+        stride=stride, h_out=h_out, w_out=w_out, bco=bco,
+        mxu_dtype=mxu_dtype)
+    o_ref[0] = o_ref[0] + contrib.reshape(h_out, w_out, bco)
+    if periods > 1:
+        @pl.when(t_idx == num_steps * periods - 1)
+        def _div():
+            o_ref[...] = o_ref[...] // periods
+
+
+def radix_conv2d_plane_epilogue_kernel(
+    x_ref, w_ref, bias_ref, mult_ref, o_ref, acc_ref, *, num_steps: int,
+    kh: int, kw: int, stride: int, out_level: int, periods: int = 1,
+    out_grid: str = "dense", mxu_dtype: str = "int32",
+):
+    """Plane-parallel fused-epilogue tile: unlike the sequential variant
+    (whose register tile lives within one grid step) the accumulator must
+    survive across plane grid steps, so it lives in the ``acc_ref`` VMEM
+    scratch; the output logic runs on the final plane visit."""
+    h_out, w_out, bco = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+    t_idx = pl.program_id(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _conv_plane_contrib(
+        x_ref, w_ref, None, num_steps=num_steps, kh=kh, kw=kw, stride=stride,
+        h_out=h_out, w_out=w_out, bco=bco, mxu_dtype=mxu_dtype)
+
+    @pl.when(t_idx == num_steps * periods - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if periods > 1:
+            acc = acc // periods
+        o_ref[0] = _epilogue_tile(acc, bias_ref, mult_ref,
+                                  out_level=out_level, out_grid=out_grid,
+                                  h_out=h_out, w_out=w_out, bco=bco)
+
+
+def radix_conv2d_plane_sparse_epilogue_kernel(
+    x_ref, w_ref, occ_ref, bias_ref, mult_ref, o_ref, acc_ref, *,
+    num_steps: int, kh: int, kw: int, stride: int, out_level: int,
+    periods: int = 1, out_grid: str = "dense", mxu_dtype: str = "int32",
+):
+    """Occupancy-gated plane-parallel fused-epilogue tile."""
+    h_out, w_out, bco = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+    t_idx = pl.program_id(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _conv_plane_contrib(
+        x_ref, w_ref, occ_ref, num_steps=num_steps, kh=kh, kw=kw,
+        stride=stride, h_out=h_out, w_out=w_out, bco=bco,
+        mxu_dtype=mxu_dtype)
+
+    @pl.when(t_idx == num_steps * periods - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if periods > 1:
+            acc = acc // periods
+        o_ref[0] = _epilogue_tile(acc, bias_ref, mult_ref,
+                                  out_level=out_level, out_grid=out_grid,
+                                  h_out=h_out, w_out=w_out, bco=bco)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("num_steps", "method", "bco", "stride", "interpret",
-                     "out_steps", "periods", "out_level", "out_grid"))
+                     "out_steps", "periods", "out_level", "out_grid",
+                     "mxu_dtype", "plane_parallel"))
 def radix_conv2d_pallas(
     x_q: jax.Array,
     w_q: jax.Array,
@@ -206,6 +346,8 @@ def radix_conv2d_pallas(
     out_level: Optional[int] = None,
     out_grid: str = "dense",
     occupancy: Optional[jax.Array] = None,
+    mxu_dtype: str = "int32",
+    plane_parallel: bool = False,
 ) -> jax.Array:
     """(N, H, W, Cin) uint8 @ (KH, KW, Cin, Cout) int8 -> VALID conv.
 
@@ -220,37 +362,66 @@ def radix_conv2d_pallas(
     per-phase weights and an exact in-kernel divide.  ``occupancy``
     (``(1, OCC_LANES)`` int32 from ``ops.plane_occupancy``) turns on the
     sparsity-aware schedule (empty planes skipped/masked, bit-exact).
+    ``mxu_dtype`` selects the per-plane dot lowering (see
+    ``radix_matmul.mxu_dot``); ``plane_parallel`` (bitserial only) moves
+    the plane loop into grid dimension 2 under weight-stationary specs.
     Cout must be a multiple of ``bco`` (ops.py pads); ``stride``
     subsamples inside the kernel."""
     n, h, w, cin = x_q.shape
     kh, kw, cin2, cout = w_q.shape
     assert cin == cin2, (x_q.shape, w_q.shape)
     assert cout % bco == 0, (cout, bco)
+    if plane_parallel and method != "bitserial":
+        raise ValueError("plane_parallel requires method='bitserial' "
+                         "(the fused dataflow has a single pass)")
     h_out = (h - kh) // stride + 1
     w_out = (w - kw) // stride + 1
 
-    grid = (n, cout // bco)
-    in_specs = [
-        pl.BlockSpec((1, h, w, cin), lambda b, co: (b, 0, 0, 0)),
-        pl.BlockSpec((kh, kw, cin, bco), lambda b, co: (0, 0, 0, co)),
-    ]
-    o_spec = pl.BlockSpec((1, h_out, w_out, bco), lambda b, co: (b, 0, 0, co))
-    occ_spec = pl.BlockSpec((1, OCC_LANES), lambda b, co: (0, 0))
+    if plane_parallel:
+        grid = (n, cout // bco, num_steps * periods)
+        in_specs = [
+            pl.BlockSpec((1, h, w, cin), lambda b, co, t: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, bco), lambda b, co, t: (0, 0, 0, co)),
+        ]
+        o_spec = pl.BlockSpec((1, h_out, w_out, bco),
+                              lambda b, co, t: (b, 0, 0, co))
+        occ_spec = pl.BlockSpec((1, OCC_LANES), lambda b, co, t: (0, 0))
+        row_spec = pl.BlockSpec((1, bco), lambda b, co, t: (0, co))
+    else:
+        grid = (n, cout // bco)
+        in_specs = [
+            pl.BlockSpec((1, h, w, cin), lambda b, co: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, bco), lambda b, co: (0, 0, 0, co)),
+        ]
+        o_spec = pl.BlockSpec((1, h_out, w_out, bco),
+                              lambda b, co: (b, 0, 0, co))
+        occ_spec = pl.BlockSpec((1, OCC_LANES), lambda b, co: (0, 0))
+        row_spec = pl.BlockSpec((1, bco), lambda b, co: (0, co))
     sparse = occupancy is not None
     if sparse:
         assert occupancy.shape == (1, OCC_LANES), occupancy.shape
         occupancy = occupancy.astype(jnp.int32)
 
     if mult is None:
-        if sparse:
+        if plane_parallel:
+            kernel = functools.partial(
+                radix_conv2d_plane_sparse_kernel if sparse
+                else radix_conv2d_plane_kernel,
+                num_steps=num_steps, kh=kh, kw=kw, stride=stride,
+                periods=periods, mxu_dtype=mxu_dtype)
+        elif sparse:
             kernel = functools.partial(
                 radix_conv2d_sparse_kernel, num_steps=num_steps,
-                method=method, kh=kh, kw=kw, stride=stride, periods=periods)
-            specs, args = in_specs + [occ_spec], (x_q, w_q, occupancy)
+                method=method, kh=kh, kw=kw, stride=stride, periods=periods,
+                mxu_dtype=mxu_dtype)
         else:
             kernel = functools.partial(
                 radix_conv2d_kernel, num_steps=num_steps, method=method,
-                kh=kh, kw=kw, stride=stride, periods=periods)
+                kh=kh, kw=kw, stride=stride, periods=periods,
+                mxu_dtype=mxu_dtype)
+        if sparse:
+            specs, args = in_specs + [occ_spec], (x_q, w_q, occupancy)
+        else:
             specs, args = in_specs, (x_q, w_q)
         return pl.pallas_call(
             kernel,
@@ -268,19 +439,39 @@ def radix_conv2d_pallas(
         bias = jnp.zeros((1, cout), jnp.int32)
     assert bias.shape == (1, cout) and mult.shape == (1, cout), (
         bias.shape, mult.shape)
-    row_spec = pl.BlockSpec((1, bco), lambda b, co: (0, co))
-    if sparse:
+    scratch = []
+    if plane_parallel:
+        # the sequential epilogue accumulates in registers within one grid
+        # step; across plane grid steps the accumulator needs VMEM scratch
+        scratch = [pltpu.VMEM((h_out * w_out, bco), jnp.int32)]
+        if sparse:
+            kernel = functools.partial(
+                radix_conv2d_plane_sparse_epilogue_kernel,
+                num_steps=num_steps, kh=kh, kw=kw, stride=stride,
+                out_level=out_level, periods=periods, out_grid=out_grid,
+                mxu_dtype=mxu_dtype)
+            specs = in_specs + [occ_spec, row_spec, row_spec]
+            args = (x_q, w_q, occupancy, bias, mult.astype(jnp.float32))
+        else:
+            kernel = functools.partial(
+                radix_conv2d_plane_epilogue_kernel,
+                num_steps=num_steps, kh=kh, kw=kw, stride=stride,
+                out_level=out_level, periods=periods, out_grid=out_grid,
+                mxu_dtype=mxu_dtype)
+            specs = in_specs + [row_spec, row_spec]
+            args = (x_q, w_q, bias, mult.astype(jnp.float32))
+    elif sparse:
         kernel = functools.partial(
             radix_conv2d_sparse_epilogue_kernel, num_steps=num_steps,
             method=method, kh=kh, kw=kw, stride=stride, out_level=out_level,
-            periods=periods, out_grid=out_grid)
+            periods=periods, out_grid=out_grid, mxu_dtype=mxu_dtype)
         specs = in_specs + [occ_spec, row_spec, row_spec]
         args = (x_q, w_q, occupancy, bias, mult.astype(jnp.float32))
     else:
         kernel = functools.partial(
             radix_conv2d_epilogue_kernel, num_steps=num_steps, method=method,
             kh=kh, kw=kw, stride=stride, out_level=out_level,
-            periods=periods, out_grid=out_grid)
+            periods=periods, out_grid=out_grid, mxu_dtype=mxu_dtype)
         specs = in_specs + [row_spec, row_spec]
         args = (x_q, w_q, bias, mult.astype(jnp.float32))
     return pl.pallas_call(
@@ -289,5 +480,6 @@ def radix_conv2d_pallas(
         in_specs=specs,
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), jnp.uint8),
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*args)

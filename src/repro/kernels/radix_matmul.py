@@ -61,6 +61,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "OCC_LANES",
+    "mxu_dot",
     "radix_matmul_kernel",
     "radix_matmul_epilogue_kernel",
     "radix_matmul_pallas",
@@ -94,8 +95,48 @@ def gated(occ, shift: int, fn, zero) -> jax.Array:
     return jax.lax.cond(occ[shift] > 0, fn, lambda: zero)
 
 
+def mxu_dot(a, w, mxu_dtype: str = "int32",
+            acc_dtype: str = "int32") -> jax.Array:
+    """One plane/packed contraction under the selected MXU lowering.
+
+    ``"int32"`` is the always-exact reference lowering.  ``"int8"`` casts
+    both operands to int8 with ``preferred_element_type=int32`` — the
+    TPU-native path: the MXU runs int8xint8->int32 at full systolic rate,
+    and the autotuner only selects it when ``autotune.exact_lowering``
+    proves the operands fit (plane bits always do; packed levels iff
+    ``T <= 7``).  ``"f32"`` runs the dot at the BLAS float rate — exact
+    while every partial sum stays under the 24-bit f32 mantissa (again
+    guarded by ``exact_lowering``); this is the winner on CPU CI, where
+    XLA has no vectorized integer GEMM.  Every branch casts its own
+    operands to the lowering dtype, so callers may hand either raw
+    packed/int8 tensors or operands already held in the lowering dtype
+    (the cast is a no-op then — how the engine and the bench avoid a
+    per-call weight convert: a weight captured in the jitted plan is
+    converted once at compile time).  The result is int32, except that
+    ``acc_dtype="f32"`` (legal only with ``mxu_dtype="f32"``, i.e. the
+    ``act_dtype="f32"`` boundary layout) keeps the exact-integer f32
+    accumulator — the final int32 convert is an unfused extra pass over
+    the output on CPU, and a strategy whose layer boundary is f32 has no
+    use for it."""
+    if mxu_dtype == "int32":
+        return jax.lax.dot_general(
+            a.astype(jnp.int32), w.astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    if mxu_dtype == "int8":
+        return jax.lax.dot_general(
+            a.astype(jnp.int8), w.astype(jnp.int8),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    if mxu_dtype == "f32":
+        out = jax.lax.dot_general(
+            a.astype(jnp.float32), w.astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return out if acc_dtype == "f32" else out.astype(jnp.int32)
+    raise ValueError(f"unknown mxu_dtype {mxu_dtype!r}")
+
+
 def _accumulate_tile(x, w, *, num_steps: int, method: str,
-                     periods: int = 1, occ=None) -> jax.Array:
+                     periods: int = 1, occ=None,
+                     mxu_dtype: str = "int32") -> jax.Array:
     """(bm, bk) x (bk, bn) int32 partial product, bit-serial or single-pass.
 
     ``periods > 1`` (phase coding) replays the ``num_steps`` plane passes
@@ -111,8 +152,7 @@ def _accumulate_tile(x, w, *, num_steps: int, method: str,
     """
 
     def dot(a):
-        return jax.lax.dot_general(
-            a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        return mxu_dot(a, w, mxu_dtype)
 
     if method == "fused":
         # radix identity: one int MXU pass over packed levels
@@ -158,7 +198,7 @@ def _project_levels(q, *, out_level: int, out_grid: str) -> jax.Array:
 
 
 def _accumulate_step(x_ref, w_ref, occ_ref, acc_ref, *, num_steps, method,
-                     periods):
+                     periods, mxu_dtype="int32"):
     """Shared K-grid accumulation body (occ_ref is None when dense)."""
     k_idx = pl.program_id(2)
 
@@ -171,22 +211,84 @@ def _accumulate_step(x_ref, w_ref, occ_ref, acc_ref, *, num_steps, method,
     occ = occ_ref[0] if occ_ref is not None else None
     acc_ref[...] += _accumulate_tile(x, w, num_steps=num_steps,
                                      method=method, periods=periods,
-                                     occ=occ)
+                                     occ=occ, mxu_dtype=mxu_dtype)
+
+
+def _plane_step(x_ref, w_ref, occ_ref, acc_ref, *, num_steps, periods,
+                mxu_dtype="int32"):
+    """Plane-parallel accumulation body: one grid step = ONE plane pass.
+
+    The plane index ``t`` is grid dimension 3 (innermost), so the weight
+    block — whose index map ignores ``t`` — stays resident across all
+    ``T x periods`` plane passes: weight-stationary scheduling, one VMEM
+    weight load amortized over the whole spike train instead of per
+    Horner iteration.  The Horner recurrence is replaced by the additive
+    form ``acc += (plane_t @ w) << shift_t`` (the same sum, reassociated
+    — exact in int32), because grid steps cannot carry the
+    multiply-by-two dependency chain."""
+    k_idx = pl.program_id(2)
+    t_idx = pl.program_id(3)
+
+    @pl.when((k_idx == 0) & (t_idx == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)          # (bm, bk) packed levels
+    w = w_ref[...].astype(jnp.int32)          # (bk, bn) int weights
+    shift = num_steps - 1 - jax.lax.rem(t_idx, num_steps)
+    plane = (x >> shift) & 1
+    zero = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    occ = occ_ref[0] if occ_ref is not None else None
+    acc_ref[...] += gated(occ, shift,
+                          lambda: mxu_dot(plane, w, mxu_dtype) << shift,
+                          zero)
+
+
+def _plane_last(num_steps: int, periods: int):
+    """Predicate: this grid step is the final (K, plane) visit."""
+    return ((pl.program_id(2) == pl.num_programs(2) - 1)
+            & (pl.program_id(3) == num_steps * periods - 1))
 
 
 def radix_matmul_kernel(x_ref, w_ref, o_ref, *, num_steps: int, method: str,
-                        periods: int = 1):
+                        periods: int = 1, mxu_dtype: str = "int32"):
     """One (bm, bk) x (bk, bn) tile; accumulates into o_ref across the K grid."""
     _accumulate_step(x_ref, w_ref, None, o_ref, num_steps=num_steps,
-                     method=method, periods=periods)
+                     method=method, periods=periods, mxu_dtype=mxu_dtype)
 
 
 def radix_matmul_sparse_kernel(x_ref, w_ref, occ_ref, o_ref, *,
-                               num_steps: int, method: str, periods: int = 1):
+                               num_steps: int, method: str, periods: int = 1,
+                               mxu_dtype: str = "int32"):
     """Occupancy-gated tile: plane passes skip when their occupancy bit
     is 0 (bitserial) / packed bits mask to the occupied lanes (fused)."""
     _accumulate_step(x_ref, w_ref, occ_ref, o_ref, num_steps=num_steps,
-                     method=method, periods=periods)
+                     method=method, periods=periods, mxu_dtype=mxu_dtype)
+
+
+def radix_matmul_plane_kernel(x_ref, w_ref, o_ref, *, num_steps: int,
+                              periods: int = 1, mxu_dtype: str = "int32"):
+    """Plane-parallel tile: o_ref is the int32 accumulator across the
+    (K, plane) grid; the phase divide lands on the final visit."""
+    _plane_step(x_ref, w_ref, None, o_ref, num_steps=num_steps,
+                periods=periods, mxu_dtype=mxu_dtype)
+    if periods > 1:
+        @pl.when(_plane_last(num_steps, periods))
+        def _div():
+            o_ref[...] = o_ref[...] // periods
+
+
+def radix_matmul_plane_sparse_kernel(x_ref, w_ref, occ_ref, o_ref, *,
+                                     num_steps: int, periods: int = 1,
+                                     mxu_dtype: str = "int32"):
+    """Occupancy-gated plane-parallel tile (empty plane -> whole grid
+    step's MXU pass skipped)."""
+    _plane_step(x_ref, w_ref, occ_ref, o_ref, num_steps=num_steps,
+                periods=periods, mxu_dtype=mxu_dtype)
+    if periods > 1:
+        @pl.when(_plane_last(num_steps, periods))
+        def _div():
+            o_ref[...] = o_ref[...] // periods
 
 
 def _epilogue_store(acc_ref, bias_ref, mult_ref, o_ref, *, out_level: int,
@@ -203,14 +305,14 @@ def _epilogue_store(acc_ref, bias_ref, mult_ref, o_ref, *, out_level: int,
 def radix_matmul_epilogue_kernel(
     x_ref, w_ref, bias_ref, mult_ref, o_ref, acc_ref,
     *, num_steps: int, method: str, out_level: int, periods: int = 1,
-    out_grid: str = "dense",
+    out_grid: str = "dense", mxu_dtype: str = "int32",
 ):
     """Fused-epilogue tile: int32 accumulation lives in the ``acc_ref`` VMEM
     scratch; on the final K step the output logic (bias + requant multiply +
     clamp + level-grid projection) runs in-register and only the packed
     uint8 level reaches o_ref."""
     _accumulate_step(x_ref, w_ref, None, acc_ref, num_steps=num_steps,
-                     method=method, periods=periods)
+                     method=method, periods=periods, mxu_dtype=mxu_dtype)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _epilogue():
@@ -221,12 +323,12 @@ def radix_matmul_epilogue_kernel(
 def radix_matmul_sparse_epilogue_kernel(
     x_ref, w_ref, occ_ref, bias_ref, mult_ref, o_ref, acc_ref,
     *, num_steps: int, method: str, out_level: int, periods: int = 1,
-    out_grid: str = "dense",
+    out_grid: str = "dense", mxu_dtype: str = "int32",
 ):
     """Occupancy-gated fused-epilogue tile (sparse accumulate + output
     logic)."""
     _accumulate_step(x_ref, w_ref, occ_ref, acc_ref, num_steps=num_steps,
-                     method=method, periods=periods)
+                     method=method, periods=periods, mxu_dtype=mxu_dtype)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _epilogue():
@@ -234,10 +336,48 @@ def radix_matmul_sparse_epilogue_kernel(
                         out_level=out_level, out_grid=out_grid)
 
 
+def radix_matmul_plane_epilogue_kernel(
+    x_ref, w_ref, bias_ref, mult_ref, o_ref, acc_ref,
+    *, num_steps: int, out_level: int, periods: int = 1,
+    out_grid: str = "dense", mxu_dtype: str = "int32",
+):
+    """Plane-parallel fused-epilogue tile: the accumulator scratch
+    persists across the (K, plane) grid; on the final visit the phase
+    divide (if any) and the output logic run before the packed uint8
+    store."""
+    _plane_step(x_ref, w_ref, None, acc_ref, num_steps=num_steps,
+                periods=periods, mxu_dtype=mxu_dtype)
+
+    @pl.when(_plane_last(num_steps, periods))
+    def _epilogue():
+        if periods > 1:
+            acc_ref[...] = acc_ref[...] // periods
+        _epilogue_store(acc_ref, bias_ref, mult_ref, o_ref,
+                        out_level=out_level, out_grid=out_grid)
+
+
+def radix_matmul_plane_sparse_epilogue_kernel(
+    x_ref, w_ref, occ_ref, bias_ref, mult_ref, o_ref, acc_ref,
+    *, num_steps: int, out_level: int, periods: int = 1,
+    out_grid: str = "dense", mxu_dtype: str = "int32",
+):
+    """Occupancy-gated plane-parallel fused-epilogue tile."""
+    _plane_step(x_ref, w_ref, occ_ref, acc_ref, num_steps=num_steps,
+                periods=periods, mxu_dtype=mxu_dtype)
+
+    @pl.when(_plane_last(num_steps, periods))
+    def _epilogue():
+        if periods > 1:
+            acc_ref[...] = acc_ref[...] // periods
+        _epilogue_store(acc_ref, bias_ref, mult_ref, o_ref,
+                        out_level=out_level, out_grid=out_grid)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("num_steps", "method", "bm", "bk", "bn", "interpret",
-                     "out_steps", "periods", "out_level", "out_grid"),
+                     "out_steps", "periods", "out_level", "out_grid",
+                     "mxu_dtype", "plane_parallel"),
 )
 def radix_matmul_pallas(
     x_q: jax.Array,
@@ -256,6 +396,8 @@ def radix_matmul_pallas(
     out_level: Optional[int] = None,
     out_grid: str = "dense",
     occupancy: Optional[jax.Array] = None,
+    mxu_dtype: str = "int32",
+    plane_parallel: bool = False,
 ) -> jax.Array:
     """(M, K) uint8 levels @ (K, N) int8 -> (M, N).
 
@@ -275,6 +417,15 @@ def radix_matmul_pallas(
     turns on the sparsity-aware schedule: globally empty planes are
     skipped (bitserial) or masked (fused), bit-exactly.
 
+    ``mxu_dtype`` selects the per-plane dot lowering (see ``mxu_dot``;
+    the autotuner only picks non-default lowerings it can prove exact).
+    ``plane_parallel`` (bitserial only) moves the plane loop into its
+    own innermost grid dimension under weight-stationary block specs:
+    the weight tile's index map ignores the plane index, so one weight
+    load serves all ``T x periods`` plane passes and the passes become
+    independently schedulable grid steps instead of an unrolled
+    dependency chain.
+
     Shapes must be multiples of the block sizes (ops.py pads).
     Block sizes default to MXU-aligned 128s; VMEM footprint per step is
     bm*bk (x) + bk*bn (w) + bm*bn*4 (acc) bytes.
@@ -284,28 +435,47 @@ def radix_matmul_pallas(
     assert k == k2, (x_q.shape, w_q.shape)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
         f"shapes {(m, k, n)} not multiples of blocks {(bm, bk, bn)}")
+    if plane_parallel and method != "bitserial":
+        raise ValueError("plane_parallel requires method='bitserial' "
+                         "(the fused dataflow has a single pass)")
 
-    grid = (m // bm, n // bn, k // bk)
-    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
-    w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
-    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
-    occ_spec = pl.BlockSpec((1, OCC_LANES), lambda i, j, kk: (0, 0))
+    if plane_parallel:
+        # grid dim 3 = plane index, innermost: the weight block (index
+        # map ignores t) stays resident across the whole spike train.
+        grid = (m // bm, n // bn, k // bk, num_steps * periods)
+        x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk, t: (i, kk))
+        w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk, t: (kk, j))
+        o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk, t: (i, j))
+        occ_spec = pl.BlockSpec((1, OCC_LANES), lambda i, j, kk, t: (0, 0))
+    else:
+        grid = (m // bm, n // bn, k // bk)
+        x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+        w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+        o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+        occ_spec = pl.BlockSpec((1, OCC_LANES), lambda i, j, kk: (0, 0))
     sparse = occupancy is not None
     if sparse:
         assert occupancy.shape == (1, OCC_LANES), occupancy.shape
         occupancy = occupancy.astype(jnp.int32)
 
     if mult is None:
-        if sparse:
+        if plane_parallel:
+            kernel = functools.partial(
+                radix_matmul_plane_sparse_kernel if sparse
+                else radix_matmul_plane_kernel,
+                num_steps=num_steps, periods=periods, mxu_dtype=mxu_dtype)
+        elif sparse:
             kernel = functools.partial(
                 radix_matmul_sparse_kernel, num_steps=num_steps,
-                method=method, periods=periods)
-            in_specs = [x_spec, w_spec, occ_spec]
-            args = (x_q, w_q, occupancy)
+                method=method, periods=periods, mxu_dtype=mxu_dtype)
         else:
             kernel = functools.partial(
                 radix_matmul_kernel, num_steps=num_steps, method=method,
-                periods=periods)
+                periods=periods, mxu_dtype=mxu_dtype)
+        if sparse:
+            in_specs = [x_spec, w_spec, occ_spec]
+            args = (x_q, w_q, occupancy)
+        else:
             in_specs = [x_spec, w_spec]
             args = (x_q, w_q)
         return pl.pallas_call(
@@ -324,20 +494,38 @@ def radix_matmul_pallas(
         bias = jnp.zeros((1, n), jnp.int32)
     assert bias.shape == (1, n) and mult.shape == (1, n), (bias.shape,
                                                           mult.shape)
-    row_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
-    if sparse:
-        kernel = functools.partial(
-            radix_matmul_sparse_epilogue_kernel, num_steps=num_steps,
-            method=method, out_level=out_level, periods=periods,
-            out_grid=out_grid)
-        in_specs = [x_spec, w_spec, occ_spec, row_spec, row_spec]
-        args = (x_q, w_q, occupancy, bias, mult.astype(jnp.float32))
+    if plane_parallel:
+        row_spec = pl.BlockSpec((1, bn), lambda i, j, kk, t: (0, j))
+        if sparse:
+            kernel = functools.partial(
+                radix_matmul_plane_sparse_epilogue_kernel,
+                num_steps=num_steps, out_level=out_level, periods=periods,
+                out_grid=out_grid, mxu_dtype=mxu_dtype)
+            in_specs = [x_spec, w_spec, occ_spec, row_spec, row_spec]
+            args = (x_q, w_q, occupancy, bias, mult.astype(jnp.float32))
+        else:
+            kernel = functools.partial(
+                radix_matmul_plane_epilogue_kernel,
+                num_steps=num_steps, out_level=out_level, periods=periods,
+                out_grid=out_grid, mxu_dtype=mxu_dtype)
+            in_specs = [x_spec, w_spec, row_spec, row_spec]
+            args = (x_q, w_q, bias, mult.astype(jnp.float32))
     else:
-        kernel = functools.partial(
-            radix_matmul_epilogue_kernel, num_steps=num_steps, method=method,
-            out_level=out_level, periods=periods, out_grid=out_grid)
-        in_specs = [x_spec, w_spec, row_spec, row_spec]
-        args = (x_q, w_q, bias, mult.astype(jnp.float32))
+        row_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+        if sparse:
+            kernel = functools.partial(
+                radix_matmul_sparse_epilogue_kernel, num_steps=num_steps,
+                method=method, out_level=out_level, periods=periods,
+                out_grid=out_grid, mxu_dtype=mxu_dtype)
+            in_specs = [x_spec, w_spec, occ_spec, row_spec, row_spec]
+            args = (x_q, w_q, occupancy, bias, mult.astype(jnp.float32))
+        else:
+            kernel = functools.partial(
+                radix_matmul_epilogue_kernel, num_steps=num_steps,
+                method=method, out_level=out_level, periods=periods,
+                out_grid=out_grid, mxu_dtype=mxu_dtype)
+            in_specs = [x_spec, w_spec, row_spec, row_spec]
+            args = (x_q, w_q, bias, mult.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=grid,

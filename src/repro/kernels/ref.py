@@ -54,9 +54,10 @@ def radix_matmul_ref(
 
 
 def radix_conv2d_ref(
-    x_q: jax.Array, w_q: jax.Array, num_steps: int, *, periods: int = 1
+    x_q: jax.Array, w_q: jax.Array, num_steps: int, *, stride: int = 1,
+    periods: int = 1
 ) -> jax.Array:
-    """Bit-serial stride-1 VALID conv oracle (NHWC x HWIO -> NHWC, int32).
+    """Bit-serial strided VALID conv oracle (NHWC x HWIO -> NHWC, int32).
 
     ``periods > 1``: phase-coding plane schedule (see radix_matmul_ref)."""
     x = x_q.astype(jnp.int32)
@@ -64,7 +65,7 @@ def radix_conv2d_ref(
     def conv(plane):
         return jax.lax.conv_general_dilated(
             plane, w_q.astype(jnp.int32),
-            window_strides=(1, 1), padding="VALID",
+            window_strides=(stride, stride), padding="VALID",
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
             preferred_element_type=jnp.int32)
 

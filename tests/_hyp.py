@@ -2,14 +2,132 @@
 
 ``hypothesis`` is a dev-only dependency (requirements-dev.txt); the runtime
 container does not ship it.  Importing ``given``/``settings``/``st`` from
-here instead of from ``hypothesis`` keeps the non-property tests in the
-same module runnable everywhere: when hypothesis is missing, ``@given``
-turns the test into a skip instead of breaking collection.
+here instead of from ``hypothesis`` keeps the property tests in the same
+module runnable everywhere: when hypothesis is missing, ``@given`` runs the
+test over **deterministic fixed-seed draws** (seeded from the test's
+qualified name, so every machine and every run sees the same examples)
+instead of skipping.  Real hypothesis still wins when installed — it
+shrinks failures and explores adaptively; the fallback only guarantees the
+properties are exercised, not minimised.
+
+The fallback engine is exported under ``fallback_*`` names unconditionally
+so the test suite can pin its determinism even where hypothesis exists
+(tests/test_docs.py::test_hyp_fallback_is_deterministic).
 """
 
 from __future__ import annotations
 
-import pytest
+import functools
+import zlib
+
+import numpy as np
+
+FALLBACK_MAX_EXAMPLES = 25      # when no @settings(max_examples=...) given
+
+
+class FallbackStrategy:
+    """A deterministic draw rule: ``rng -> value``."""
+
+    def __init__(self, draw, label=""):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"FallbackStrategy({self.label})"
+
+
+class _FallbackStrategies:
+    """Stands in for ``hypothesis.strategies`` (the subset this repo uses).
+
+    Unknown strategy names raise loudly at import time of the using test —
+    better than inert stubs that silently draw ``None``.
+    """
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return FallbackStrategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=False, **_kw):
+        return FallbackStrategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans():
+        return FallbackStrategy(lambda rng: bool(rng.integers(0, 2)),
+                                "booleans()")
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return FallbackStrategy(
+            lambda rng: elements[int(rng.integers(0, len(elements)))],
+            f"sampled_from({elements!r})")
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(size)]
+        return FallbackStrategy(draw, f"lists(..., {min_size}, {max_size})")
+
+
+fallback_st = _FallbackStrategies()
+
+
+def fallback_seed(name: str) -> int:
+    """Stable cross-run / cross-machine seed for one test (crc32 of the
+    qualified name — NOT ``hash()``, which is salted per process)."""
+    return zlib.crc32(name.encode())
+
+
+def fallback_given(*arg_strategies, **kw_strategies):
+    """``@given`` replacement: run the test body over fixed-seed draws.
+
+    Drawn positional values append after the test's own args (matching
+    hypothesis' convention for methods: ``self`` stays first).  The
+    example count honours ``@settings(max_examples=...)`` in either
+    decorator order.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples",
+                        getattr(fn, "_hyp_max_examples",
+                                FALLBACK_MAX_EXAMPLES))
+            rng = np.random.default_rng(fallback_seed(fn.__qualname__))
+            for i in range(n):
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except Exception:
+                    print(f"falsifying example {i}: args={drawn} "
+                          f"kwargs={drawn_kw}")
+                    raise
+        # hide the original signature: pytest must not read the drawn
+        # parameters (T, seed, ...) as fixture requests
+        del wrapper.__wrapped__
+        wrapper._hyp_fallback = True
+        return wrapper
+    return deco
+
+
+def fallback_settings(*_args, **kwargs):
+    max_examples = kwargs.get("max_examples")
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._hyp_max_examples = int(max_examples)
+        return fn
+    return deco
+
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
@@ -17,20 +135,6 @@ try:
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - exercised in slim containers
     HAVE_HYPOTHESIS = False
-
-    def given(*_args, **_kwargs):
-        return pytest.mark.skip(reason="hypothesis not installed")
-
-    def settings(*_args, **_kwargs):
-        def deco(fn):
-            return fn
-        return deco
-
-    class _AnyStrategy:
-        """Stands in for ``hypothesis.strategies``; strategy objects are
-        only ever passed to ``given`` (which skips), so inert stubs do."""
-
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
-
-    st = _AnyStrategy()
+    given = fallback_given
+    settings = fallback_settings
+    st = fallback_st

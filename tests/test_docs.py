@@ -71,6 +71,105 @@ def test_kernels_guide_matches_code_surface():
             f"docs/kernels.md schedule table is missing {field.name}")
 
 
+def test_kernels_guide_autotune_section():
+    """§7 (autotuning & MXU lowering) documents the live tuning surface:
+    every KernelConfig field, every MXU dtype, the cache env var, the
+    perf-gate tolerance knob, and the gated bench rows — drift-checked
+    against the code they describe."""
+    text = (REPO / "docs" / "kernels.md").read_text()
+    assert "## 7. Autotuning & MXU lowering" in text
+    import dataclasses as _dc
+    from repro.kernels.autotune import MXU_DTYPES, KernelConfig
+    for field in _dc.fields(KernelConfig):
+        assert f"`{field.name}`" in text, (
+            f"docs/kernels.md §7 config table is missing {field.name}")
+    for dt in MXU_DTYPES:
+        assert f"`{dt}`" in text, (
+            f"docs/kernels.md §7 is missing the {dt} lowering")
+    assert "REPRO_AUTOTUNE_CACHE" in text      # cache location knob
+    assert "REPRO_BENCH_TOL" in text           # perf-gate override knob
+    from benchmarks.kernel_bench import GATE_ROWS
+    for name in GATE_ROWS:
+        assert name in text, (
+            f"docs/kernels.md §7 is missing gated bench row {name}")
+
+
+def test_bench_json_carries_tuned_rows():
+    """The committed BENCH_kernels.json is the perf-gate baseline: it
+    must carry the tuned rows the gate reads, min/std timing fields, and
+    a uniform spikes_per_act convention (null == no spike schedule,
+    never 0.0)."""
+    import json as _json
+
+    payload = _json.loads((REPO / "BENCH_kernels.json").read_text())
+    rows = {r["name"]: r for r in payload["rows"]}
+    from benchmarks.kernel_bench import GATE_ROWS
+    for name in GATE_ROWS + ("dense_f32", "radix_bitserial_tuned"):
+        assert name in rows, f"BENCH_kernels.json is missing row {name}"
+    for r in rows.values():
+        assert {"us_per_call", "us_mean", "us_std",
+                "spikes_per_act"} <= set(r), r["name"]
+    assert rows["dense_f32"]["spikes_per_act"] is None
+    assert rows["dense_f32"]["tuned_config"] is None
+    for name in ("radix_fused_tuned", "radix_bitserial_tuned"):
+        assert rows[name]["tuned_config"] is not None, (
+            f"{name} must record the winning KernelConfig")
+        assert rows[name]["spikes_per_act"] is not None
+
+
+def test_hyp_fallback_is_deterministic():
+    """tests/_hyp.py's missing-hypothesis fallback must draw the same
+    examples on every machine and run — the old behavior (skip) hid the
+    property tests from slim containers; the new one runs them on
+    fixed-seed draws."""
+    from _hyp import fallback_given, fallback_settings, fallback_st
+
+    seen = []
+
+    @fallback_given(fallback_st.integers(0, 1000),
+                    fallback_st.floats(0.0, 1.0),
+                    flag=fallback_st.booleans())
+    @fallback_settings(max_examples=7, deadline=None)
+    def collect(a, b, flag):
+        seen.append((a, b, flag))
+
+    collect()
+    first = list(seen)
+    assert len(first) == 7
+    seen.clear()
+    collect()
+    assert seen == first          # bit-identical replay
+
+
+def test_hyp_fallback_reports_falsifying_example(capsys):
+    from _hyp import fallback_given, fallback_st
+
+    @fallback_given(fallback_st.integers(5, 9))
+    def boom(v):
+        raise AssertionError("nope")
+
+    with pytest.raises(AssertionError):
+        boom()
+    assert "falsifying example" in capsys.readouterr().out
+
+
+def test_every_skip_carries_a_reason():
+    """Skip auditing: a bare ``pytest.mark.skip`` hides work without
+    explanation.  Every skip/skipif in the suite must state its reason
+    inline (the historical missing-hypothesis skips are gone — the _hyp
+    fallback runs those tests deterministically instead)."""
+    pat = re.compile(r"pytest\.mark\.skip(if)?\(")
+    offenders = []
+    for path in sorted((REPO / "tests").glob("*.py")):
+        text = path.read_text()
+        for mark in pat.finditer(text):
+            window = text[mark.start():mark.start() + 200]
+            if "reason=" not in window:
+                line = text[:mark.start()].count("\n") + 1
+                offenders.append(f"{path.name}:{line}")
+    assert not offenders, f"skips without a stated reason: {offenders}"
+
+
 def test_serving_guide_is_cross_linked():
     """docs/serving.md (the resilience guide) must be discoverable from
     both the README and DESIGN.md §3, and is itself in DOC_FILES so its
