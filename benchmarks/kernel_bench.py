@@ -33,9 +33,13 @@ EncodingSpec's paper-faithful spike-domain dataflow (one gated integer
 matmul per time step, reduced by the spec's plane weights) timed on the
 same problem, with its spike density — radix 4 passes, phase P x K
 passes, rate levels-1 passes, TTFS 4 passes at <= 1 spike/activation
-(docs/encodings.md has the economics).  Results go to stdout as CSV and
-to ``BENCH_kernels.json`` at the repo root so the perf trajectory is
-machine-readable across PRs.
+(docs/encodings.md has the economics).  Every timed row also carries a
+``modeled_energy_uj`` column — the calibrated hardware model's per-call
+energy for the row's (encoding, dataflow) point (docs/ppa.md; null for
+the float baseline, which has no hardware analogue) — so each bench row
+reports a measured-latency axis and a modeled-energy axis.  Results go
+to stdout as CSV and to ``BENCH_kernels.json`` at the repo root so the
+perf trajectory is machine-readable across PRs.
 """
 
 from __future__ import annotations
@@ -55,6 +59,7 @@ import numpy as np
 
 from repro.core import encoding
 from repro.kernels import ref
+from repro.ppa import model as ppa_model
 
 
 def _density(x_q, num_bits: int) -> float:
@@ -225,10 +230,20 @@ def run(log=print, m=512, k=512, n=512, T=4, json_path=_JSON_PATH):
     ]
     tuned_cfgs = {"radix_fused_tuned": cfg_fused.as_dict(),
                   "radix_bitserial_tuned": cfg_bits.as_dict()}
+    # the second reporting axis: the calibrated hardware model's energy
+    # for each row's (encoding, dataflow) point (null: no hw analogue)
+    ecm = ppa_model.EncodingCostModel()
+    energies = {
+        name: ppa_model.modeled_matmul_energy_uj(
+            name, m, k, n, T, spikes_per_act=dens, model=ecm)
+        for name, _, _, _, dens in rows
+    }
     for name, t, rd, wr, dens in rows:
         d = "n/a" if dens is None else f"{dens:.3f}"
+        e = energies[name]
+        e_s = "n/a" if e is None else f"{e:.1f}"
         log(f"kernel,{name},{t.us:.1f}us(+-{t.std:.1f}),{rd + wr}B,"
-            f"act_write={wr}B,spikes_per_act={d}")
+            f"act_write={wr}B,spikes_per_act={d},modeled_energy_uj={e_s}")
     ttfs_speedup = ttfs_bs_dense.us / max(ttfs_bs_sparse.us, 1e-9)
     log(f"kernel,ttfs_sparsity_speedup={ttfs_speedup:.2f}  # plane-"
         f"occupancy early-exit vs full plane replay on a plane-sparse "
@@ -270,6 +285,11 @@ def run(log=print, m=512, k=512, n=512, T=4, json_path=_JSON_PATH):
              # schedule (the dense float baseline) — never 0.0, which
              # would read as "measured and empty"
              "spikes_per_act": None if dens is None else round(dens, 3),
+             # modeled per-call energy on the calibrated hardware model
+             # (docs/ppa.md); null marks the float baseline, which has
+             # no hardware analogue
+             "modeled_energy_uj": (None if energies[name] is None
+                                   else round(energies[name], 1)),
              "tuned_config": tuned_cfgs.get(name)}
             for name, t, rd, wr, dens in rows
         ],
@@ -394,17 +414,22 @@ def _encoding_latency(log, m=512, k=512, n=512):
             return spec.reduce_planes(per_step)
         return jax.jit(fwd)
 
+    ecm = ppa_model.EncodingCostModel()
     rows = []
     for spec in ENCODING_SWEEP:
         planes = spec.encode(spec.quantize(x))
         density = float(planes.sum()) / (m * k)
         t = _time(faithful(spec), planes, w32, iters=5, rounds=5)
+        # full-train plane replay = the dataflow timed here (docs/ppa.md)
+        e = ppa_model.modeled_matmul_energy_uj(
+            spec.name, m, k, n, spec.num_steps, spec=spec, model=ecm)
         rows.append(dict(encoding=spec.name, T=spec.num_steps,
                          levels=spec.levels, us_per_call=round(t.us, 1),
-                         spikes_per_act=round(density, 3)))
+                         spikes_per_act=round(density, 3),
+                         modeled_energy_uj=round(e, 1)))
         log(f"kernel,encoding={spec.name},T={spec.num_steps},"
             f"levels={spec.levels},{t.us:.1f}us,"
-            f"spikes_per_act={density:.3f}")
+            f"spikes_per_act={density:.3f},modeled_energy_uj={e:.1f}")
     return rows
 
 

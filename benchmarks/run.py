@@ -12,13 +12,14 @@ import time
 
 def main() -> None:
     from benchmarks import (ablation_pooling, kernel_bench,
-                            lm_radix_accuracy, table1_timesteps,
+                            lm_radix_accuracy, ppa_bench, table1_timesteps,
                             table2_convunits, table3_comparison)
     sections = {
         "table1": table1_timesteps.run,
         "table2": table2_convunits.run,
         "table3": table3_comparison.run,
         "kernels": kernel_bench.run,
+        "ppa": ppa_bench.run,
         "lm_radix": lm_radix_accuracy.run,
         "ablation_pooling": ablation_pooling.run,
     }

@@ -9,11 +9,27 @@ The cycle model's two free constants are fitted on these + Table I points
 point and checks the paper's two qualitative claims: latency converges
 (sub-linear speedup from unit duplication — pool/linear units are not
 duplicated) while resources scale ~linearly.
+
+``--check`` turns the printed errors into a CI gate: max latency error,
+max power error and max kLUT error per point must stay within the
+thresholds below (anchored above the measured fit at the time of
+writing: 3.6% / 0.01 W / 0.24 k), and the sub-linear-speedup claim must
+hold.  Exit code = number of violated gates.
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
+
 from repro.core.hwmodel import CostModel
+
+# measured fit at calibration: latency 3.6% (8 units), power 0.01 W,
+# klut 0.24 k — thresholds leave ~25-40% headroom before a model or
+# calibration change trips the gate.
+MAX_LAT_ERR_PCT = 5.0
+MAX_POWER_ERR_W = 0.05
+MAX_KLUT_ERR = 1.0
 
 
 def run(log=print):
@@ -31,7 +47,42 @@ def run(log=print):
     return rows
 
 
-def main():
+def check(log=print) -> int:
+    """Fit-error gate over the Table II reproduction; returns the number
+    of violated thresholds (the CLI exit code)."""
+    rows = run(log=log)
+    lat_err = max(abs(r["err_pct"]) for r in rows)
+    pw_err = max(abs(r["model_w"] - r["paper_w"]) for r in rows)
+    lut_err = max(abs(r["model_klut"] - r["paper_klut"]) for r in rows)
+    speedup = rows[0]["model_us"] / rows[-1]["model_us"]
+    gates = [
+        (lat_err <= MAX_LAT_ERR_PCT,
+         f"max latency err {lat_err:.2f}% <= {MAX_LAT_ERR_PCT}%"),
+        (pw_err <= MAX_POWER_ERR_W,
+         f"max power err {pw_err:.3f}W <= {MAX_POWER_ERR_W}W"),
+        (lut_err <= MAX_KLUT_ERR,
+         f"max klut err {lut_err:.2f}k <= {MAX_KLUT_ERR}k"),
+        (1.0 < speedup < 8.0,
+         f"unit-duplication speedup {speedup:.2f} sub-linear"),
+    ]
+    failures = 0
+    for ok, msg in gates:
+        log(f"check,{'OK' if ok else 'FAILED'},{msg}")
+        failures += not ok
+    log(f"check,{'PASSED' if not failures else 'FAILED'},"
+        f"{failures} failure(s)")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Table II reproduction; --check gates the fit error.")
+    ap.add_argument("--check", action="store_true",
+                    help="assert fit-error thresholds; exit nonzero on "
+                         "violation")
+    args = ap.parse_args(argv)
+    if args.check:
+        sys.exit(min(check(), 1))
     run()
 
 

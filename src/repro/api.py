@@ -28,6 +28,13 @@ data-parallel shard_map, zero steady-state recompiles; DESIGN.md §3).
 the paper-faithful ``mode="snn"`` spike-plane path) that every compiled
 path is bit-exact against.
 
+Don't want to hand-pick the encoding?  :func:`autoconfigure` searches
+the legal (encoding, T, dataflow, units) lattice under accuracy /
+latency / energy constraints using the calibrated hardware model
+(docs/ppa.md), and ``Accelerator.compile(..., auto=...)`` compiles its
+winner directly.  Every compiled executable also reports its modeled
+PPA under ``exe.stats()["ppa"]``.
+
 The shipped specs and their level capacity at ``T = 4`` time steps:
 
 >>> from repro import api
@@ -78,6 +85,7 @@ __all__ = [
     "Executable",
     "convert",
     "oracle",
+    "autoconfigure",
 ]
 
 BACKENDS = ("kernels", "jnp")
@@ -137,6 +145,49 @@ def oracle(
         raise ValueError(f"mode must be 'packed' or 'snn', got {mode!r}")
     spec = _resolve_spec(qnet, encoding)
     return engine._forward(qnet, jnp.asarray(x, jnp.float32), spec, mode)
+
+
+def autoconfigure(net, item_shape, *, calib, accuracy_floor,
+                  latency_slo_us=None, energy_budget_uj=None, **kwargs):
+    """Search the legal (encoding, T, dataflow, units) lattice for a
+    float net under PPA constraints; returns a
+    :class:`~repro.ppa.search.AutoPlan` (winner + Pareto frontier +
+    per-candidate rejection provenance).  Thin facade over
+    :func:`repro.ppa.search.autoconfigure` — see docs/ppa.md for the
+    walkthrough and constraint semantics.
+
+    Args:
+        net: the float ``(static, params)`` pair (conversion format).
+        item_shape: per-item input shape, e.g. ``(H, W, C)``.
+        calib: calibration batch, ``(n,) + item_shape`` floats.
+        accuracy_floor: minimum calibration-batch accuracy (argmax
+            fidelity vs the float reference, or label accuracy with
+            ``labels=``).
+        latency_slo_us: optional modeled per-image latency ceiling.
+        energy_budget_uj: optional modeled per-image energy ceiling.
+        **kwargs: forwarded to the search (``labels``, ``t_range``,
+            ``units``, ``freq_mhz``, ``objective``, ...).
+    """
+    from repro.ppa import search as ppa_search
+
+    return ppa_search.autoconfigure(
+        net, item_shape, calib=calib, accuracy_floor=accuracy_floor,
+        latency_slo_us=latency_slo_us, energy_budget_uj=energy_budget_uj,
+        **kwargs)
+
+
+def _attach_ppa(exe: "Executable") -> "Executable":
+    """Attach the modeled-PPA stats provider (``stats()["ppa"]``) to a
+    freshly compiled executable; nets the hardware model cannot cost
+    (exotic layer kinds / item shapes) are skipped silently — stats
+    simply lack the key."""
+    from repro.ppa import model as ppa_model
+
+    try:
+        provider = ppa_model.stats_provider(exe)
+    except (ValueError, KeyError, TypeError):
+        return exe
+    return exe.attach_stats(provider)
 
 
 class Executable:
@@ -253,8 +304,11 @@ class Executable:
         ``enabled``, the winner-table counters (``hits`` / ``misses`` /
         ``sweeps`` / ``disk_hits``), and one ``layers`` row per
         (bucket, kernel layer) with the strategy each plan baked in
-        (docs/kernels.md §7) — plus any dicts from
-        :meth:`attach_stats` providers."""
+        (docs/kernels.md §7) — plus a ``ppa`` sub-dict with the modeled
+        latency/energy/area of this (encoding, dataflow) pairing on the
+        calibrated hardware model (docs/ppa.md; absent for nets the
+        model cannot cost) — plus any dicts from :meth:`attach_stats`
+        providers."""
         from repro.kernels import autotune as autotune_mod
 
         d = self._cache.stats.as_dict()
@@ -345,6 +399,7 @@ class Accelerator:
         parallel: Optional[int] = None,
         buckets: Optional[Sequence[int]] = None,
         autotune: bool = False,
+        auto: Optional[dict] = None,
     ) -> Executable:
         """Compile ``qnet`` for deployment; returns an :class:`Executable`.
 
@@ -367,6 +422,14 @@ class Accelerator:
         a problem shape pays the sweep; results are bit-identical either
         way.  Inspect the choices via ``Executable.stats()["autotune"]``.
 
+        ``auto=`` hands configuration to the PPA planner: pass a dict of
+        :func:`autoconfigure` keywords (``calib`` + ``accuracy_floor``
+        required) and a *float* ``(static, params)`` pair as the first
+        argument instead of a converted net — the planner searches the
+        encoding/T/dataflow/units lattice, and the winner is converted
+        and compiled (its backend/dataflow supersede this accelerator's;
+        the plan is exposed as ``exe.auto_plan``).  See docs/ppa.md.
+
         Raises:
             ValueError: the encoding does not run on this backend (see
                 the support matrix in ``docs/encodings.md``), the
@@ -374,8 +437,27 @@ class Accelerator:
                 ``kernel_dataflows``, a pool mode in the net is not
                 preserved by the encoding, ``parallel`` is requested off
                 the kernels backend, or an ``encoding`` override
-                contradicts the net's folded multipliers.
+                contradicts the net's folded multipliers; with
+                ``auto=``, an explicit ``dataflow``/``encoding`` (the
+                planner owns those axes) or a search that satisfies no
+                constraint.
         """
+        if auto is not None:
+            if self.dataflow is not None:
+                raise ValueError(
+                    "auto= searches the dataflow axis; leave "
+                    "Accelerator.dataflow=None")
+            if encoding is not None:
+                raise ValueError(
+                    "auto= searches the encoding axis; drop the "
+                    "encoding= override")
+            from repro.ppa import search as ppa_search
+
+            plan = ppa_search.autoconfigure(qnet, input_spec, **dict(auto))
+            exe = plan.compile(parallel=parallel, buckets=buckets,
+                               autotune=autotune)
+            exe.auto_plan = plan
+            return exe
         spec = _resolve_spec(qnet, encoding)
         if self.backend not in spec.backends:
             raise ValueError(
@@ -397,5 +479,6 @@ class Accelerator:
         item = tuple(int(d) for d in input_spec)
         if buckets is None:
             buckets = engine.DEFAULT_BUCKETS
-        return Executable(qnet, item, spec, self.backend, dataflow,
-                          parallel, buckets, autotune=autotune)
+        return _attach_ppa(Executable(qnet, item, spec, self.backend,
+                                      dataflow, parallel, buckets,
+                                      autotune=autotune))

@@ -62,6 +62,7 @@ class RooflineReport:
     raw_flops: Optional[float] = None
     raw_bytes: Optional[float] = None
     memory_per_device: Optional[dict] = None
+    int8: bool = False                # compute term used the int8 peak
 
     @property
     def step_time_lb(self) -> float:
@@ -83,7 +84,8 @@ class RooflineReport:
 
 
 def roofline(arch: str, cell: str, mesh_name: str, chips: int,
-             compiled, model_flops: float, hw: HW = HW()) -> RooflineReport:
+             compiled, model_flops: float, hw: HW = HW(),
+             int8: bool = False) -> RooflineReport:
     cost = hlo_analysis.analyze(compiled.as_text())
     ca = compat.cost_analysis(compiled) or {}
     mem = compiled.memory_analysis()
@@ -95,7 +97,8 @@ def roofline(arch: str, cell: str, mesh_name: str, chips: int,
             temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
             alias_bytes=getattr(mem, "alias_size_in_bytes", 0),
         )
-    t_c = cost.flops / hw.peak_flops
+    peak = hw.peak_flops_int8 if int8 else hw.peak_flops
+    t_c = cost.flops / peak
     t_m = cost.bytes / hw.hbm_bw
     t_l = cost.collective_bytes / hw.link_bw
     terms = {"compute": t_c, "memory": t_m, "collective": t_l}
@@ -110,7 +113,7 @@ def roofline(arch: str, cell: str, mesh_name: str, chips: int,
         bottleneck=bottleneck, model_flops=model_flops,
         useful_ratio=useful,
         raw_flops=ca.get("flops"), raw_bytes=ca.get("bytes accessed"),
-        memory_per_device=mem_d,
+        memory_per_device=mem_d, int8=int8,
     )
 
 

@@ -130,6 +130,32 @@ ARCHS = {
 }
 
 
+def build_float_net(
+    arch: str,
+    *,
+    smoke: bool = False,
+    pool_mode: str = "or",
+    calib_batch: int = 4,
+    seed: int = 0,
+):
+    """(static, params, item shape, synthetic calibration batch) for an
+    arch id — the pre-conversion float net, which is what the PPA
+    planner needs (``--auto`` re-quantizes it once per candidate
+    encoding)."""
+    spec = ARCHS[arch.replace("-", "_")]
+    maker = importlib.import_module(spec.module)
+    preset = spec.smoke if smoke else spec.full
+    if isinstance(preset, str):
+        preset = getattr(maker, preset)
+    kwargs = dict(preset)
+    static, params, input_hw = maker.make(
+        key=jax.random.PRNGKey(seed), pool_mode=pool_mode, **kwargs)
+    rng = np.random.default_rng(seed)
+    calib = jnp.asarray(rng.uniform(0, 1, (calib_batch,) + tuple(input_hw)),
+                        jnp.float32)
+    return static, params, tuple(input_hw), calib
+
+
 def build_qnet(
     arch: str,
     *,
@@ -148,20 +174,12 @@ def build_qnet(
     so a contradicting (num_steps, encoding) pair fails loudly there."""
     if encoding is None and num_steps is None:
         num_steps = 4
-    spec = ARCHS[arch.replace("-", "_")]
-    maker = importlib.import_module(spec.module)
-    preset = spec.smoke if smoke else spec.full
-    if isinstance(preset, str):
-        preset = getattr(maker, preset)
-    kwargs = dict(preset)
-    static, params, input_hw = maker.make(
-        key=jax.random.PRNGKey(seed), pool_mode=pool_mode, **kwargs)
-    rng = np.random.default_rng(seed)
-    calib = jnp.asarray(rng.uniform(0, 1, (calib_batch,) + tuple(input_hw)),
-                        jnp.float32)
+    static, params, input_hw, calib = build_float_net(
+        arch, smoke=smoke, pool_mode=pool_mode, calib_batch=calib_batch,
+        seed=seed)
     qnet = conversion.convert(static, params, calib, num_steps=num_steps,
                               encoding=encoding, weight_bits=weight_bits)
-    return qnet, tuple(input_hw)
+    return qnet, input_hw
 
 
 # ---------------------------------------------------------------------------
@@ -592,12 +610,15 @@ def _parse_args(argv: Optional[Sequence[str]] = None) -> argparse.Namespace:
     ap.add_argument("--pool-mode", default="or", choices=["or", "avg", "max"],
                     help="rate needs avg; ttfs needs avg/max (the spec "
                          "validates loudly)")
-    ap.add_argument("--num-steps", type=int, default=4,
-                    help="total time steps T (phase: all periods)")
-    ap.add_argument("--encoding", default="radix", choices=sorted(ENCODINGS),
-                    help="target neural encoding (docs/encodings.md)")
-    ap.add_argument("--periods", type=int, default=1,
-                    help="phase coding: repeated periods P (T/P phases)")
+    ap.add_argument("--num-steps", type=int, default=None,
+                    help="total time steps T, default 4 (phase: all "
+                         "periods)")
+    ap.add_argument("--encoding", default=None, choices=sorted(ENCODINGS),
+                    help="target neural encoding (docs/encodings.md); "
+                         "default radix")
+    ap.add_argument("--periods", type=int, default=None,
+                    help="phase coding: repeated periods P (T/P phases); "
+                         "default 1")
     ap.add_argument("--backend", default=None, choices=["kernels", "jnp"],
                     help="default: kernels when the encoding supports it, "
                          "else jnp")
@@ -627,7 +648,51 @@ def _parse_args(argv: Optional[Sequence[str]] = None) -> argparse.Namespace:
                          "before quarantine")
     ap.add_argument("--data-parallel", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--auto", action="store_true",
+                    help="let the PPA planner pick encoding/T/dataflow/"
+                         "units under the constraints below (docs/ppa.md)")
+    ap.add_argument("--accuracy-floor", type=float, default=None,
+                    help="--auto: minimum calibration-batch fidelity vs "
+                         "the float reference (default 0.9)")
+    ap.add_argument("--latency-slo", type=float, default=None,
+                    help="--auto: modeled per-image latency ceiling (us)")
+    ap.add_argument("--energy-budget", type=float, default=None,
+                    help="--auto: modeled per-image energy ceiling (uJ)")
     args = ap.parse_args(argv)
+
+    if args.auto:
+        for flag, val in (("--encoding", args.encoding),
+                          ("--dataflow", args.dataflow),
+                          ("--backend", args.backend),
+                          ("--num-steps", args.num_steps),
+                          ("--periods", args.periods)):
+            if val is not None:
+                ap.error(f"{flag} conflicts with --auto (the planner "
+                         "owns that axis)")
+        if args.accuracy_floor is None:
+            args.accuracy_floor = 0.9
+        if not 0.0 < args.accuracy_floor <= 1.0:
+            ap.error(f"--accuracy-floor must be in (0, 1], got "
+                     f"{args.accuracy_floor}")
+        if args.latency_slo is not None and args.latency_slo <= 0:
+            ap.error(f"--latency-slo must be positive, got "
+                     f"{args.latency_slo}")
+        if args.energy_budget is not None and args.energy_budget <= 0:
+            ap.error(f"--energy-budget must be positive, got "
+                     f"{args.energy_budget}")
+    else:
+        for flag, val in (("--accuracy-floor", args.accuracy_floor),
+                          ("--latency-slo", args.latency_slo),
+                          ("--energy-budget", args.energy_budget)):
+            if val is not None:
+                ap.error(f"{flag} is a planner constraint and requires "
+                         "--auto")
+    if args.encoding is None:
+        args.encoding = "radix"
+    if args.num_steps is None:
+        args.num_steps = 4
+    if args.periods is None:
+        args.periods = 1
 
     if args.num_steps <= 0:
         ap.error(f"--num-steps must be positive, got {args.num_steps}")
@@ -662,16 +727,30 @@ def _parse_args(argv: Optional[Sequence[str]] = None) -> argparse.Namespace:
 def main(argv: Optional[Sequence[str]] = None) -> None:
     args = _parse_args(argv)
     buckets = args.bucket_ladder
-    spec = make_encoding(args.encoding, args.num_steps,
-                         periods=args.periods)
-    backend = args.backend or ("kernels" if "kernels" in spec.backends
-                               else "jnp")
-    qnet, item = build_qnet(args.arch, smoke=args.smoke,
-                            pool_mode=args.pool_mode,
-                            encoding=spec, seed=args.seed)
-    server = CNNServer(qnet, item, buckets=buckets, backend=backend,
-                       dataflow=args.dataflow,
-                       data_parallel=args.data_parallel)
+    if args.auto:
+        static, params, item, calib = build_float_net(
+            args.arch, smoke=args.smoke, pool_mode=args.pool_mode,
+            calib_batch=64, seed=args.seed)
+        plan = api.autoconfigure(
+            (static, params), item, calib=calib,
+            accuracy_floor=args.accuracy_floor,
+            latency_slo_us=args.latency_slo,
+            energy_budget_uj=args.energy_budget)
+        print("[serve_cnn] " + plan.summary().replace("\n", "\n[serve_cnn] "))
+        exe = plan.compile(buckets=buckets, parallel=args.data_parallel)
+        server = CNNServer(exe.qnet, item, executable=exe)
+        spec, backend = exe.encoding, exe.backend
+    else:
+        spec = make_encoding(args.encoding, args.num_steps,
+                             periods=args.periods)
+        backend = args.backend or ("kernels" if "kernels" in spec.backends
+                                   else "jnp")
+        qnet, item = build_qnet(args.arch, smoke=args.smoke,
+                                pool_mode=args.pool_mode,
+                                encoding=spec, seed=args.seed)
+        server = CNNServer(qnet, item, buckets=buckets, backend=backend,
+                           dataflow=args.dataflow,
+                           data_parallel=args.data_parallel)
     print(f"[serve_cnn] {args.arch} {spec} backend={backend} item={item} "
           f"buckets={buckets} devices={len(jax.devices())}")
     t0 = time.monotonic()

@@ -115,6 +115,14 @@ def test_bench_json_carries_tuned_rows():
         assert rows[name]["tuned_config"] is not None, (
             f"{name} must record the winning KernelConfig")
         assert rows[name]["spikes_per_act"] is not None
+    # the modeled-energy axis (docs/ppa.md §2): every row carries it,
+    # null only for rows with no hardware analogue
+    for r in rows.values():
+        assert "modeled_energy_uj" in r, r["name"]
+    assert rows["dense_f32"]["modeled_energy_uj"] is None
+    assert rows["radix_fused"]["modeled_energy_uj"] is not None
+    for enc_row in payload["encoding_latency"]:
+        assert enc_row["modeled_energy_uj"] is not None, enc_row
 
 
 def test_hyp_fallback_is_deterministic():
@@ -202,6 +210,44 @@ def test_serving_guide_matches_code_surface():
     for field in _dc.fields(resilience.ResilienceStats):
         assert f"`{field.name}`" in design, (
             f"DESIGN.md failure-mode table is missing {field.name}")
+
+
+def test_ppa_guide_is_cross_linked():
+    """docs/ppa.md (the planner guide) must be discoverable from the
+    README and DESIGN.md §9, and is itself in DOC_FILES so its
+    intra-repo links are drift-checked."""
+    assert "docs/ppa.md" in (REPO / "README.md").read_text()
+    design = (REPO / "DESIGN.md").read_text()
+    assert "## §9 PPA planner" in design and "docs/ppa.md" in design
+    assert (REPO / "docs" / "ppa.md") in DOC_FILES
+
+
+def test_ppa_guide_matches_code_surface():
+    """The guide documents real symbols: every backticked ``src/...py``
+    path exists, the stats keys it promises are the provider's, and the
+    constraint kwargs it names are autoconfigure's signature."""
+    text = (REPO / "docs" / "ppa.md").read_text()
+    for rel in re.findall(r"`(src/[\w/]+\.py)`", text):
+        assert (REPO / rel).exists(), f"docs/ppa.md names missing {rel}"
+    import inspect
+    from repro.ppa import search
+    params = inspect.signature(search.autoconfigure).parameters
+    for kwarg in ("accuracy_floor", "latency_slo_us", "energy_budget_uj",
+                  "t_range", "units", "objective", "labels"):
+        assert kwarg in params, kwarg
+        if kwarg in ("accuracy_floor", "latency_slo_us",
+                     "energy_budget_uj"):
+            assert f"`{kwarg}" in text, (
+                f"docs/ppa.md constraint list is missing {kwarg}")
+    # the stats()["ppa"] keys the surface table promises
+    for key in ("latency_us", "energy_uj", "power_w", "area_klut",
+                "area_kff"):
+        assert f"`{key}`" in text, f"docs/ppa.md stats keys missing {key}"
+    import dataclasses as _dc
+    from repro.ppa.model import PPAReport
+    report_fields = {f.name for f in _dc.fields(PPAReport)}
+    assert {"latency_us", "energy_uj", "power_w", "klut", "kff",
+            "effective_steps"} <= report_fields
 
 
 def test_support_matrix_matches_spec_declarations():

@@ -1,0 +1,219 @@
+"""EncodingCostModel: effective-steps algebra, table anchoring, ranks.
+
+The load-bearing invariant (docs/ppa.md §2): radix at
+``dataflow="bitserial"`` must reproduce the calibrated CostModel
+*exactly* — the encoding extension is anchored to Tables I-III through
+that degenerate point, and everything else (fused single-pass, TTFS
+occupancy scaling, phase period algebra) is priced relative to it.
+"""
+
+import json
+import pathlib
+import types
+
+import pytest
+
+from repro.core import conversion, hwmodel
+from repro.core.encoding import (PhaseEncoding, RadixEncoding, RateEncoding,
+                                 TTFSEncoding)
+from repro.launch import serve_cnn
+from repro.ppa import model as M
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def ecm():
+    return M.EncodingCostModel()
+
+
+# ---------------------------------------------------------------------------
+# effective-steps algebra
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec,dataflow,spikes,expect", [
+    (RadixEncoding(4), "fused", None, 1.0),       # one packed pass
+    (RadixEncoding(4), "bitserial", None, 4.0),   # the paper's T passes
+    (RadixEncoding(4), None, None, 4.0),          # jnp plane replay
+    (PhaseEncoding(8, periods=2), "fused", None, 2.0),      # one per period
+    (PhaseEncoding(8, periods=2), "bitserial", None, 8.0),  # P x K
+    (PhaseEncoding(8, periods=2), None, None, 8.0),
+    (RateEncoding(15), None, None, 15.0),         # full T-step train
+    (TTFSEncoding(4), "bitserial", 0.5, 2.0),     # occupancy discount
+    (TTFSEncoding(4), "bitserial", 0.0, 1.0),     # floor: one pass/period
+    (RadixEncoding(4), "bitserial", 2.0, 4.0),    # occupancy clamps at 1
+])
+def test_effective_steps_algebra(ecm, spec, dataflow, spikes, expect):
+    assert ecm.effective_steps(spec, dataflow, spikes) == expect
+
+
+def test_effective_steps_rejects_unknown_dataflow(ecm):
+    with pytest.raises(ValueError, match="dataflow"):
+        ecm.effective_steps(RadixEncoding(4), "systolic")
+
+
+def test_radix_bitserial_reproduces_calibrated_model(ecm):
+    """The degenerate point: radix/bitserial == CostModel.latency_us."""
+    net = hwmodel.network_layers(*hwmodel.LENET5)
+    for t in (3, 4, 5, 6):
+        cfg = hwmodel.HwConfig(n_conv_units=2)
+        rep = ecm.network_report(net, RadixEncoding(t),
+                                 dataflow="bitserial", cfg=cfg)
+        assert rep.latency_us == pytest.approx(
+            ecm.base.latency_us(net, cfg, t), rel=1e-9), t
+        assert rep.effective_steps == t
+
+
+def test_report_energy_is_power_times_latency(ecm):
+    net = hwmodel.network_layers(*hwmodel.LENET5)
+    rep = ecm.network_report(net, RadixEncoding(4), dataflow="fused")
+    assert rep.energy_uj == pytest.approx(rep.power_w * rep.latency_us)
+    assert rep.fps == pytest.approx(1e6 / rep.latency_us)
+    d = rep.to_dict()
+    assert d["encoding"] == "radix" and d["dataflow"] == "fused"
+
+
+def test_fused_beats_bitserial_beats_replay(ecm):
+    """Latency ordering the plane algebra implies for radix T=4."""
+    net = hwmodel.network_layers(*hwmodel.FANG_CNN)
+    spec = RadixEncoding(4)
+    lat = {df: ecm.network_report(net, spec, dataflow=df).latency_us
+           for df in ("fused", "bitserial", None)}
+    assert lat["fused"] < lat["bitserial"]
+    assert lat["bitserial"] == pytest.approx(lat[None])  # both 4 passes
+
+
+# ---------------------------------------------------------------------------
+# anchoring: paper tables + measured kernel ranks
+# ---------------------------------------------------------------------------
+
+
+def test_table_fit_within_bench_thresholds(ecm):
+    from benchmarks.ppa_bench import THRESHOLDS
+    fit = ecm.table_fit()
+    assert set(fit) == set(THRESHOLDS)
+    for key, limit in THRESHOLDS.items():
+        assert fit[key] <= limit, (key, fit[key], limit)
+
+
+def test_rank_check_on_committed_bench(ecm):
+    payload = json.loads((_ROOT / "BENCH_kernels.json").read_text())
+    rank = ecm.rank_check(payload)
+    assert rank["agree"], rank
+    assert rank["kendall_tau"] == 1.0
+    assert {g["group"] for g in rank["groups"]} == {"radix", "ttfs"}
+
+
+def test_rank_check_missing_row_raises(ecm):
+    payload = json.loads((_ROOT / "BENCH_kernels.json").read_text())
+    payload["rows"] = [r for r in payload["rows"]
+                       if r["name"] != "ttfs_bitserial_sparse"]
+    with pytest.raises(KeyError, match="ttfs_bitserial_sparse"):
+        ecm.rank_check(payload)
+
+
+def test_matmul_report_scales_with_rows(ecm):
+    spec = RadixEncoding(4)
+    r1 = ecm.matmul_report(64, 256, 128, spec, dataflow="bitserial")
+    r2 = ecm.matmul_report(128, 256, 128, spec, dataflow="bitserial")
+    # cycles = m * per_row + gamma: doubling m roughly doubles work
+    assert r2.cycles - ecm.base.gamma == pytest.approx(
+        2 * (r1.cycles - ecm.base.gamma))
+
+
+def test_modeled_matmul_energy_rows(ecm):
+    kw = dict(model=ecm)
+    assert M.modeled_matmul_energy_uj("dense_f32", 64, 256, 128, 4,
+                                      **kw) is None
+    e_fused = M.modeled_matmul_energy_uj("radix_fused", 64, 256, 128, 4, **kw)
+    e_bs = M.modeled_matmul_energy_uj("radix_bitserial_xla", 64, 256, 128, 4,
+                                      **kw)
+    assert e_fused is not None and 0 < e_fused < e_bs
+    # occupancy-discounted ttfs sparse sits below dense bitserial
+    e_sparse = M.modeled_matmul_energy_uj(
+        "ttfs_bitserial_sparse", 64, 256, 128, 4, spikes_per_act=0.5, **kw)
+    e_dense = M.modeled_matmul_energy_uj(
+        "ttfs_bitserial_xla", 64, 256, 128, 4, **kw)
+    assert e_sparse < e_dense
+    with pytest.raises(KeyError, match="mystery"):
+        M.modeled_matmul_energy_uj("mystery", 64, 256, 128, 4, **kw)
+    # spec= override: the encoding-latency sweep's full-train replay
+    e_rate = M.modeled_matmul_energy_uj(
+        "rate", 64, 256, 128, 15, spec=RateEncoding(15), **kw)
+    assert e_rate > e_bs
+
+
+def test_kernel_row_model_covers_committed_rows():
+    payload = json.loads((_ROOT / "BENCH_kernels.json").read_text())
+    for row in payload["rows"]:
+        assert row["name"] in M.KERNEL_ROW_MODEL, row["name"]
+
+
+# ---------------------------------------------------------------------------
+# converted-net bridge + stats provider
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lenet_qnet():
+    static, params, item, calib = serve_cnn.build_float_net(
+        "lenet5", smoke=True, pool_mode="avg", calib_batch=8, seed=0)
+    return conversion.convert(static, params, calib,
+                              encoding=RadixEncoding(4)), item
+
+
+def test_layers_from_qnet_matches_hwmodel_bridge(lenet_qnet):
+    qnet, item = lenet_qnet
+    layers = M.layers_from_qnet(qnet, item)
+    # same structural walk as hwmodel.network_layers over the rebuilt arch
+    ref = hwmodel.network_layers(M.hw_arch_from_qnet(qnet), item)
+    assert layers == ref
+    kinds = [ls.kind for ls in layers]
+    assert kinds.count("conv") == 3 and kinds.count("linear") == 3
+
+
+def test_layers_from_qnet_flat_item_shape(lenet_qnet):
+    qnet, _ = lenet_qnet
+    with pytest.raises(ValueError, match="item shape"):
+        M.layers_from_qnet(qnet, (32, 32))       # 2-D is ambiguous
+    # linear-only nets pass a flat (F,) shape
+    fake = types.SimpleNamespace(
+        static=[("linear", {})],
+        qlayers=[{"w_q": qnet.qlayers[-1]["w_q"]}])
+    f_in = int(qnet.qlayers[-1]["w_q"].shape[0])
+    layers = M.layers_from_qnet(fake, (f_in,))
+    assert layers[0].kind == "linear" and layers[0].c_in == f_in
+
+
+def test_hw_arch_rejects_unknown_layer_kind():
+    fake = types.SimpleNamespace(static=[("norm", {})], qlayers=[None])
+    with pytest.raises(ValueError, match="norm"):
+        M.hw_arch_from_qnet(fake)
+
+
+def test_stats_provider_reports_modeled_ppa(lenet_qnet):
+    qnet, item = lenet_qnet
+    exe = types.SimpleNamespace(qnet=qnet, item_shape=item,
+                                encoding=RadixEncoding(4), dataflow="fused")
+    provide = M.stats_provider(exe)
+    stats = provide()
+    ppa = stats["ppa"]
+    assert set(ppa) >= {"latency_us", "energy_uj", "power_w", "area_klut",
+                        "area_kff", "cycles", "effective_steps", "units",
+                        "freq_mhz", "dataflow"}
+    assert ppa["effective_steps"] == 1.0 and ppa["dataflow"] == "fused"
+    assert ppa["energy_uj"] == pytest.approx(
+        ppa["power_w"] * ppa["latency_us"])
+    # cached + defensive copy: mutating the returned dict is harmless
+    lat = ppa["latency_us"]
+    stats["ppa"]["latency_us"] = -1
+    assert provide()["ppa"]["latency_us"] == lat
+
+
+def test_stats_provider_raises_at_attach_for_unmodelable_net():
+    fake_exe = types.SimpleNamespace(
+        qnet=types.SimpleNamespace(static=[("norm", {})], qlayers=[None]),
+        item_shape=(8, 8, 1), encoding=RadixEncoding(4), dataflow=None)
+    with pytest.raises(ValueError):
+        M.stats_provider(fake_exe)
