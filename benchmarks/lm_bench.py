@@ -1,0 +1,163 @@
+"""LM serving throughput on the compiled radix plan surface (docs/lm.md).
+
+Times the two serving phases of an :class:`repro.api.LMExecutable`
+(``Accelerator.compile`` over an ``(params, ArchConfig)`` pair) on the
+reduced gemma-family smoke config:
+
+* **prefill** — one bucketed plan call per sequence bucket (prompts
+  sized exactly to the bucket, so the row isolates the plan, not the
+  padding), reported as prompt tokens/s;
+* **decode** — a greedy autoregressive loop over the single decode-step
+  plan and the packed radix KV cache, reported as generated tokens/s.
+
+Every row carries the plan-cache counters proving the serving contract:
+``steady_state_recompiles`` must be 0 — all compilation happened at
+warmup.  The ``accuracy`` section (logit rel-err vs the float oracle
+per T — the fidelity axis of the same serving path) is produced by
+benchmarks/lm_radix_accuracy.py; this bench embeds a fresh copy so one
+``python -m benchmarks.lm_bench`` writes the complete ``BENCH_lm.json``
+at the repo root, machine-readable across PRs like BENCH_kernels.json.
+The accuracy section's CI gate lives in lm_radix_accuracy ``--check``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.configs import get_config
+from repro.lm import model as M
+
+from benchmarks import lm_radix_accuracy
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_lm.json"
+
+
+def _time(fn, iters=4, rounds=3):
+    """Min/mean/std (seconds per call) over rounds; fn is a zero-arg
+    thunk returning a jax array (or pytree leaf) to block on."""
+    jax.block_until_ready(fn())        # warmup outside timing
+    samples = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) / iters)
+    return (min(samples), statistics.fmean(samples),
+            statistics.pstdev(samples))
+
+
+def run(log=print, json_path=_JSON_PATH, batch=2, max_len=48,
+        buckets=(8, 16, 32), T=4, decode_tokens=16, backend="kernels",
+        dataflow="bitserial", autotune=False):
+    cfg = dataclasses.replace(get_config("gemma_2b", smoke=True),
+                              radix_steps=T)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    if backend != "kernels":
+        dataflow = None
+    exe = api.Accelerator(backend=backend, dataflow=dataflow).compile(
+        (params, cfg), (batch, max_len), buckets=buckets, autotune=autotune)
+    exe.warmup()
+    log(f"lm,exe={exe!r}")
+    rng = np.random.default_rng(0)
+    rows = []
+
+    for b in exe.buckets:
+        tok = rng.integers(0, cfg.vocab, (batch, b))
+        t_min, t_mean, t_std = _time(lambda: exe.prefill(tok)["logits"])
+        tok_s = batch * b / t_min
+        rows.append({"phase": "prefill", "bucket": b,
+                     "ms_per_call": round(t_min * 1e3, 2),
+                     "ms_mean": round(t_mean * 1e3, 2),
+                     "ms_std": round(t_std * 1e3, 2),
+                     "tok_s": round(tok_s, 1)})
+        log(f"lm,prefill,bucket={b},{t_min * 1e3:.2f}ms"
+            f"(+-{t_std * 1e3:.2f}),{tok_s:.0f} tok/s")
+
+    # decode: greedy loop from the top bucket; each timed call replays
+    # the same decode_tokens steps from the same prefill state
+    top = exe.buckets[-1]
+    assert top + decode_tokens <= exe.max_len, \
+        "decode window must fit the compiled cache"
+    prompt = rng.integers(0, cfg.vocab, (batch, top))
+    state0 = exe.prefill(prompt)
+
+    def decode_loop():
+        state = dict(state0)
+        for _ in range(decode_tokens):
+            nxt = jnp.argmax(state["logits"], axis=-1).astype(jnp.int32)
+            state = exe.decode(state, nxt[:, None])
+        return state["logits"]
+
+    t_min, t_mean, t_std = _time(decode_loop)
+    dec_tok_s = batch * decode_tokens / t_min
+    rows.append({"phase": "decode", "bucket": top,
+                 "new_tokens": decode_tokens,
+                 "ms_per_token": round(t_min * 1e3 / decode_tokens, 2),
+                 "ms_mean": round(t_mean * 1e3 / decode_tokens, 2),
+                 "ms_std": round(t_std * 1e3 / decode_tokens, 2),
+                 "tok_s": round(dec_tok_s, 1)})
+    log(f"lm,decode,from={top},{t_min * 1e3 / decode_tokens:.2f}ms/tok,"
+        f"{dec_tok_s:.0f} tok/s")
+
+    stats = exe.stats()
+    steady = stats["compiles"] - (len(exe.buckets) + 1)
+    log(f"lm,cache,compiles={stats['compiles']},"
+        f"steady_state_recompiles={steady},executions={stats['executions']}")
+    assert steady == 0, "LM serving recompiled on the hot path"
+
+    accuracy = lm_radix_accuracy.compute_rows(log)
+    payload_sections = {
+        "bench": "lm",
+        "config": {"arch": cfg.name, "T": T, "batch": batch,
+                   "max_len": max_len, "seq_buckets": list(exe.buckets),
+                   "backend": backend, "dataflow": exe.dataflow,
+                   "autotune": bool(autotune),
+                   "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                   "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+                   "backend_platform": jax.default_backend()},
+        "serving": rows,
+        "cache": {"compiles": stats["compiles"],
+                  "steady_state_recompiles": steady,
+                  "autotuned_layers": len(stats["autotune"]["layers"])},
+        "accuracy": accuracy,
+        "accuracy_config": {"arch": "gemma-2b-smoke",
+                            "T_sweep": lm_radix_accuracy.T_SWEEP,
+                            "prompt": [4, 17]},
+    }
+    if json_path is not None:
+        lm_radix_accuracy.update_bench_json(json_path, payload_sections,
+                                            log=log)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="LM serving throughput bench (writes BENCH_lm.json; "
+                    "the accuracy gate lives in lm_radix_accuracy "
+                    "--check).")
+    ap.add_argument("--json", type=pathlib.Path, default=_JSON_PATH)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--num-steps", type=int, default=4)
+    ap.add_argument("--decode-tokens", type=int, default=16)
+    ap.add_argument("--backend", default="kernels",
+                    choices=["kernels", "jnp"])
+    ap.add_argument("--autotune", action="store_true")
+    args = ap.parse_args(argv)
+    run(json_path=args.json, batch=args.batch, max_len=args.max_len,
+        T=args.num_steps, decode_tokens=args.decode_tokens,
+        backend=args.backend, autotune=args.autotune)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,47 +2,177 @@
 
 The paper's accuracy-vs-time-steps trade-off, measured on the LM serving
 path: greedy-decode agreement and logit error between the radix-quantized
-server (RadixQuantizedLinear + radix KV cache) and the exact bf16 server,
-for T = 2..8 on a reduced gemma-family model.  Mirrors Table I's shape:
-fidelity rises with T and saturates around T ~ 6.
+server (RadixQuantizedLinear + radix KV cache) and the exact float
+server, for T = 2..8 on a reduced gemma-family model.  Mirrors Table I's
+shape: fidelity rises with T and saturates around T ~ 6.
+
+Structured rows land in the ``accuracy`` section of ``BENCH_lm.json``
+at the repo root (benchmarks/lm_bench.py owns the serving-throughput
+sections of the same file).  ``--check`` is the CI accuracy gate
+(docs/lm.md §5), the fidelity twin of kernel_bench's perf gate:
+
+* **monotone improvement** — logit relative error must not increase
+  with T (within ``--tolerance`` relative slack, default
+  ``$REPRO_BENCH_TOL`` or 0.35), and the largest-T error must beat the
+  smallest-T error by 2x: the paper's Table I shape, re-verified per CI
+  run rather than trusted from the committed file;
+* **argmax agreement floor** — greedy-decode agreement with the float
+  oracle at T >= 4 must reach ``--agree-floor`` (default
+  ``$REPRO_LM_AGREE_FLOOR`` or 0.75);
+* **baseline drift** — each fresh row must match the committed
+  BENCH_lm.json row within the tolerance (the run is deterministic:
+  fixed seeds, fixed reduction order).
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import os
+import pathlib
+import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.lm import model as M
 
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_lm.json"
 
-def run(log=print):
+T_SWEEP = (2, 3, 4, 5, 6, 8)
+
+
+def update_bench_json(json_path, sections: dict, log=print) -> None:
+    """Read-modify-write sections of BENCH_lm.json: the accuracy bench
+    and the serving bench (lm_bench.py) share the file, so each updates
+    only its own keys and preserves the other's."""
+    path = pathlib.Path(json_path)
+    payload = {"bench": "lm"}
+    if path.exists():
+        payload = json.loads(path.read_text())
+    payload.update(sections)
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    log(f"lm_radix,json={path}")
+
+
+def compute_rows(log=print):
+    """The per-T fidelity rows (deterministic: fixed seeds/model)."""
     base = get_config("gemma_2b", smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), base)
     tok = jax.random.randint(jax.random.PRNGKey(1), (4, 17), 0, base.vocab)
     batch = {"tokens": tok}
     exact_cfg = dataclasses.replace(base, quant="none")
     logits_exact, _, _ = M.forward_train(params, batch, exact_cfg, None)
+    oracle = logits_exact[:, -1]
     rows = []
-    for T in (2, 3, 4, 5, 6, 8):
+    for T in T_SWEEP:
         cfg = dataclasses.replace(base, quant="radix", radix_steps=T)
         qparams = M.radixify_params(params, cfg)
-        last, caches = M.prefill(qparams, batch, cfg, None, max_len=24)
-        rel = float(jnp.linalg.norm(last - logits_exact[:, -1]) /
-                    jnp.linalg.norm(logits_exact[:, -1]))
-        agree = float((last.argmax(-1) == logits_exact[:, -1].argmax(-1)).mean())
-        rows.append(dict(T=T, logit_rel_err=rel, argmax_agree=agree))
+        last, _ = M.prefill(qparams, batch, cfg, None, max_len=24)
+        rel = float(jnp.linalg.norm(last - oracle) / jnp.linalg.norm(oracle))
+        agree = float((last.argmax(-1) == oracle.argmax(-1)).mean())
+        rows.append(dict(T=T, logit_rel_err=round(rel, 4),
+                         argmax_agree=round(agree, 4)))
         log(f"lm_radix,T={T},logit_rel_err={rel:.4f},argmax_agree={agree:.2f}")
     errs = [r["logit_rel_err"] for r in rows]
-    log(f"lm_radix,monotone_improvement={all(b <= a for a, b in zip(errs, errs[1:]))}")
+    log(f"lm_radix,monotone_improvement="
+        f"{all(b <= a for a, b in zip(errs, errs[1:]))}")
     return rows
 
 
-def main():
-    run()
+def run(log=print, json_path=_JSON_PATH):
+    """Compute the rows and (json_path permitting) refresh the
+    ``accuracy`` section of BENCH_lm.json."""
+    rows = compute_rows(log)
+    if json_path is not None:
+        update_bench_json(json_path, {
+            "accuracy": rows,
+            "accuracy_config": {"arch": "gemma-2b-smoke", "T_sweep": T_SWEEP,
+                                "prompt": [4, 17]},
+        }, log=log)
+    return rows
+
+
+def check(json_path=_JSON_PATH, tolerance=None, agree_floor=None,
+          log=print) -> int:
+    """The CI accuracy gate (see module docstring); returns the number
+    of failed checks (the CLI exit code)."""
+    if tolerance is None:
+        tolerance = float(os.environ.get("REPRO_BENCH_TOL", "0.35"))
+    if agree_floor is None:
+        agree_floor = float(os.environ.get("REPRO_LM_AGREE_FLOOR", "0.75"))
+    committed = {r["T"]: r for r in
+                 json.loads(pathlib.Path(json_path).read_text())["accuracy"]}
+    rows = compute_rows(log)
+    failures = 0
+
+    errs = [r["logit_rel_err"] for r in rows]
+    for prev, row in zip(rows, rows[1:]):
+        limit = prev["logit_rel_err"] * (1.0 + tolerance)
+        ok = row["logit_rel_err"] <= limit
+        log(f"check,monotone,T={prev['T']}->{row['T']},"
+            f"err={row['logit_rel_err']:.4f},limit={limit:.4f},"
+            f"{'OK' if ok else 'REGRESSED'}")
+        failures += not ok
+    shape_ok = errs[-1] <= errs[0] * 0.5
+    log(f"check,table1_shape,err@T={rows[-1]['T']}={errs[-1]:.4f},"
+        f"limit={errs[0] * 0.5:.4f},{'OK' if shape_ok else 'REGRESSED'}")
+    failures += not shape_ok
+
+    for row in rows:
+        if row["T"] < 4:
+            continue
+        ok = row["argmax_agree"] >= agree_floor
+        log(f"check,agree,T={row['T']},agree={row['argmax_agree']:.2f},"
+            f"floor={agree_floor},{'OK' if ok else 'REGRESSED'}")
+        failures += not ok
+
+    for row in rows:
+        base = committed.get(row["T"])
+        if base is None:
+            log(f"check,baseline,T={row['T']},MISSING from {json_path}")
+            failures += 1
+            continue
+        drift = abs(row["logit_rel_err"] - base["logit_rel_err"])
+        limit = base["logit_rel_err"] * tolerance + 0.01
+        ok = drift <= limit
+        log(f"check,baseline,T={row['T']},drift={drift:.4f},"
+            f"limit={limit:.4f},{'OK' if ok else 'DRIFTED'}")
+        failures += not ok
+
+    if failures:
+        log(f"check,FAILED,{failures} accuracy check(s) failed (override "
+            f"tolerance via REPRO_BENCH_TOL / --tolerance, the agreement "
+            f"floor via REPRO_LM_AGREE_FLOOR / --agree-floor; regenerate "
+            f"BENCH_lm.json if a fidelity change is intended)")
+    else:
+        log(f"check,PASSED,accuracy gate at tolerance={tolerance}, "
+            f"agree_floor={agree_floor}")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Radix-LM fidelity vs T (updates the accuracy section "
+                    "of BENCH_lm.json); --check gates the Table I shape "
+                    "against the committed baseline.")
+    ap.add_argument("--check", action="store_true",
+                    help="gate instead of rewriting; exit nonzero on a "
+                         "fidelity regression")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="relative slack (default: $REPRO_BENCH_TOL or "
+                         "0.35)")
+    ap.add_argument("--agree-floor", type=float, default=None,
+                    help="greedy argmax agreement floor at T >= 4 "
+                         "(default: $REPRO_LM_AGREE_FLOOR or 0.75)")
+    ap.add_argument("--json", type=pathlib.Path, default=_JSON_PATH)
+    args = ap.parse_args(argv)
+    if args.check:
+        sys.exit(min(check(json_path=args.json, tolerance=args.tolerance,
+                           agree_floor=args.agree_floor), 1))
+    run(json_path=args.json)
 
 
 if __name__ == "__main__":

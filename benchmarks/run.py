@@ -11,7 +11,7 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (ablation_pooling, kernel_bench,
+    from benchmarks import (ablation_pooling, kernel_bench, lm_bench,
                             lm_radix_accuracy, ppa_bench, table1_timesteps,
                             table2_convunits, table3_comparison)
     sections = {
@@ -20,6 +20,7 @@ def main() -> None:
         "table3": table3_comparison.run,
         "kernels": kernel_bench.run,
         "ppa": ppa_bench.run,
+        "lm": lm_bench.run,
         "lm_radix": lm_radix_accuracy.run,
         "ablation_pooling": ablation_pooling.run,
     }

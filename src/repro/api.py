@@ -83,12 +83,23 @@ __all__ = [
     "support_matrix_markdown",
     "Accelerator",
     "Executable",
+    "LMExecutable",
     "convert",
     "oracle",
     "autoconfigure",
 ]
 
 BACKENDS = ("kernels", "jnp")
+
+
+def _is_lm_net(qnet) -> bool:
+    """True for the LM compile form: a ``(params, ArchConfig)`` pair
+    (``repro.lm``) rather than a converted CNN ``QuantizedNet``."""
+    if not (isinstance(qnet, tuple) and len(qnet) == 2):
+        return False
+    from repro.lm.config import ArchConfig
+
+    return isinstance(qnet[1], ArchConfig)
 
 
 def _resolve_spec(
@@ -188,6 +199,21 @@ def _attach_ppa(exe: "Executable") -> "Executable":
     except (ValueError, KeyError, TypeError):
         return exe
     return exe.attach_stats(provider)
+
+
+def _merge_stat_providers(d: dict, providers) -> dict:
+    """Merge attach_stats provider dicts into ``d``; a key that collides
+    with an existing one raises instead of silently shadowing it."""
+    for provider in providers:
+        extra = provider()
+        clash = sorted(set(extra) & set(d))
+        if clash:
+            raise ValueError(
+                f"attach_stats provider key(s) {clash} collide with "
+                "existing stats keys; namespace provider keys "
+                "instead of shadowing core counters")
+        d.update(extra)
+    return d
 
 
 class Executable:
@@ -318,16 +344,7 @@ class Executable:
             **autotune_mod.default_cache().stats.as_dict(),
             "layers": self._cache.tuned_tiles(),
         }
-        for provider in self._stat_providers:
-            extra = provider()
-            clash = sorted(set(extra) & set(d))
-            if clash:
-                raise ValueError(
-                    f"attach_stats provider key(s) {clash} collide with "
-                    "existing stats keys; namespace provider keys "
-                    "instead of shadowing core counters")
-            d.update(extra)
-        return d
+        return _merge_stat_providers(d, self._stat_providers)
 
     def traffic(self) -> dict:
         """Modeled inter-layer activation bytes, fused packed-uint8 plan
@@ -347,6 +364,267 @@ class Executable:
                 "memory() models (H, W, C) image nets, item_shape="
                 f"{self.item_shape}")
         return engine.memory_report(self.qnet, self.item_shape, **kwargs)
+
+
+class LMExecutable:
+    """A compiled autoregressive LM serving deployment (beyond-paper).
+
+    Produced by :meth:`Accelerator.compile` when handed an
+    ``(params, ArchConfig)`` pair instead of a converted CNN; do not
+    construct directly.  The transformer's FFN / unembed matmuls (and the
+    QKV/out projections under ``cfg.radix_attn``) run as radix matmuls —
+    through the autotuned kernel stack on ``backend="kernels"``, through
+    the fused int8 ``dot_general`` twin on ``backend="jnp"`` — and the KV
+    cache is the packed radix inter-step activation format
+    (``repro.lm.radix``; docs/lm.md is the guide).
+
+    Serving shape contract (an :class:`~repro.core.engine.LMPlanCache`):
+    prompts right-pad to a fixed **sequence-bucket ladder** (one jitted
+    prefill plan per bucket, last-token logits gathered at the true
+    length) and every generated token reuses ONE jitted decode-step plan
+    over the radix KV cache — zero steady-state recompiles, asserted via
+    :meth:`stats` exactly like the CNN path.  Exactness of the
+    right-padding trick needs a pure full-attention stack (the causal
+    mask hides pad positions), so other block types are rejected at
+    compile time.
+    """
+
+    def __init__(self, params, cfg, *, batch: int, max_len: int,
+                 seq_buckets: Sequence[int], backend: str,
+                 dataflow: Optional[str], autotune: bool):
+        from repro.lm import model as lm_model
+
+        bad = sorted(set(cfg.layer_types) - {"attn"})
+        if bad:
+            raise ValueError(
+                "the LM compile path right-pads prompts to sequence "
+                "buckets, which is exact only for pure full-attention "
+                f"stacks (causal masking hides the pads); block types "
+                f"{bad} would absorb pad tokens into recurrent/ring state "
+                "— serve those archs via repro.launch.serve.generate")
+        if cfg.encoder_layers or cfg.embedding_inputs:
+            raise ValueError(
+                "the LM compile path serves token-in/token-out decoder "
+                "stacks; encoder-decoder and embedding-input archs run "
+                "via repro.launch.serve.generate")
+        serve_cfg = dataclasses.replace(
+            cfg, quant="radix",
+            use_kernel=(backend == "kernels"),
+            kernel_autotune=bool(autotune),
+            kernel_dataflow=dataflow or cfg.kernel_dataflow)
+        self.cfg = serve_cfg
+        self.arch = cfg.name
+        self.backend = backend
+        self.dataflow = serve_cfg.kernel_dataflow if backend == "kernels" \
+            else None
+        self.autotune = bool(autotune)
+        self.batch = int(batch)
+        self.max_len = int(max_len)
+        if self.batch < 1 or self.max_len < 2:
+            raise ValueError(
+                f"need batch >= 1 and max_len >= 2, got ({batch}, {max_len})")
+        self.params = lm_model.radixify_params(params, serve_cfg)
+        self._model = lm_model
+
+        mdl, mx, scfg = lm_model, self.max_len, serve_cfg
+
+        def prefill_builder(bucket):
+            def fn(p, tokens, true_len):
+                return mdl.prefill(p, {"tokens": tokens}, scfg, None,
+                                   max_len=mx, true_len=true_len)
+            return jax.jit(fn)
+
+        def decode_builder():
+            def fn(p, caches, tok, pos):
+                return mdl.decode_step(p, caches, tok, pos, scfg, None)
+            return jax.jit(fn)
+
+        self._cache = engine.LMPlanCache(
+            seq_buckets, prefill_builder=prefill_builder,
+            decode_builder=decode_builder)
+        self.buckets = self._cache.buckets
+        if self.buckets[-1] >= self.max_len:
+            raise ValueError(
+                f"top sequence bucket {self.buckets[-1]} must stay below "
+                f"max_len={self.max_len} (the KV cache needs at least one "
+                "free decode slot)")
+        self._tuned_rows: list = []
+        if self.autotune:
+            self._tuned_rows = self._sweep()
+        self._stat_providers: list = []
+
+    def __repr__(self) -> str:
+        return (f"LMExecutable({self.arch!r}, T={self.cfg.radix_steps}, "
+                f"backend={self.backend!r}, dataflow={self.dataflow!r}, "
+                f"batch={self.batch}, max_len={self.max_len}, "
+                f"seq_buckets={self.buckets})")
+
+    @property
+    def num_steps(self) -> int:
+        return self.cfg.radix_steps
+
+    def _sweep(self) -> list:
+        """Eagerly autotune every radix matmul problem the compiled plans
+        will trace — prefill runs each weight at ``m = batch * bucket``
+        rows, decode and the lm-head at ``m = batch`` — so the
+        Tracer-safe winner lookup inside jit (ops._resolve_config) always
+        hits and plans bake the swept strategy in."""
+        import numpy as np
+
+        from repro.core import encoding as encoding_mod
+        from repro.kernels import autotune as autotune_mod, ops as kops
+
+        problems: list = []
+
+        def walk(t, path=""):
+            if isinstance(t, dict):
+                if set(t) == {"q", "scale"}:
+                    q = t["q"]
+                    q2 = q.reshape((-1,) + q.shape[-2:])[0] if q.ndim > 2 \
+                        else q
+                    problems.append((path, q2))
+                    return
+                for k in sorted(t):
+                    walk(t[k], f"{path}/{k}" if path else k)
+            elif isinstance(t, (tuple, list)):
+                for i, v in enumerate(t):
+                    walk(v, f"{path}/{i}")
+
+        walk(self.params)
+        T = self.cfg.radix_steps
+        lvl = encoding_mod.max_level(T)
+        method = self.cfg.kernel_dataflow
+        rng = np.random.default_rng(0)
+        rows, seen = [], set()
+        for name, q2 in problems:
+            k, n = int(q2.shape[0]), int(q2.shape[1])
+            head = name.endswith("unembed")
+            ms = {self.batch} if head else (
+                {self.batch * b for b in self.buckets} | {self.batch})
+            for m in sorted(ms):
+                key = autotune_mod.matmul_key(
+                    m, k, n, T, method, epilogue=False, sparsity=False)
+                if key in seen:
+                    continue
+                seen.add(key)
+                x = jnp.asarray(
+                    rng.integers(0, lvl + 1, size=(m, k)), jnp.uint8)
+                jax.block_until_ready(kops.radix_matmul(
+                    x, q2, None, T, method=method, autotune=True))
+                win = autotune_mod.default_cache().get(key)
+                rows.append({
+                    "layer": name, "m": m, "k": k, "n": n,
+                    "tuned": win is not None,
+                    **(win or autotune_mod.KernelConfig()).as_dict()})
+        return rows
+
+    def prefill(self, prompts) -> dict:
+        """Prefill ``prompts`` ((n, S0) int tokens, n <= batch) through
+        the bucketed plan; returns the serving state dict
+        ``{"caches", "pos", "logits", "n"}`` — ``logits`` (n, vocab)
+        predict the token at position S0."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        if prompts.ndim != 2:
+            raise ValueError(f"prompts must be (n, S0), got {prompts.shape}")
+        n, s0 = int(prompts.shape[0]), int(prompts.shape[1])
+        if n > self.batch:
+            raise ValueError(
+                f"request batch {n} exceeds compiled batch {self.batch}")
+        bucket = self._cache.bucket_for(s0)
+        # +1 column: model._input_h consumes tokens[:, :-1]
+        tokens = jnp.pad(prompts,
+                         ((0, self.batch - n), (0, bucket - s0 + 1)))
+        plan = self._cache.prefill_plan(bucket)
+        logits, caches = plan(self.params, tokens, jnp.int32(s0))
+        self._cache.record_execution(
+            padded_rows=(self.batch - n) + (bucket - s0))
+        return {"caches": caches, "pos": s0, "logits": logits[:n], "n": n}
+
+    def decode(self, state: dict, tokens) -> dict:
+        """One decode step: write ``tokens`` ((n, 1) int) at
+        ``state["pos"]``, return the advanced state (``logits`` predict
+        position pos + 1)."""
+        n = state["n"]
+        pos = int(state["pos"])
+        if pos >= self.max_len:
+            raise ValueError(
+                f"decode position {pos} out of cache range "
+                f"(max_len={self.max_len})")
+        tok = jnp.asarray(tokens, jnp.int32).reshape(n, 1)
+        tok = jnp.pad(tok, ((0, self.batch - n), (0, 0)))
+        plan = self._cache.decode_plan()
+        logits, caches = plan(self.params, state["caches"], tok,
+                              jnp.int32(pos))
+        self._cache.record_execution(padded_rows=self.batch - n)
+        return {"caches": caches, "pos": pos + 1, "logits": logits[:n],
+                "n": n}
+
+    def generate(self, prompts, max_new: int, *, greedy: bool = True,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+        """Autoregressive decode: (n, S0) prompts -> (n, max_new) tokens
+        (greedy argmax, or categorical samples with ``key``)."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        s0 = int(prompts.shape[1])
+        if s0 + max_new - 1 > self.max_len:
+            raise ValueError(
+                f"prompt ({s0}) + max_new ({max_new}) tokens exceed the "
+                f"compiled cache (max_len={self.max_len})")
+        state = self.prefill(prompts)
+        out = []
+        for i in range(int(max_new)):
+            if greedy:
+                nxt = jnp.argmax(state["logits"], axis=-1).astype(jnp.int32)
+            else:
+                if key is None:
+                    raise ValueError("sampling (greedy=False) needs key=")
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, state["logits"].astype(jnp.float32)).astype(jnp.int32)
+            out.append(nxt)
+            if i + 1 < max_new:
+                state = self.decode(state, nxt[:, None])
+        return jnp.stack(out, axis=1)
+
+    def warmup(self) -> "LMExecutable":
+        """Build + execute every prefill bucket plan and the decode-step
+        plan so serving never compiles on the hot path; returns self."""
+        caches = None
+        for b in self.buckets:
+            tokens = jnp.zeros((self.batch, b + 1), jnp.int32)
+            plan = self._cache.prefill_plan(b)
+            logits, caches = plan(self.params, tokens, jnp.int32(b))
+            jax.block_until_ready(logits)
+        dplan = self._cache.decode_plan()
+        tok = jnp.zeros((self.batch, 1), jnp.int32)
+        logits, _ = dplan(self.params, caches, tok,
+                          jnp.int32(self.buckets[-1]))
+        jax.block_until_ready(logits)
+        return self
+
+    def attach_stats(self, provider) -> "LMExecutable":
+        """Register an extra stats provider (same contract as
+        :meth:`Executable.attach_stats`); returns self for chaining."""
+        self._stat_providers.append(provider)
+        return self
+
+    def stats(self) -> dict:
+        """LM plan-cache counters (``hits`` / ``compiles`` /
+        ``executions`` / ``padded_rows`` / ``failures`` — ``compiles``
+        stays flat in steady state: one prefill plan per sequence bucket
+        plus one decode plan), plus the ``autotune`` sub-dict — whether
+        the eager sweep ran (``enabled``), the winner-table counters, and
+        one ``layers`` row per swept (layer, m, k, n) problem with the
+        strategy the plans bake in — plus any dicts from
+        :meth:`attach_stats` providers."""
+        from repro.kernels import autotune as autotune_mod
+
+        d = self._cache.stats.as_dict()
+        d["autotune"] = {
+            "enabled": self.autotune,
+            **autotune_mod.default_cache().stats.as_dict(),
+            "layers": list(self._tuned_rows),
+        }
+        return _merge_stat_providers(d, self._stat_providers)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -442,6 +720,10 @@ class Accelerator:
                 planner owns those axes) or a search that satisfies no
                 constraint.
         """
+        if _is_lm_net(qnet):
+            return self._compile_lm(qnet, input_spec, encoding=encoding,
+                                    parallel=parallel, buckets=buckets,
+                                    autotune=autotune, auto=auto)
         if auto is not None:
             if self.dataflow is not None:
                 raise ValueError(
@@ -482,3 +764,60 @@ class Accelerator:
         return _attach_ppa(Executable(qnet, item, spec, self.backend,
                                       dataflow, parallel, buckets,
                                       autotune=autotune))
+
+    def _compile_lm(self, qnet, input_spec, *, encoding, parallel, buckets,
+                    autotune, auto) -> LMExecutable:
+        """The LM leg of :meth:`compile` — ``qnet`` is ``(params, cfg)``
+        with ``cfg`` an :class:`~repro.lm.config.ArchConfig`.
+
+        ``input_spec`` is ``(max_len,)`` or ``(batch, max_len)`` — the
+        compiled decode batch and the KV-cache capacity.  ``buckets`` is
+        the **sequence-length** ladder (prompts pad to the smallest
+        bucket; default: powers of two from 8 up to ``max_len - 1``);
+        every bucket must stay below ``max_len`` so decode has cache
+        room.  The paper-technique knobs live on the ArchConfig itself
+        (``radix_steps`` = T, ``radix_kv`` / ``radix_kv_pack``,
+        ``radix_attn``); docs/lm.md is the guide.
+        """
+        params, cfg = qnet
+        if auto is not None:
+            raise ValueError(
+                "auto= (the PPA planner) prices the paper's CNN lattice, "
+                "not LM archs; configure the ArchConfig directly")
+        if encoding is not None:
+            raise ValueError(
+                "LM serving always runs the radix encoding "
+                "(cfg.radix_steps sets T); drop the encoding= override")
+        if parallel not in (None, 1):
+            raise ValueError(
+                "parallel bucket sharding is a CNN-plan feature; LM "
+                "plans shard via the model's mesh instead")
+        if autotune and self.backend != "kernels":
+            raise ValueError(
+                "autotune sweeps kernel strategies and requires "
+                "backend='kernels'")
+        if self.dataflow is not None and self.dataflow not in (
+                "bitserial", "fused"):
+            raise ValueError(
+                f"LM radix matmuls support dataflow 'bitserial' or "
+                f"'fused', got {self.dataflow!r}")
+        spec = tuple(int(d) for d in input_spec)
+        if len(spec) == 1:
+            batch, max_len = 1, spec[0]
+        elif len(spec) == 2:
+            batch, max_len = spec
+        else:
+            raise ValueError(
+                f"LM input_spec is (max_len,) or (batch, max_len), "
+                f"got {input_spec}")
+        if buckets is None:
+            top = max(1, max_len - 1)
+            ladder = {top}
+            b = 8
+            while b < top:
+                ladder.add(b)
+                b *= 2
+            buckets = tuple(sorted(ladder))
+        return LMExecutable(params, cfg, batch=batch, max_len=max_len,
+                            seq_buckets=buckets, backend=self.backend,
+                            dataflow=self.dataflow, autotune=autotune)

@@ -1088,6 +1088,82 @@ class PlanCache:
                                axis=0)
 
 
+class LMPlanCache:
+    """Sequence-bucketed plan cache for autoregressive LM serving — the
+    KV-cache analog of :class:`PlanCache` (wrapped by ``api.LMExecutable``).
+
+    Decode serving has two plan families instead of one batch ladder:
+
+    * per-sequence-bucket **prefill** plans — prompts right-pad to the
+      smallest bucket ``>= S0`` and the model gathers last-token logits at
+      the true length (``model.prefill(..., true_len=)``), so every prompt
+      length in a bucket traces ONE plan;
+    * ONE **decode-step** plan reused for every generated token — the KV
+      cache shapes and the ``(B, 1)`` token shape are position-independent,
+      so autoregression never recompiles.
+
+    Plans are built once by the injected builders and cached; ``stats``
+    reuses :class:`PlanCacheStats` (``padded_rows`` here counts padded
+    prompt columns plus padded batch rows), so LM serving tests assert
+    zero steady-state recompiles exactly the way the CNN path does.
+    """
+
+    def __init__(self, seq_buckets: Sequence[int], *,
+                 prefill_builder: Callable, decode_builder: Callable):
+        bs = tuple(sorted({int(b) for b in seq_buckets}))
+        if not bs or bs[0] < 1:
+            raise ValueError(
+                f"sequence-bucket ladder must be positive, got {seq_buckets}")
+        self.buckets = bs
+        self._prefill_builder = prefill_builder
+        self._decode_builder = decode_builder
+        self.stats = PlanCacheStats()
+        self._prefill_plans: dict = {}
+        self._decode_plan = None
+
+    def __len__(self) -> int:
+        return len(self._prefill_plans) + (self._decode_plan is not None)
+
+    def bucket_for(self, s: int) -> int:
+        """Smallest sequence bucket >= s.  Prompts longer than the top
+        bucket are an error (no chunked prefill — the KV cache is sized
+        by the compile-time ``max_len``, not grown on demand)."""
+        if s < 1:
+            raise ValueError(f"prompt length must be >= 1, got {s}")
+        for b in self.buckets:
+            if b >= s:
+                return b
+        raise ValueError(
+            f"prompt length {s} exceeds the top sequence bucket "
+            f"{self.buckets[-1]}; recompile with a longer bucket ladder")
+
+    def prefill_plan(self, bucket: int):
+        """Cached prefill plan for one sequence bucket (built on first
+        use)."""
+        plan = self._prefill_plans.get(int(bucket))
+        if plan is not None:
+            self.stats.hits += 1
+            return plan
+        plan = self._prefill_builder(int(bucket))
+        self._prefill_plans[int(bucket)] = plan
+        self.stats.compiles += 1
+        return plan
+
+    def decode_plan(self):
+        """The one cached decode-step plan (built on first use)."""
+        if self._decode_plan is None:
+            self._decode_plan = self._decode_builder()
+            self.stats.compiles += 1
+        else:
+            self.stats.hits += 1
+        return self._decode_plan
+
+    def record_execution(self, *, padded_rows: int = 0) -> None:
+        """Count one plan call (and any pad rows/columns it carried)."""
+        self.stats.executions += 1
+        self.stats.padded_rows += int(padded_rows)
+
+
 # ---------------------------------------------------------------------------
 # Ping-pong buffer sizing / memory-access accounting.
 # ---------------------------------------------------------------------------

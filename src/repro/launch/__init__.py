@@ -1,6 +1,8 @@
 """Launch layer: production mesh, dry-run, roofline, train/serve drivers.
 
-Serving entry points: ``serve`` (LM decode loop, radix KV cache) and
+Serving entry points: ``serve`` (uncompiled LM decode loop, radix KV
+cache, all archs), ``serve_lm`` (compiled LM serving: bucketed prefill +
+single decode plan through ``Accelerator.compile``, docs/lm.md) and
 ``serve_cnn`` (batched CNN inference over bucketed compiled plans,
 DESIGN.md §3).
 """

@@ -92,11 +92,31 @@ def rope_apply(x: jax.Array, positions: jax.Array, theta: float,
 # ---------------------------------------------------------------------------
 
 
+def _attn_proj(x, w, cfg: ArchConfig):
+    """x (B,S,d) @ w -> (B,S,H,hd).  ``w`` is a (d,H,hd) array, or — under
+    ``cfg.radix_attn`` serving — a quantize_weight dict over the flattened
+    (d, H*hd) view, routed through the radix matmul (kernels when
+    ``cfg.use_kernel``)."""
+    if isinstance(w, dict):
+        from repro.lm import radix as radix_lib
+        y = radix_lib.maybe_radix_matmul(x, w, cfg=cfg)
+        return y.reshape(y.shape[:-1] + (-1, cfg.hd))
+    return jnp.einsum("bsd,dhk->bshk", x, w)
+
+
+def _out_proj(o, w, cfg: ArchConfig):
+    """(B,S,H,hd) @ wo -> (B,S,d); dict = flattened (H*hd, d) radix view."""
+    if isinstance(w, dict):
+        from repro.lm import radix as radix_lib
+        return radix_lib.maybe_radix_matmul(
+            o.reshape(o.shape[:-2] + (-1,)), w, cfg=cfg)
+    return jnp.einsum("bshk,hkd->bsd", o, w)
+
+
 def _qkv(x, p, cfg: ArchConfig):
-    B, S, _ = x.shape
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])            # (B,S,H,hd)
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])            # (B,S,Hkv,hd)
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = _attn_proj(x, p["wq"], cfg)                        # (B,S,H,hd)
+    k = _attn_proj(x, p["wk"], cfg)                        # (B,S,Hkv,hd)
+    v = _attn_proj(x, p["wv"], cfg)
     return q, k, v
 
 
@@ -138,7 +158,7 @@ def attention(x: jax.Array, p: dict, cfg: ArchConfig, positions: jax.Array,
             q = rope_apply(q, positions, cfg.rope_theta, sec)
             k = rope_apply(k, positions, cfg.rope_theta, sec)
     else:
-        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        q = _attn_proj(x, p["wq"], cfg)
         k, v = cross_kv
         causal = False
 
@@ -170,7 +190,7 @@ def attention(x: jax.Array, p: dict, cfg: ArchConfig, positions: jax.Array,
         o = lax.map(lambda args: attend_chunk(*args), (qs, ps))
         o = o.swapaxes(0, 1).reshape(B, S, cfg.n_heads, hd)
 
-    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    out = _out_proj(o, p["wo"], cfg)
     if return_kv:
         return out, (k, v)
     return out
@@ -196,7 +216,7 @@ def decode_attention(x: jax.Array, p: dict, cfg: ArchConfig, cache: dict,
     B = x.shape[0]
     hd = cfg.hd
     if cross:
-        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        q = _attn_proj(x, p["wq"], cfg)
         k, v = radix_lib.cache_read(cache, cfg)
         mask = None
     else:
@@ -230,7 +250,7 @@ def decode_attention(x: jax.Array, p: dict, cfg: ArchConfig, cache: dict,
         s = jnp.where(mask, s, -1e30)
     pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     o = _gqa_out(pr, v)                                     # (B,1,H,hd)
-    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+    return _out_proj(o, p["wo"], cfg), cache
 
 
 # ---------------------------------------------------------------------------

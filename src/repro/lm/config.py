@@ -92,6 +92,12 @@ class ArchConfig:
     radix_steps: int = 4           # T (activation/KV bits); weights int8
     radix_kv: bool = True          # radix-quantized KV cache when quant=radix
     radix_kv_pack: bool = False    # pack two T<=4 levels per byte (§Perf C2)
+    # kernel routing (docs/lm.md): run radix matmuls through the Pallas /
+    # autotuned kernel stack instead of the fused int8 dot_general
+    use_kernel: bool = False       # route maybe_radix_matmul via kernels.ops
+    kernel_autotune: bool = False  # consult the autotune winner table
+    kernel_dataflow: str = "bitserial"  # in-kernel plane schedule
+    radix_attn: bool = False       # also radix-quantize QKV/out projections
 
     # ---- derived ----------------------------------------------------------
 

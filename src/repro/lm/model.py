@@ -238,12 +238,25 @@ def init_params(key: jax.Array, cfg: ArchConfig) -> dict:
 
 
 def radixify_params(params: dict, cfg: ArchConfig) -> dict:
-    """Quantize the serving-path weights (dense FFN matmuls + unembed) to
-    int8 levels + scales — the RadixQuantizedLinear weight format.  MoE
-    expert weights stay exact (DESIGN.md §Arch-applicability)."""
+    """Quantize the serving-path weights (dense FFN matmuls + unembed, plus
+    the QKV/out projections under ``cfg.radix_attn``) to int8 levels +
+    scales — the RadixQuantizedLinear weight format.  MoE expert weights
+    stay exact (DESIGN.md §Arch-applicability).  Attention projections are
+    stored over their flattened 2-D matmul view — wq/wk/wv
+    (..., d, H, hd) -> (..., d, H*hd), wo (..., H, hd, d) -> (..., H*hd, d)
+    — matching what ``blocks._attn_proj`` / ``_out_proj`` consume."""
     if cfg.quant != "radix":
         return params
     FFN_KEYS = ("w_gate", "w_up", "w_down")
+    ATTN_KEYS = ("wq", "wk", "wv", "wo")
+
+    def quant_attn(k, v):
+        if k == "wo":
+            w2 = v.reshape(v.shape[:-3] + (v.shape[-3] * v.shape[-2],
+                                           v.shape[-1]))
+        else:
+            w2 = v.reshape(v.shape[:-2] + (v.shape[-2] * v.shape[-1],))
+        return radix_lib.quantize_weight(w2)
 
     def walk(tree, path=()):
         if isinstance(tree, dict):
@@ -253,6 +266,9 @@ def radixify_params(params: dict, cfg: ArchConfig) -> dict:
                 if (k in FFN_KEYS and isinstance(v, jax.Array)
                         and "ffn" in path and not routed):
                     out[k] = radix_lib.quantize_weight(v)
+                elif (cfg.radix_attn and k in ATTN_KEYS
+                        and isinstance(v, jax.Array) and "mix" in path):
+                    out[k] = quant_attn(k, v)
                 else:
                     out[k] = walk(v, path + (k,))
             return out
@@ -652,10 +668,19 @@ def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
 
 
 def prefill(params, batch, cfg: ArchConfig, mesh: Optional[Mesh] = None,
-            max_len: int = 0):
+            max_len: int = 0, *, true_len=None):
     """Process the prompt; returns (last-token logits (B, V), caches).
 
     ``max_len`` sizes the decode cache (default: prompt length).
+
+    ``true_len`` (a traced () int32) enables *bucketed* prefill: the prompt
+    is right-padded to a fixed bucket length and the last-token hidden state
+    is gathered at ``true_len - 1`` instead of ``-1``.  Exact for
+    pure-``attn`` stacks — the causal mask means pad positions never
+    influence real ones, and decode overwrites pad cache slots sequentially
+    while its ``kpos <= pos`` mask hides the rest.  NOT valid for recurrent
+    or windowed blocks (state/ring rolls would absorb the pads); the LM
+    compile path (api.LMExecutable) enforces that gate.
     """
     h, _ = _input_h(params, batch, cfg)
     B, S = h.shape[0], h.shape[1]
@@ -668,7 +693,12 @@ def prefill(params, batch, cfg: ArchConfig, mesh: Optional[Mesh] = None,
                              enc_h=enc_h, max_len=max_len)
     # ring-buffer alignment: position p must live at slot p % window
     caches = _roll_window_caches(caches, cfg, S)
-    h = blocks.norm(h[:, -1:, :], params["final_norm"], cfg.norm)
+    if true_len is None:
+        h_last = h[:, -1:, :]
+    else:
+        idx = jnp.asarray(true_len, jnp.int32) - 1
+        h_last = lax.dynamic_slice_in_dim(h, idx, 1, axis=1)
+    h = blocks.norm(h_last, params["final_norm"], cfg.norm)
     logits = _lm_head(h, params, cfg)[:, 0]
     return logits, caches
 

@@ -75,7 +75,9 @@ def _radix_activation(x: jax.Array, num_steps: int):
 
 
 def maybe_radix_matmul(x: jax.Array, w, *, cfg: ArchConfig,
-                       use_kernel: bool = False) -> jax.Array:
+                       use_kernel: Optional[bool] = None,
+                       config=None, autotune: Optional[bool] = None
+                       ) -> jax.Array:
     """x (..., d_in) @ w -> (..., d_out).
 
     ``w`` is a plain array (exact mode) or a quantize_weight dict (radix
@@ -86,18 +88,31 @@ def maybe_radix_matmul(x: jax.Array, w, *, cfg: ArchConfig,
 
     i.e. ONE int8 matmul over packed radix levels (the radix identity: the
     packed level == the Horner sum of bit-planes) plus a rank-1 correction.
-    ``use_kernel=True`` runs the bit-serial Pallas kernel instead of the
-    fused int8 dot — same bits, paper-faithful dataflow.
+    ``use_kernel=True`` runs the plane-schedule kernel stack instead of the
+    fused int8 dot — same bits, paper-faithful dataflow — with the schedule
+    picked by ``cfg.kernel_dataflow`` and the autotuned winner threaded
+    through: an explicit ``config`` (a ``KernelConfig``) pins the strategy,
+    ``autotune=True`` consults the process-wide winner table
+    (Tracer-safe inside jit — ops._resolve_config falls back to the cached
+    winner, never sweeping under a trace).  ``use_kernel`` / ``autotune``
+    default from ``cfg.use_kernel`` / ``cfg.kernel_autotune`` so compiled
+    serving plans flip the whole network with one ArchConfig replace.
     """
     if not isinstance(w, dict):
         return jnp.einsum("...d,df->...f", x, w)
+    if use_kernel is None:
+        use_kernel = cfg.use_kernel
+    if autotune is None:
+        autotune = cfg.kernel_autotune
     T = cfg.radix_steps
     lvl = encoding.max_level(T)
     qx, sx = _radix_activation(x, T)
     qw, sw = w["q"], w["scale"]
     if use_kernel:
         from repro.kernels import ops as kops
-        acc = kops.radix_matmul(qx, qw, None, T)                 # int32
+        acc = kops.radix_matmul(qx, qw, None, T,
+                                method=cfg.kernel_dataflow,
+                                config=config, autotune=autotune)  # int32
     else:
         # int8 MXU path holds levels up to 127 (T <= 7); wider trains fall
         # back to int32 accumulation (the paper uses T in [3, 6])

@@ -284,3 +284,65 @@ def test_no_stale_engine_run_recommendation():
                 # allowed only in the DESIGN.md migration table's OLD column
                 assert "| `engine.run(" in line.strip(), (
                     f"{doc.name}: stale engine.run reference: {line!r}")
+
+
+def test_lm_guide_is_cross_linked():
+    """docs/lm.md (the radix-LM serving guide) must be discoverable from
+    the README and the kernels guide (whose autotune table the LM path
+    rides), and is itself in DOC_FILES so its intra-repo links are
+    drift-checked."""
+    assert "docs/lm.md" in (REPO / "README.md").read_text()
+    assert "(lm.md)" in (REPO / "docs" / "kernels.md").read_text()
+    assert "(kernels.md)" in (REPO / "docs" / "lm.md").read_text()
+    assert (REPO / "docs" / "lm.md") in DOC_FILES
+
+
+def test_lm_guide_matches_code_surface():
+    """The guide documents real symbols: every backticked ``src/...py``
+    path exists, the serving ArchConfig knobs it explains are live
+    fields, and the stats counters it promises are what an LMExecutable
+    actually reports."""
+    text = (REPO / "docs" / "lm.md").read_text()
+    for rel in re.findall(r"`(src/[\w/]+\.py)`", text):
+        assert (REPO / rel).exists(), f"docs/lm.md names missing {rel}"
+    import dataclasses as _dc
+    from repro.lm.config import ArchConfig
+    fields = {f.name for f in _dc.fields(ArchConfig)}
+    for knob in ("use_kernel", "kernel_autotune", "kernel_dataflow",
+                 "radix_attn", "radix_kv_pack"):
+        assert knob in fields, knob
+        assert f"`cfg.{knob}`" in text or f"`{knob}`" in text, (
+            f"docs/lm.md is missing the {knob} serving knob")
+    # the plan-cache counters §3 promises are the LMPlanCache's
+    from repro.core.engine import PlanCacheStats
+    stats_keys = set(PlanCacheStats().as_dict())
+    for key in ("compiles", "padded_rows"):
+        assert key in stats_keys, key
+        assert f"`{key}`" in text, f"docs/lm.md stats keys missing {key}"
+    assert "REPRO_LM_AGREE_FLOOR" in text     # accuracy-gate floor knob
+    assert "REPRO_BENCH_TOL" in text          # shared tolerance knob
+
+
+def test_bench_lm_json_structure():
+    """The committed BENCH_lm.json is the lm-accuracy-gate baseline: it
+    must carry the serving rows (prefill per bucket + decode, tok/s),
+    the zero-recompile cache proof, and the accuracy sweep the --check
+    gate reads."""
+    import json as _json
+
+    payload = _json.loads((REPO / "BENCH_lm.json").read_text())
+    assert payload["bench"] == "lm"
+    phases = {}
+    for r in payload["serving"]:
+        phases.setdefault(r["phase"], []).append(r)
+        assert r["tok_s"] > 0, r
+    assert set(phases) == {"prefill", "decode"}
+    assert len(phases["prefill"]) == len(payload["config"]["seq_buckets"])
+    assert payload["cache"]["steady_state_recompiles"] == 0
+    from benchmarks.lm_radix_accuracy import T_SWEEP
+    acc = {r["T"]: r for r in payload["accuracy"]}
+    assert set(acc) == set(T_SWEEP)
+    errs = [acc[T]["logit_rel_err"] for T in sorted(acc)]
+    assert all(b <= a for a, b in zip(errs, errs[1:])), errs
+    for r in acc.values():
+        assert 0.0 <= r["argmax_agree"] <= 1.0

@@ -1,0 +1,193 @@
+"""Property tests for the packed radix KV cache (docs/lm.md §KV format).
+
+The cache is the inter-step activation format of the LM serving path:
+K/V live as T-bit radix levels (two-per-byte for T <= 4) with one f32
+scale per (token, kv-head).  Locked here, via the optional-hypothesis
+shim in tests/_hyp.py:
+
+* ``_pack4`` / ``_unpack4`` are mutually inverse bijections on nibble
+  tensors (hi nibble = even index);
+* ``_encode_kv`` / ``_decode_kv`` round-trip within the quantization
+  step bound scale/(2^T - 1), and levels never exceed the T-bit range;
+* ``cache_update`` writes position p into ring slot p % W (sliding
+  window) / slot p (full cache), and ``cache_read`` decodes what the
+  last writes left there;
+* bulk prefill encoding (``encode_cache_bulk``) is bit-identical to
+  incrementally ``cache_update``-ing one token at a time — prefill and
+  decode agree on every stored byte, packed or not.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # optional-hypothesis shim
+
+from repro.configs import get_config
+from repro.core import encoding
+from repro.lm import radix as radix_lib
+
+pytestmark = pytest.mark.lm
+
+
+def _cfg(T=4, packed=False, quant="radix"):
+    return dataclasses.replace(get_config("gemma_2b", smoke=True),
+                               quant=quant, radix_steps=T,
+                               radix_kv_pack=packed)
+
+
+# ---------------------------------------------------------------------------
+# nibble packing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), half=st.integers(1, 8))
+def test_pack4_unpack4_roundtrip(seed, half):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 16, size=(2, 3, 2, 2 * half)).astype(np.uint8)
+    p = radix_lib._pack4(jnp.asarray(q))
+    assert p.shape == q.shape[:-1] + (half,) and p.dtype == jnp.uint8
+    np.testing.assert_array_equal(
+        np.asarray(radix_lib._unpack4(p)), q)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_unpack4_pack4_inverse(seed):
+    rng = np.random.default_rng(seed)
+    p = rng.integers(0, 256, size=(3, 5, 2, 4)).astype(np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(radix_lib._pack4(radix_lib._unpack4(jnp.asarray(p)))), p)
+
+
+def test_pack4_nibble_order_is_hi_even():
+    q = jnp.asarray([[1, 2, 3, 4]], jnp.uint8)
+    np.testing.assert_array_equal(np.asarray(radix_lib._pack4(q)),
+                                  [[0x12, 0x34]])
+
+
+# ---------------------------------------------------------------------------
+# encode/decode
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), T=st.integers(2, 8))
+def test_encode_decode_kv_error_bound(seed, T):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 4, 2, 8)) * 2.0
+    q, s = radix_lib._encode_kv(x, T)
+    lvl = encoding.max_level(T)
+    assert q.dtype == jnp.uint8 and s.shape == x.shape[:-1]
+    assert int(q.max()) <= lvl
+    back = radix_lib._decode_kv(q, s, T, jnp.float32)
+    bound = s[..., None] * (1.0 / lvl) + 1e-6      # half a level of 2s/lvl
+    assert bool(jnp.all(jnp.abs(back - x) <= bound))
+
+
+# ---------------------------------------------------------------------------
+# ring-slot semantics
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(total=st.integers(1, 20), window=st.sampled_from([2, 4, 8]))
+def test_cache_update_ring_slot_holds_last_window(total, window):
+    """After writing positions 0..total-1 into a W-slot ring, slot p % W
+    holds exactly position p for the last min(total, W) positions."""
+    cfg = _cfg(quant="none")                        # exact store: read raw
+    B, H, hd = 1, cfg.n_kv_heads, cfg.hd
+    cache = radix_lib.init_cache_entry(cfg, B, window, jnp.float32)
+    for p in range(total):
+        val = jnp.full((B, 1, H, hd), float(p), jnp.float32)
+        cache = radix_lib.cache_update(cache, val, -val, jnp.int32(p), cfg,
+                                       window=window)
+    k = np.asarray(cache["k"])
+    for p in range(max(0, total - window), total):
+        assert float(k[0, p % window, 0, 0]) == float(p), (p, total, window)
+
+
+def test_cache_update_full_cache_slot_is_position():
+    cfg = _cfg(T=4)
+    B, S, H, hd = 2, 6, cfg.n_kv_heads, cfg.hd
+    cache = radix_lib.init_cache_entry(cfg, B, S, jnp.float32)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.normal(key, (B, S, H, hd))
+    for p in range(S):
+        cache = radix_lib.cache_update(cache, ks[:, p:p + 1],
+                                       -ks[:, p:p + 1], jnp.int32(p), cfg)
+    kdec, vdec = radix_lib.cache_read(cache, cfg, jnp.float32)
+    # position order preserved + decode error within the radix bound
+    lvl = encoding.max_level(cfg.radix_steps)
+    s = np.abs(np.asarray(ks)).max(-1) + 1e-9
+    assert np.all(np.abs(np.asarray(kdec) - np.asarray(ks))
+                  <= s[..., None] / lvl + 1e-6)
+    # v stream (stored as -k) decodes within the same bound; not the exact
+    # negation of kdec because round-half ties break asymmetrically
+    assert np.all(np.abs(np.asarray(vdec) + np.asarray(ks))
+                  <= s[..., None] / lvl + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bulk prefill == incremental decode writes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_bulk_encode_bit_equals_incremental_updates(packed):
+    cfg = _cfg(T=4, packed=packed)
+    assert radix_lib._packed(cfg) == packed
+    B, S, H, hd = 2, 5, cfg.n_kv_heads, cfg.hd
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    ks = jax.random.normal(k1, (B, S, H, hd))
+    vs = jax.random.normal(k2, (B, S, H, hd))
+    bulk = radix_lib.encode_cache_bulk(ks, vs, cfg, jnp.float32)
+    inc = radix_lib.init_cache_entry(cfg, B, S, jnp.float32)
+    for p in range(S):
+        inc = radix_lib.cache_update(inc, ks[:, p:p + 1], vs[:, p:p + 1],
+                                     jnp.int32(p), cfg)
+    assert set(bulk) == set(inc) == {"k", "v", "k_scale", "v_scale"}
+    for name in bulk:
+        np.testing.assert_array_equal(np.asarray(bulk[name]),
+                                      np.asarray(inc[name]), err_msg=name)
+
+
+def test_packed_halves_bytes_and_roundtrips():
+    cfg = _cfg(T=4, packed=True)
+    B, S = 1, 3
+    cache = radix_lib.init_cache_entry(cfg, B, S, jnp.float32)
+    assert cache["k"].shape[-1] == cfg.hd // 2      # two levels per byte
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, 1, cfg.n_kv_heads,
+                                                  cfg.hd))
+    cache = radix_lib.cache_update(cache, x, x, jnp.int32(0), cfg)
+    kdec, _ = radix_lib.cache_read(cache, cfg, jnp.float32)
+    lvl = encoding.max_level(cfg.radix_steps)
+    s = np.abs(np.asarray(x)).max(-1) + 1e-9
+    assert np.all(np.abs(np.asarray(kdec[:, :1]) - np.asarray(x))
+                  <= s[..., None] / lvl + 1e-6)
+
+
+def test_pack_gate_needs_t_at_most_4():
+    assert not radix_lib._packed(_cfg(T=5, packed=True))
+    assert radix_lib._packed(_cfg(T=4, packed=True))
+    assert not radix_lib._packed(_cfg(T=4, packed=True, quant="none"))
+
+
+def test_init_cache_entry_shapes_by_mode():
+    B, S = 2, 7
+    for cfg, kdtype, kshape in [
+        (_cfg(quant="none"), jnp.float32, ("hd",)),
+        (_cfg(T=6), jnp.uint8, ("hd",)),
+        (_cfg(T=4, packed=True), jnp.uint8, ("hd2",)),
+    ]:
+        c = radix_lib.init_cache_entry(cfg, B, S, jnp.float32)
+        hd = cfg.hd // 2 if kshape == ("hd2",) else cfg.hd
+        assert c["k"].shape == (B, S, cfg.n_kv_heads, hd)
+        assert c["k"].dtype == kdtype
+        if radix_lib._radix_kv(cfg):
+            assert c["k_scale"].shape == (B, S, cfg.n_kv_heads)
+            assert c["k_scale"].dtype == jnp.float32
+        else:
+            assert set(c) == {"k", "v"}
