@@ -24,8 +24,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import pathlib
 import statistics
+import sys
 import time
 
 import jax
@@ -54,6 +56,80 @@ def _time(fn, iters=4, rounds=3):
         samples.append((time.perf_counter() - t0) / iters)
     return (min(samples), statistics.fmean(samples),
             statistics.pstdev(samples))
+
+
+def decode_attn_rows(log=print, batch=2, max_len=48, buckets=(8, 16, 32),
+                     T=4, decode_tokens=16, backend="kernels",
+                     dataflow="bitserial"):
+    """``decode_attn_packed`` / ``decode_attn_float`` serving rows.
+
+    Times the same greedy decode loop through two compiled executables
+    that differ only in ``cfg.packed_attn``: the float row dequantizes
+    the radix KV cache per step (``cache_read`` + jnp softmax), the
+    packed row runs kernels/radix_attn.py directly on the uint8 levels
+    (nibble-packed for T <= 4).  Both compile with autotune on the
+    kernels backend so each decode plan bakes its swept winner — the
+    packed row must not lose to the float row (``--check`` ratio gate
+    under ``REPRO_BENCH_TOL``): skipping the dequantize and running
+    integer plane dots has to pay for the online-softmax bookkeeping."""
+    base = dataclasses.replace(get_config("gemma_2b", smoke=True),
+                               radix_steps=T)
+    params = M.init_params(jax.random.PRNGKey(0), base)
+    if backend != "kernels":
+        dataflow = None
+    rng = np.random.default_rng(0)
+    rows = []
+    for name, packed in (("decode_attn_float", False),
+                         ("decode_attn_packed", True)):
+        cfg = dataclasses.replace(base, packed_attn=packed,
+                                  radix_kv_pack=packed and T <= 4)
+        exe = api.Accelerator(backend=backend, dataflow=dataflow).compile(
+            (params, cfg), (batch, max_len), buckets=buckets,
+            autotune=(backend == "kernels"))
+        exe.warmup()
+        top = exe.buckets[-1]
+        prompt = rng.integers(0, cfg.vocab, (batch, top))
+        state0 = exe.prefill(prompt)
+
+        def loop(exe=exe, state0=state0):
+            state = dict(state0)
+            for _ in range(decode_tokens):
+                nxt = jnp.argmax(state["logits"], axis=-1).astype(jnp.int32)
+                state = exe.decode(state, nxt[:, None])
+            return state["logits"]
+
+        t_min, t_mean, t_std = _time(loop)
+        us = t_min * 1e6 / decode_tokens
+        rows.append({"row": name, "bucket": top,
+                     "new_tokens": decode_tokens,
+                     "us_per_token": round(us, 1),
+                     "us_mean": round(t_mean * 1e6 / decode_tokens, 1),
+                     "us_std": round(t_std * 1e6 / decode_tokens, 1),
+                     "tok_s": round(batch * decode_tokens / t_min, 1)})
+        log(f"lm,{name},{us:.1f}us/tok,"
+            f"{batch * decode_tokens / t_min:.0f} tok/s")
+    return rows
+
+
+def check_decode_attn(tolerance=None, log=print, **kw) -> int:
+    """CI perf gate: packed decode attention must not be slower than the
+    float (dequantize) path beyond ``REPRO_BENCH_TOL`` relative slack.
+    Returns the number of failed checks (the CLI exit code)."""
+    if tolerance is None:
+        tolerance = float(os.environ.get("REPRO_BENCH_TOL", "0.35"))
+    rows = {r["row"]: r for r in decode_attn_rows(log, **kw)}
+    packed = rows["decode_attn_packed"]["us_per_token"]
+    flt = rows["decode_attn_float"]["us_per_token"]
+    limit = flt * (1.0 + tolerance)
+    ok = packed <= limit
+    log(f"check,decode_attn,packed={packed:.1f}us,float={flt:.1f}us,"
+        f"limit={limit:.1f}us,{'OK' if ok else 'REGRESSED'}")
+    if not ok:
+        log("check,FAILED,packed decode attention lost to the dequantize "
+            "path (override slack via REPRO_BENCH_TOL / --tolerance)")
+    else:
+        log(f"check,PASSED,decode_attn ratio gate at tolerance={tolerance}")
+    return int(not ok)
 
 
 def run(log=print, json_path=_JSON_PATH, batch=2, max_len=48,
@@ -116,6 +192,10 @@ def run(log=print, json_path=_JSON_PATH, batch=2, max_len=48,
     assert steady == 0, "LM serving recompiled on the hot path"
 
     accuracy = lm_radix_accuracy.compute_rows(log)
+    attn_rows = decode_attn_rows(log, batch=batch, max_len=max_len,
+                                 buckets=buckets, T=T,
+                                 decode_tokens=decode_tokens,
+                                 backend=backend, dataflow=dataflow)
     payload_sections = {
         "bench": "lm",
         "config": {"arch": cfg.name, "T": T, "batch": batch,
@@ -126,6 +206,7 @@ def run(log=print, json_path=_JSON_PATH, batch=2, max_len=48,
                    "d_ff": cfg.d_ff, "vocab": cfg.vocab,
                    "backend_platform": jax.default_backend()},
         "serving": rows,
+        "decode_attn": attn_rows,
         "cache": {"compiles": stats["compiles"],
                   "steady_state_recompiles": steady,
                   "autotuned_layers": len(stats["autotune"]["layers"])},
@@ -143,8 +224,15 @@ def run(log=print, json_path=_JSON_PATH, batch=2, max_len=48,
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="LM serving throughput bench (writes BENCH_lm.json; "
-                    "the accuracy gate lives in lm_radix_accuracy "
-                    "--check).")
+                    "--check runs the decode_attn ratio gate; the "
+                    "accuracy gate lives in lm_radix_accuracy --check).")
+    ap.add_argument("--check", action="store_true",
+                    help="gate instead of rewriting: packed decode "
+                         "attention must beat (or tie) the dequantize "
+                         "path; exit nonzero on a perf regression")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="relative slack for --check (default: "
+                         "$REPRO_BENCH_TOL or 0.35)")
     ap.add_argument("--json", type=pathlib.Path, default=_JSON_PATH)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=48)
@@ -154,6 +242,11 @@ def main(argv=None):
                     choices=["kernels", "jnp"])
     ap.add_argument("--autotune", action="store_true")
     args = ap.parse_args(argv)
+    if args.check:
+        sys.exit(min(check_decode_attn(
+            tolerance=args.tolerance, batch=args.batch,
+            max_len=args.max_len, T=args.num_steps,
+            decode_tokens=args.decode_tokens, backend=args.backend), 1))
     run(json_path=args.json, batch=args.batch, max_len=args.max_len,
         T=args.num_steps, decode_tokens=args.decode_tokens,
         backend=args.backend, autotune=args.autotune)

@@ -516,7 +516,42 @@ class LMExecutable:
                     "layer": name, "m": m, "k": k, "n": n,
                     "tuned": win is not None,
                     **(win or autotune_mod.KernelConfig()).as_dict()})
+        if self.cfg.packed_attn and self.cfg.radix_kv:
+            rows.extend(self._sweep_attn(rng))
         return rows
+
+    def _sweep_attn(self, rng) -> list:
+        """Autotune the packed decode-attention problem the decode plan
+        traces (kernels/radix_attn.py): one problem at S = max_len over
+        a synthetic radix cache, so the KV-block winner is baked in."""
+        from repro.kernels import autotune as autotune_mod, ops as kops
+        from repro.lm import radix as radix_lib
+
+        cfg, B, S = self.cfg, self.batch, self.max_len
+        T, hkv, hd = cfg.radix_steps, cfg.n_kv_heads, cfg.hd
+        g = cfg.n_heads // hkv
+        lvl = (1 << T) - 1
+        packed = radix_lib._packed(cfg)
+        method = cfg.kernel_dataflow
+        key = autotune_mod.attn_key(
+            B, S, hkv, g, hd, T, method,
+            q_bits=kops.Q_BITS, packed=packed, sparsity=True)
+        q = jnp.asarray(rng.normal(size=(B, hkv * g, hd)), jnp.float32)
+        k_q = rng.integers(0, lvl + 1, size=(B, S, hkv, hd)).astype("uint8")
+        v_q = rng.integers(0, lvl + 1, size=(B, S, hkv, hd)).astype("uint8")
+        if packed:
+            k_q = (k_q[..., 0::2] << 4) | k_q[..., 1::2]
+            v_q = (v_q[..., 0::2] << 4) | v_q[..., 1::2]
+        scale = jnp.ones((B, S, hkv), jnp.float32)
+        mask = jnp.ones((B, S), bool)
+        jax.block_until_ready(kops.radix_decode_attention(
+            q, jnp.asarray(k_q), scale, jnp.asarray(v_q), scale, mask, T,
+            packed=packed, method=method, autotune=True))
+        win = autotune_mod.default_cache().get(key)
+        return [{
+            "layer": "decode_attn", "m": B, "k": hd, "n": S,
+            "tuned": win is not None,
+            **(win or autotune_mod.KernelConfig()).as_dict()}]
 
     def prefill(self, prompts) -> dict:
         """Prefill ``prompts`` ((n, S0) int tokens, n <= batch) through

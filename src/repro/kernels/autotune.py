@@ -54,8 +54,10 @@ __all__ = [
     "exact_lowering",
     "matmul_key",
     "conv_key",
+    "attn_key",
     "matmul_candidates",
     "conv_candidates",
+    "attn_candidates",
     "tune",
     "default_cache",
     "cache_path",
@@ -215,6 +217,24 @@ def conv_key(
             bool(sparsity))
 
 
+def attn_key(
+    batch: int, s_len: int, hkv: int, g: int, hd: int, num_steps: int,
+    dataflow: str, *, q_bits: int, packed: bool, sparsity: bool,
+    backend: Optional[str] = None,
+) -> tuple:
+    """Tuning-table key for one packed decode-attention problem.
+
+    Lives in the same winner table as the matmul/conv keys (the "attn"
+    tag disambiguates).  ``packed`` (nibble-packed cache) changes the
+    in-kernel unpack and therefore which tile shapes win, so it is part
+    of the key; the mask content (full vs ring-buffer window) is not —
+    strategy legality and cost depend only on the shapes."""
+    backend = backend or jax.default_backend()
+    return ("attn", backend, int(batch), int(s_len), int(hkv), int(g),
+            int(hd), int(num_steps), int(q_bits), str(dataflow),
+            bool(packed), bool(sparsity))
+
+
 # ---------------------------------------------------------------------------
 # Candidate generation.
 # ---------------------------------------------------------------------------
@@ -314,6 +334,55 @@ def conv_candidates(
     if interpret:
         cands = [c for c in cands
                  if c.impl == "xla" or c.bco in (128, _round_up(cout, 8))]
+    return _dedup(cands)
+
+
+def _attn_dtype_options(num_steps: int, q_bits: int, hd: int,
+                        dataflow: str) -> List[str]:
+    """Exact lowerings for the attention QK^T integer dot.
+
+    Both operands are activations here (query levels <= 2^q_bits - 1,
+    key levels <= 2^T - 1 fused / plane bits bitserial), so the gate runs
+    on the larger of the two — ``exact_lowering``'s int8 bound then
+    requires both to fit, and its f32 mantissa bound stays conservative
+    (the 127 weight factor dominates the true smaller operand)."""
+    qlvl = (1 << q_bits) - 1
+    lvl = (1 << num_steps) - 1
+    operand = qlvl if dataflow == "bitserial" else max(qlvl, lvl)
+    return [d for d in MXU_DTYPES
+            if exact_lowering(d, max_operand=operand, k_contract=hd,
+                              method="fused")]
+
+
+def attn_candidates(
+    s_len: int, hd: int, num_steps: int, dataflow: str,
+    *, q_bits: int, interpret: bool,
+) -> List[KernelConfig]:
+    """Legal strategies for one decode-attention problem.
+
+    ``bk`` is repurposed as the KV-block (sequence) tile of the streaming
+    online softmax — the block-size sweep the tentpole asks for.  The
+    first candidate is always the untuned default; the XLA twin sweeps a
+    full-cache single block (one dot, what wins on CPU) alongside the
+    default blocked loop.  Integer-dot lowerings pass the same
+    ``exact_lowering`` gate as the matmul kernels; the float
+    softmax/value part reassociates across block sizes, so candidates
+    agree to f32 rounding rather than bit-for-bit (the differential
+    suite pins all of them to the ref.py oracle)."""
+    dtypes = _attn_dtype_options(num_steps, q_bits, hd, dataflow)
+    full = _round_up(s_len, 8)
+    cands: List[KernelConfig] = [KernelConfig()]     # the untuned default
+    for dt in dtypes:
+        cands.append(KernelConfig(impl="xla", mxu_dtype=dt))
+        if full != 128:
+            cands.append(KernelConfig(impl="xla", mxu_dtype=dt, bk=full))
+    for dt in dtypes:
+        for bk in _tile_options(s_len):
+            cands.append(KernelConfig(impl="pallas", mxu_dtype=dt, bk=bk))
+    if interpret:
+        # interpret-mode Pallas is a validation vehicle: single block only
+        cands = [c for c in cands
+                 if c.impl == "xla" or c.bk in (128, full) or c.bk >= s_len]
     return _dedup(cands)
 
 

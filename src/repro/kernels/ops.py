@@ -38,7 +38,9 @@ import jax.numpy as jnp
 
 from repro.core.encoding import EncodingSpec, KernelSchedule
 from repro.kernels import autotune as autotune_mod
+from repro.kernels import radix_attn
 from repro.kernels.autotune import KernelConfig
+from repro.kernels.radix_attn import Q_BITS
 from repro.kernels.radix_conv import radix_conv2d_pallas
 from repro.kernels.radix_matmul import (
     OCC_LANES,
@@ -52,8 +54,10 @@ from repro.kernels.spike_encode import spike_encode_pallas
 
 __all__ = [
     "KernelConfig",
+    "Q_BITS",
     "radix_matmul",
     "radix_conv2d",
+    "radix_decode_attention",
     "radix_encode",
     "epilogue_rows",
     "plane_occupancy",
@@ -504,6 +508,242 @@ def radix_conv2d(
     )
     return _conv_with_config(cfg, x_q, w_q, b_int, mult, sched, spec,
                              method, stride, sparsity)
+
+
+# ---------------------------------------------------------------------------
+# Packed decode attention: the blockwise online-softmax kernel over the
+# radix KV cache (kernels/radix_attn.py) plus its jitted XLA twin — the
+# same plane-weight QK^T algebra, scale-folded streaming softmax, and
+# occupancy gating, expressed as batched XLA dots.  On CPU (interpret-mode
+# Pallas) the twin is what the autotuner picks; the differential suite
+# (tests/test_attn_differential.py) pins both to the ref.py oracle.
+# ---------------------------------------------------------------------------
+
+
+def _attn_bdot(a, b, mxu_dtype):
+    """(N, g, d) x (N, blk, d) -> (N, g, blk) int32 batched contraction
+    under the selected lowering (``mxu_dot``'s contract, batched)."""
+    dn = (((2,), (2,)), ((0,), (0,)))
+    if mxu_dtype == "int8":
+        return jax.lax.dot_general(
+            a.astype(jnp.int8), b.astype(jnp.int8), dn,
+            preferred_element_type=jnp.int32)
+    if mxu_dtype == "f32":
+        return jax.lax.dot_general(
+            a.astype(jnp.float32), b.astype(jnp.float32), dn,
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+    if mxu_dtype == "int32":
+        return jax.lax.dot_general(
+            a.astype(jnp.int32), b.astype(jnp.int32), dn,
+            preferred_element_type=jnp.int32)
+    raise ValueError(f"unknown mxu_dtype {mxu_dtype!r}")
+
+
+def _attn_bdot_f32(p, v):
+    """(N, g, blk) f32 x (N, blk, hd) -> (N, g, hd) f32 value pass."""
+    return jax.lax.dot_general(
+        p.astype(jnp.float32), v.astype(jnp.float32),
+        (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_steps", "q_bits", "hd", "method", "packed",
+                     "blk", "mxu_dtype", "sparsity"))
+def _xla_decode_attn(qq, qs, kq, ks, vq, vs, mask, occ_k, occ_v, *,
+                     num_steps, q_bits, hd, method, packed, blk,
+                     mxu_dtype="int32", sparsity=True):
+    """Jitted XLA twin of ``radix_decode_attn_pallas`` (same (N = B*Hkv)
+    row layout, S pre-padded to a ``blk`` multiple).  Processes the cache
+    blockwise through the shared online-softmax core — only the current
+    block's levels are ever unpacked, so the full dequantized float K/V
+    never materializes here either."""
+    n, g, hdq = qq.shape
+    s_len = kq.shape[1]
+    lvl = (1 << num_steps) - 1
+    occk = occ_k[0] if sparsity else None
+    occv = occ_v[0] if sparsity else None
+    qsf = qs[..., None]                                   # (n, g, 1)
+    qsum = jnp.sum(qq.astype(jnp.int32), axis=-1, keepdims=True)
+    state = radix_attn.osm_init((n, g, 1), (n, g, hdq))
+
+    for j0 in range(0, s_len, blk):
+        kb = radix_attn.unpack_levels(kq[:, j0:j0 + blk], packed)
+        vb = radix_attn.unpack_levels(vq[:, j0:j0 + blk], packed)
+        skb = ks[:, None, j0:j0 + blk]                    # (n, 1, blk)
+        svb = vs[:, None, j0:j0 + blk]
+        mb = mask[:, None, j0:j0 + blk] > 0
+
+        if method == "fused":
+            kb_m = kb if occk is None else kb & occ_mask(occk, num_steps)
+            sint = _attn_bdot(qq, kb_m, mxu_dtype)
+        else:
+            zero = jnp.zeros((n, g, kb.shape[1]), jnp.int32)
+            sint = zero
+            for s in range(num_steps):
+                plane = (kb >> s) & 1
+                sint = sint + (gated(
+                    occk, s,
+                    lambda plane=plane: _attn_bdot(qq, plane, mxu_dtype),
+                    zero) << s)
+        ksum = jnp.sum(kb, axis=-1)[:, None, :]           # (n, 1, blk)
+        scores = radix_attn.plane_scores(
+            sint, qsum, ksum, qsf, skb, hd=hd, num_steps=num_steps,
+            q_bits=q_bits)
+
+        def pv(p, vb=vb, svb=svb):
+            pw = p * svb                                  # fold v scales
+            if method == "fused":
+                vb_m = vb if occv is None else vb & occ_mask(occv, num_steps)
+                vint = _attn_bdot_f32(pw, vb_m)
+            else:
+                zf = jnp.zeros((n, g, hdq), jnp.float32)
+                vint = zf
+                for s in range(num_steps):
+                    plane = (vb >> s) & 1
+                    vint = vint + gated(
+                        occv, s,
+                        lambda plane=plane: _attn_bdot_f32(pw, plane),
+                        zf) * float(1 << s)
+            return (2.0 / lvl) * vint - jnp.sum(pw, axis=-1, keepdims=True)
+
+        state = radix_attn.osm_update(state, scores, mb, pv)
+    return radix_attn.osm_finalize(state)
+
+
+def _nibble_union(levels: jax.Array) -> jax.Array:
+    """Per-byte OR of hi/lo nibbles — the occupancy view of a packed
+    cache (plane_occupancy's OR-reduction over it equals occupancy of
+    the unpacked levels, without materializing them)."""
+    return jnp.bitwise_or(levels >> 4, levels & 0xF)
+
+
+def _attn_with_config(cfgk, qq, qs, kq, ks, vq, vs, mask, occ_k, occ_v, *,
+                      num_steps, q_bits, hd, method, packed, sparsity):
+    """Execute one decode-attention strategy on (N, ...) laid-out inputs."""
+    n, g, hdq = qq.shape
+    s_len = kq.shape[1]
+    sp, blk = _block(s_len, pref=cfgk.bk)
+    if sp > s_len:
+        pad = sp - s_len
+        kq = jnp.pad(kq, ((0, 0), (0, pad), (0, 0)))
+        vq = jnp.pad(vq, ((0, 0), (0, pad), (0, 0)))
+        ks = jnp.pad(ks, ((0, 0), (0, pad)))
+        vs = jnp.pad(vs, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))      # padded slots masked
+
+    if cfgk.impl == "xla":
+        return _xla_decode_attn(
+            qq, qs, kq, ks, vq, vs, mask, occ_k, occ_v,
+            num_steps=num_steps, q_bits=q_bits, hd=hd, method=method,
+            packed=packed, blk=blk, mxu_dtype=cfgk.mxu_dtype,
+            sparsity=sparsity)
+
+    gp = _round_up(g, 8)
+    if gp > g:
+        qq = jnp.pad(qq, ((0, 0), (0, gp - g), (0, 0)))
+        qs = jnp.pad(qs, ((0, 0), (0, gp - g)), constant_values=1.0)
+    out = radix_attn.radix_decode_attn_pallas(
+        qq, qs, kq, ks, vq, vs, mask, occ_k, occ_v,
+        num_steps=num_steps, q_bits=q_bits, hd=hd, method=method,
+        packed=packed, blk=blk, mxu_dtype=cfgk.mxu_dtype,
+        sparsity=sparsity, interpret=_interpret())
+    return out[:, :g]
+
+
+def radix_decode_attention(
+    q: jax.Array,
+    k_q: jax.Array,
+    k_scale: jax.Array,
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    mask: jax.Array,
+    num_steps: int,
+    *,
+    packed: bool = False,
+    method: str = "bitserial",
+    q_bits: int = Q_BITS,
+    sparsity: bool = True,
+    autotune: bool = False,
+    config: Optional[KernelConfig] = None,
+) -> jax.Array:
+    """Blockwise decode attention directly over the radix KV cache.
+
+    ``q`` (B, H, hd) float decode queries (post-RoPE); ``k_q``/``v_q``
+    (B, S, Hkv, hd) uint8 cache levels — or (B, S, Hkv, hd//2) when
+    ``packed`` (two nibble levels per byte); ``k_scale``/``v_scale``
+    (B, S, Hkv) f32 per-(token, head) scales; ``mask`` (B, S) boolean
+    slot validity (full causal or ring-buffer window — softmax over
+    cache *slots* is permutation-invariant, so ring order needs no
+    unrotation).  Returns the (B, H, hd) f32 attention output (pre
+    out-projection).  Never materializes a dequantized float K/V: the
+    query is radix-quantized (``q_bits``), QK^T runs as occupancy-gated
+    integer plane algebra, and the per-token scales fold into the
+    streaming online softmax (kernels/radix_attn.py).
+
+    ``autotune=True`` sweeps the legal ``KernelConfig`` strategies
+    (Pallas KV-block tiles x dot lowerings, plus the XLA twin) and bakes
+    the winner per ``autotune.attn_key``; ``config=`` pins one.  All
+    strategies agree to f32 rounding (the integer dots are bit-exact;
+    the float softmax reassociates across block sizes)."""
+    B, H, hd = q.shape
+    s_len, hkv = k_q.shape[1], k_q.shape[2]
+    g = H // hkv
+    assert g * hkv == H, (H, hkv)
+    n = B * hkv
+
+    qq, qscale = radix_attn.quantize_q(q, q_bits)     # (B, H, hd), (B, H, 1)
+    qq = qq.reshape(B, hkv, g, hd).reshape(n, g, hd)
+    qs = qscale.reshape(B, hkv, g).reshape(n, g)
+    if packed:
+        perm = list(range(0, hd, 2)) + list(range(1, hd, 2))
+        qq = qq[..., jnp.asarray(perm)]
+
+    def seq_major(a):                     # (B, S, Hkv, ...) -> (N, S, ...)
+        moved = jnp.moveaxis(a, 2, 1)
+        return moved.reshape((n,) + moved.shape[2:])
+
+    kq = seq_major(k_q)
+    vq = seq_major(v_q)
+    ks = seq_major(k_scale)
+    vs = seq_major(v_scale)
+    maskn = jnp.broadcast_to(mask[:, None, :], (B, hkv, s_len))
+    maskn = maskn.reshape(n, s_len).astype(jnp.int32)
+
+    if sparsity:
+        occ_src_k = _nibble_union(k_q) if packed else k_q
+        occ_src_v = _nibble_union(v_q) if packed else v_q
+        occ_k = plane_occupancy(occ_src_k, num_steps)[0]
+        occ_v = plane_occupancy(occ_src_v, num_steps)[0]
+    else:
+        occ_k = jnp.ones((1, OCC_LANES), jnp.int32)
+        occ_v = jnp.ones((1, OCC_LANES), jnp.int32)
+
+    cfgk = _resolve_config(
+        config, autotune, q,
+        key_fn=lambda: autotune_mod.attn_key(
+            B, s_len, hkv, g, hd, num_steps, method, q_bits=q_bits,
+            packed=packed, sparsity=sparsity),
+        cand_fn=lambda: autotune_mod.attn_candidates(
+            s_len, hd, num_steps, method, q_bits=q_bits,
+            interpret=_interpret()),
+        build_fn=lambda c: (lambda: _attn_with_config(
+            c, qq, qs, kq, ks, vq, vs, maskn, occ_k, occ_v,
+            num_steps=num_steps, q_bits=q_bits, hd=hd, method=method,
+            packed=packed, sparsity=sparsity)),
+    )
+    out = _attn_with_config(
+        cfgk, qq, qs, kq, ks, vq, vs, maskn, occ_k, occ_v,
+        num_steps=num_steps, q_bits=q_bits, hd=hd, method=method,
+        packed=packed, sparsity=sparsity)
+
+    if packed:
+        perm = list(range(0, hd, 2)) + list(range(1, hd, 2))
+        inv = [0] * hd
+        for i, p_ in enumerate(perm):
+            inv[p_] = i
+        out = out[..., jnp.asarray(inv)]
+    return out.reshape(B, hkv, g, hd).reshape(B, H, hd)
 
 
 def radix_encode(

@@ -17,6 +17,8 @@ __all__ = [
     "requantize_ref",
     "radix_matmul_epilogue_ref",
     "radix_conv2d_epilogue_ref",
+    "decode_attn_ref",
+    "decode_mask_ref",
 ]
 
 
@@ -156,3 +158,93 @@ def radix_conv2d_epilogue_ref(
         acc = acc // periods
     return requantize_ref(acc + bias.astype(jnp.int32), num_steps, mult,
                           grid=grid)
+
+
+# ---------------------------------------------------------------------------
+# Decode-attention oracles (kernels/radix_attn.py).  Plane-level spelling:
+# every integer contraction is an explicit loop over spike planes so the
+# packed kernel's plane-weight algebra is checked against an independent
+# second derivation, not against itself.
+# ---------------------------------------------------------------------------
+
+
+def decode_mask_ref(pos: int, s_len: int, window: int = 0):
+    """Valid-slot mask for one decode step, derived BY SIMULATION.
+
+    Replays every write the ring buffer performed (token p lands in slot
+    p % window; full attention is window = s_len with no wraparound) and
+    marks slots that were ever written by tokens 0..pos.  Independent of
+    the closed-form modular expression in lm/blocks.decode_mask — the
+    differential suite pins the two against each other, wraparound
+    included."""
+    import numpy as np
+
+    valid = np.zeros(s_len, dtype=bool)
+    for p in range(int(pos) + 1):
+        valid[p % window if window else p] = True
+    return jnp.asarray(valid)
+
+
+def decode_attn_ref(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
+                    v_q: jax.Array, v_scale: jax.Array, mask: jax.Array,
+                    num_steps: int, *, q_bits: int = 7) -> jax.Array:
+    """Plane-level decode-attention oracle.
+
+    q (B, H, hd) float; k_q/v_q (B, S, Hkv, hd) uint8 radix levels (always
+    UNPACKED here — callers unpack nibble-packed caches first); scales
+    (B, S, Hkv) f32; mask (B, S) bool -> (B, H, hd) f32.
+
+    Derivation (independent of kernels/radix_attn.plane_scores): both
+    operands are affine maps of their levels, a = (2 q_q/qlvl - 1) s_q and
+    b = (2 q_k/lvl - 1) s_k, so with the integer dot I = <q_q, q_k>
+    accumulated bit-serially over k's planes,
+
+        <a, b> = s_q s_k [ 4/(qlvl*lvl) I - 2/qlvl sum(q_q)
+                           - 2/lvl sum(q_k) + hd ].
+
+    Scores get the hd^-0.5 scale, masked slots are set to -inf BEFORE the
+    max (so the probability of a masked slot is exactly 0.0, never a tiny
+    exp), and the PV sum runs plane-by-plane over v's levels in f32 with
+    the dequant affine folded out through the probability row-sum."""
+    B, H, hd = q.shape
+    hkv = k_q.shape[2]
+    g = H // hkv
+    lvl = (1 << num_steps) - 1
+    qlvl = (1 << q_bits) - 1
+
+    # on-the-fly query quantization — must match radix_attn.quantize_q
+    qs = jnp.max(jnp.abs(q), axis=-1, keepdims=True).astype(jnp.float32) + 1e-9
+    qu = (q.astype(jnp.float32) / qs + 1.0) * 0.5
+    qq = jnp.clip(jnp.round(qu * qlvl), 0, qlvl).astype(jnp.int32)
+
+    qg = qq.reshape(B, hkv, g, hd)                       # h = hkv * g + gi
+    kq = k_q.astype(jnp.int32)
+    sint = jnp.zeros((B, hkv, g, kq.shape[1]), jnp.int32)
+    for t in range(num_steps):                           # bit-serial QK^T
+        plane = (kq >> t) & 1
+        sint = sint + (jnp.einsum("bhgd,bshd->bhgs", qg, plane,
+                                  preferred_element_type=jnp.int32) << t)
+
+    qsum = jnp.sum(qg, axis=-1)[..., None].astype(jnp.float32)
+    ksum = jnp.sum(kq, axis=-1).astype(jnp.float32)      # (B, S, Hkv)
+    raw = (4.0 / (qlvl * lvl)) * sint.astype(jnp.float32) \
+        - (2.0 / qlvl) * qsum \
+        - (2.0 / lvl) * jnp.moveaxis(ksum, 1, 2)[:, :, None, :] + float(hd)
+    qsg = qs.reshape(B, hkv, g)[..., None]
+    skg = jnp.moveaxis(k_scale, 1, 2)[:, :, None, :]     # (B, Hkv, 1, S)
+    scores = (hd ** -0.5) * qsg * skg * raw              # (B, Hkv, g, S)
+
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(mask[:, None, None, :], jnp.exp(scores - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l > 0.0, l, 1.0)
+
+    pw = p * jnp.moveaxis(v_scale, 1, 2)[:, :, None, :]  # fold v scales
+    vq = v_q.astype(jnp.int32)
+    vint = jnp.zeros((B, hkv, g, hd), jnp.float32)
+    for t in range(num_steps):                           # bit-serial PV
+        plane = ((vq >> t) & 1).astype(jnp.float32)
+        vint = vint + jnp.einsum("bhgs,bshd->bhgd", pw, plane) * float(1 << t)
+    out = (2.0 / lvl) * vint - jnp.sum(pw, axis=-1, keepdims=True)
+    return out.reshape(B, H, hd)

@@ -201,6 +201,24 @@ def attention(x: jax.Array, p: dict, cfg: ArchConfig, positions: jax.Array,
 # ---------------------------------------------------------------------------
 
 
+def decode_mask(pos: jax.Array, s_len: int, window: int = 0) -> jax.Array:
+    """Valid-slot mask (B, s_len) bool for one decode step at ``pos``.
+
+    Full attention: slot i valid iff i <= pos.  Windowed ring buffer: slot i
+    holds absolute position pos - ((pos - i) % window), which is always
+    within the window once written; only never-written slots (abs < 0) are
+    masked.  Both the jnp softmax path and the packed kernel consume this
+    same mask, so the masked-score set is identical by construction
+    (pinned against an independent oracle in tests/test_attn_differential).
+    """
+    pos = jnp.asarray(pos).reshape(-1)
+    slots = jnp.arange(s_len)
+    if window:
+        abs_pos = pos[:, None] - ((pos[:, None] - slots[None, :]) % window)
+        return abs_pos >= 0
+    return slots[None, :] <= pos[:, None]
+
+
 def decode_attention(x: jax.Array, p: dict, cfg: ArchConfig, cache: dict,
                      pos: jax.Array, *, window: int = 0,
                      cross: bool = False) -> Tuple[jax.Array, dict]:
@@ -232,17 +250,16 @@ def decode_attention(x: jax.Array, p: dict, cfg: ArchConfig, cache: dict,
                 knew = rope_apply(knew, pos3, cfg.rope_theta, cfg.mrope_sections)
         cache = radix_lib.cache_update(cache, knew, vnew, pos, cfg,
                                        window=window)
+        S = cache["k"].shape[1]
+        valid = decode_mask(pos, S, window)                # (B or 1, S)
+        if radix_lib.packed_attn_enabled(cfg):
+            # packed path: the kernel reads the uint8 levels directly —
+            # no (B, S, Hkv, hd) float K/V is ever materialized.
+            o = radix_lib.packed_decode_attention(
+                q[:, 0], cache, jnp.broadcast_to(valid, (B, S)), cfg)
+            o = o[:, None].astype(x.dtype)                 # (B,1,H,hd)
+            return _out_proj(o, p["wo"], cfg), cache
         k, v = radix_lib.cache_read(cache, cfg)
-        S = k.shape[1]
-        if window:
-            # ring buffer: slot i holds absolute position pos - ((pos-i) % W),
-            # which is always within the window; mask only unwritten slots.
-            slots = jnp.arange(S)
-            abs_pos = pos - ((pos - slots) % window)
-            valid = (abs_pos >= 0)[None, :]
-        else:
-            kpos = jnp.arange(S)
-            valid = kpos[None, :] <= pos.reshape(-1, 1)
         mask = valid[:, None, None, :]                     # (B,1,1,S)
 
     s = _gqa_scores(q, k).astype(jnp.float32) * hd ** -0.5  # (B,H,1,S)

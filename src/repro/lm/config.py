@@ -98,6 +98,7 @@ class ArchConfig:
     kernel_autotune: bool = False  # consult the autotune winner table
     kernel_dataflow: str = "bitserial"  # in-kernel plane schedule
     radix_attn: bool = False       # also radix-quantize QKV/out projections
+    packed_attn: bool = False      # decode attention directly on packed KV
 
     # ---- derived ----------------------------------------------------------
 

@@ -39,7 +39,8 @@ from repro.core import encoding
 from repro.lm.config import ArchConfig
 
 __all__ = ["quantize_weight", "maybe_radix_matmul", "init_cache_entry",
-           "cache_update", "cache_read"]
+           "cache_update", "cache_read", "packed_attn_enabled",
+           "packed_decode_attention"]
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +229,36 @@ def cache_read(cache: dict, cfg: ArchConfig,
         v = _decode_kv(qv, cache["v_scale"], cfg.radix_steps, dtype)
         return k, v
     return cache["k"], cache["v"]
+
+
+def packed_attn_enabled(cfg: ArchConfig) -> bool:
+    """True when decode attention should run directly on the quantized
+    cache (kernels/radix_attn.py) instead of dequantize + jnp softmax.
+    Requires the radix KV cache; pack-on-top (``radix_kv_pack``) is
+    handled inside the kernel wrapper via nibble unpacking."""
+    return _radix_kv(cfg) and cfg.packed_attn
+
+
+def packed_decode_attention(q: jax.Array, cache: dict, mask: jax.Array,
+                            cfg: ArchConfig) -> jax.Array:
+    """One decode step of attention over the quantized KV cache.
+
+    q (B, H, hd) float, cache the radix dict from init_cache_entry, mask
+    (B, S) bool over cache slots -> (B, H, hd) f32 attention output.  The
+    kernel consumes the uint8 levels directly — no (B, S, Hkv, hd) float
+    K/V is ever materialized (ISSUE-10 acceptance criterion); the per-head
+    scales fold into the streaming online softmax.  Kernel routing mirrors
+    maybe_radix_matmul: ``use_kernel`` picks Pallas vs the jnp/XLA twin,
+    ``kernel_autotune`` consults the winner table for the KV block size.
+    """
+    from repro.kernels import ops as kops
+
+    config = None if cfg.use_kernel else kops.KernelConfig(impl="xla")
+    return kops.radix_decode_attention(
+        q, cache["k"], cache["k_scale"], cache["v"], cache["v_scale"],
+        mask, cfg.radix_steps,
+        packed=_packed(cfg), method=cfg.kernel_dataflow,
+        autotune=cfg.kernel_autotune and cfg.use_kernel, config=config)
 
 
 def encode_cache_bulk(k: jax.Array, v: jax.Array, cfg: ArchConfig,

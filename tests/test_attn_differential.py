@@ -1,0 +1,383 @@
+"""Differential suite for packed-plane decode attention (ISSUE 10).
+
+Locks ``kernels/radix_attn.py`` (and its ops.py wrapper + LM wiring) with
+four independent reference points:
+
+1. **Plane-level oracle** (``ref.decode_attn_ref``): the kernel equals a
+   second, independently-spelled derivation of the plane-weight algebra
+   to f32 rounding, across (T, GQA group, batch, cache fill, pack
+   on/off, bitserial/fused, xla/pallas) — fixed-seed fast subset plus a
+   ``_hyp`` fuzz sweep.
+2. **Float jnp path**: the packed kernel stays within a *derived*
+   dequant-error bound of the exact softmax over the dequantized cache —
+   the only approximation is the on-the-fly Q_BITS query quantization,
+   whose worst-case score perturbation eps gives the closed-form bound
+   ``(e^(2 eps) - 1) * max(v_scale)`` via softmax Lipschitz continuity.
+3. **Masked-score set**: the mask the packed branch consumes is the very
+   ``blocks.decode_mask`` array the jnp branch applies, pinned against a
+   write-replay simulation oracle (``ref.decode_mask_ref``), ring-buffer
+   wraparound included; garbage in masked cache slots cannot leak.
+4. **Online-softmax core properties**: block-split invariance, all-
+   masked stability (no NaN from -1e30 rows), scale-fold associativity.
+
+Plus the e2e long-decode regression: 64 greedy tokens through
+``LMExecutable`` with ``packed_attn`` on vs off.
+"""
+
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro import api
+from repro.configs import get_config
+from repro.kernels import ops as kops, ref
+from repro.kernels import radix_attn as ra
+from repro.lm import blocks, model as M
+
+pytestmark = pytest.mark.lm
+
+
+# ---------------------------------------------------------------------------
+# Shared fixtures: synthetic radix caches and the float reference path.
+# ---------------------------------------------------------------------------
+
+
+def _mk_problem(seed, B, S, hkv, g, hd, T, fill=1.0):
+    """Random decode-attention problem: float q + a radix cache whose
+    first ceil(fill * S) slots are valid."""
+    rng = np.random.default_rng(seed)
+    lvl = (1 << T) - 1
+    q = jnp.asarray(rng.normal(size=(B, hkv * g, hd)).astype(np.float32))
+    k_q = rng.integers(0, lvl + 1, size=(B, S, hkv, hd)).astype(np.uint8)
+    v_q = rng.integers(0, lvl + 1, size=(B, S, hkv, hd)).astype(np.uint8)
+    k_s = rng.uniform(0.25, 2.0, size=(B, S, hkv)).astype(np.float32)
+    v_s = rng.uniform(0.25, 2.0, size=(B, S, hkv)).astype(np.float32)
+    n_valid = max(1, int(round(fill * S)))
+    mask = np.zeros((B, S), bool)
+    mask[:, :n_valid] = True
+    return q, k_q, k_s, v_q, v_s, mask
+
+
+def _pack4(lv):
+    return ((lv[..., 0::2] << 4) | lv[..., 1::2]).astype(np.uint8)
+
+
+def _dequant(lv, s, T):
+    lvl = (1 << T) - 1
+    return (2.0 * lv.astype(np.float32) / lvl - 1.0) * s[..., None]
+
+
+def _float_path(q, k_q, k_s, v_q, v_s, mask, T):
+    """The jnp decode-attention math (dequantize + masked softmax) with
+    the FLOAT query — what blocks.decode_attention computes when
+    ``packed_attn`` is off.  (B, H, hd) f32."""
+    B, H, hd = q.shape
+    hkv = k_q.shape[2]
+    g = H // hkv
+    k = _dequant(k_q, k_s, T)
+    v = _dequant(v_q, v_s, T)
+    qg = np.asarray(q, np.float32).reshape(B, hkv, g, hd)
+    s = np.einsum("bhgd,bshd->bhgs", qg, k) * hd ** -0.5
+    s = np.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(jnp.asarray(s), axis=-1)
+    out = np.einsum("bhgs,bshd->bhgd", np.asarray(p), v)
+    return out.reshape(B, H, hd)
+
+
+def _run_kernel(q, k_q, k_s, v_q, v_s, mask, T, *, packed=False,
+                method="bitserial", impl="xla", bk=None, **kw):
+    if packed:
+        k_q, v_q = _pack4(k_q), _pack4(v_q)
+    cfgk = kops.KernelConfig(impl=impl, **({} if bk is None else {"bk": bk}))
+    return kops.radix_decode_attention(
+        q, jnp.asarray(k_q), jnp.asarray(k_s), jnp.asarray(v_q),
+        jnp.asarray(v_s), jnp.asarray(mask), T, packed=packed,
+        method=method, config=cfgk, **kw)
+
+
+def _dequant_bound(q, k_s, v_s, hd, mask):
+    """Worst-case packed-vs-float output error from Q_BITS quantization.
+
+    Per-element query error <= qs / qlvl, k-hat elements <= sk, so every
+    score moves by at most eps = sqrt(hd)'s worst case
+    hd^-0.5 * hd * qs * sk / qlvl = sqrt(hd) * max(qs * sk) / qlvl.
+    Softmax is Lipschitz in the scores: ||p' - p||_1 <= e^(2 eps) - 1,
+    and each value element is bounded by max(sv), giving the bound used
+    here (a 1.5x float-rounding cushion on top)."""
+    qlvl = (1 << ra.Q_BITS) - 1
+    qs = np.abs(np.asarray(q)).max(-1)                     # (B, H)
+    sk = np.where(mask[:, :, None], np.asarray(k_s), 0.0).max(1)  # (B, Hkv)
+    sv = np.where(mask[:, :, None], np.asarray(v_s), 0.0).max()
+    eps = np.sqrt(hd) * qs.max() * sk.max() / qlvl
+    return 1.5 * (np.expm1(2.0 * eps)) * sv + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel == plane-level oracle (fixed-seed fast subset + fuzz sweep)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("packed", [False, True])
+@pytest.mark.parametrize("method", ["bitserial", "fused"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_kernel_matches_oracle_fixed(packed, method, impl):
+    T = 4
+    q, k_q, k_s, v_q, v_s, mask = _mk_problem(0, 2, 16, 2, 2, 8, T, 0.7)
+    want = ref.decode_attn_ref(q, jnp.asarray(k_q), jnp.asarray(k_s),
+                               jnp.asarray(v_q), jnp.asarray(v_s),
+                               jnp.asarray(mask), T)
+    got = _run_kernel(q, k_q, k_s, v_q, v_s, mask, T,
+                      packed=packed, method=method, impl=impl, bk=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(T=st.integers(2, 8), g=st.integers(1, 4), hkv=st.integers(1, 3),
+       B=st.integers(1, 3), fill=st.floats(0.1, 1.0),
+       pack=st.booleans(), fused=st.booleans(), seed=st.integers(0, 2**16))
+def test_kernel_matches_oracle_fuzz(T, g, hkv, B, fill, pack, fused, seed):
+    """The full ISSUE-10 sweep axis set: (T, GQA group size, batch,
+    cache fill, pack on/off) x dataflow, against the plane oracle."""
+    pack = pack and T <= 4                 # nibble packing needs T <= 4
+    S, hd = 16, 8
+    q, k_q, k_s, v_q, v_s, mask = _mk_problem(seed, B, S, hkv, g, hd, T,
+                                              fill)
+    want = ref.decode_attn_ref(q, jnp.asarray(k_q), jnp.asarray(k_s),
+                               jnp.asarray(v_q), jnp.asarray(v_s),
+                               jnp.asarray(mask), T)
+    got = _run_kernel(q, k_q, k_s, v_q, v_s, mask, T, packed=pack,
+                      method="fused" if fused else "bitserial")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_strategies_agree_to_f32_rounding():
+    """Every legal KernelConfig (block sizes, lowerings, xla/pallas,
+    sparsity on/off) computes the same attention to f32 rounding — the
+    attention analogue of the matmul suite's bit-equality lock (the
+    integer dots ARE bit-exact; the float softmax reassociates across
+    KV-block partitions, so the contract here is a tight float tol)."""
+    T = 4
+    q, k_q, k_s, v_q, v_s, mask = _mk_problem(3, 2, 24, 2, 2, 8, T, 0.8)
+    base = _run_kernel(q, k_q, k_s, v_q, v_s, mask, T)
+    for kw in ({"bk": 8}, {"bk": 24}, {"impl": "pallas", "bk": 8},
+               {"method": "fused"}, {"sparsity": False},
+               {"packed": True}, {"packed": True, "impl": "pallas",
+                                  "bk": 8}):
+        got = _run_kernel(q, k_q, k_s, v_q, v_s, mask, T,
+                          **{"impl": "xla", **kw})
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                                   rtol=2e-5, atol=2e-5, err_msg=repr(kw))
+
+
+# ---------------------------------------------------------------------------
+# 2. packed kernel vs the float jnp path: derived dequant-error bound
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.integers(3, 8), seed=st.integers(0, 2**16),
+       pack=st.booleans())
+def test_kernel_within_derived_bound_of_float_path(T, seed, pack):
+    pack = pack and T <= 4
+    B, S, hkv, g, hd = 2, 16, 2, 2, 8
+    q, k_q, k_s, v_q, v_s, mask = _mk_problem(seed, B, S, hkv, g, hd, T,
+                                              0.75)
+    want = _float_path(q, k_q, k_s, v_q, v_s, mask, T)
+    got = np.asarray(_run_kernel(q, k_q, k_s, v_q, v_s, mask, T,
+                                 packed=pack))
+    bound = _dequant_bound(q, k_s, v_s, hd, mask)
+    err = np.abs(got - want).max()
+    assert err <= bound, (err, bound)
+
+
+# ---------------------------------------------------------------------------
+# 3. the masked-score set is EXACTLY the jnp path's, both mask shapes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(pos=st.integers(0, 100), s_len=st.integers(1, 40),
+       windowed=st.booleans())
+def test_decode_mask_equals_simulation_oracle(pos, s_len, windowed):
+    """blocks.decode_mask (the one array BOTH the jnp softmax and the
+    packed kernel consume) == replaying every ring-buffer write —
+    wraparound included (pos >> window exercises it)."""
+    window = s_len if windowed else 0
+    if not windowed:
+        pos = min(pos, s_len - 1)          # full attn: cache never wraps
+    got = blocks.decode_mask(jnp.int32(pos), s_len, window)[0]
+    want = ref.decode_mask_ref(pos, s_len, window)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_masked_slots_cannot_leak():
+    """Adversarial garbage (max levels, huge scales) in masked cache
+    slots changes NOTHING in either the packed kernel or the float
+    path — the observational form of masked-score-set equality."""
+    T = 4
+    q, k_q, k_s, v_q, v_s, mask = _mk_problem(5, 2, 16, 2, 2, 8, T, 0.5)
+    dead = ~mask
+    k_g, v_g = k_q.copy(), v_q.copy()
+    k_sg, v_sg = k_s.copy(), v_s.copy()
+    k_g[dead] = 15
+    v_g[dead] = 15
+    k_sg[dead] = 1e6
+    v_sg[dead] = 1e6
+    for kw in ({}, {"packed": True}, {"impl": "pallas", "bk": 8}):
+        a = _run_kernel(q, k_q, k_s, v_q, v_s, mask, T, **kw)
+        b = _run_kernel(q, k_g, k_sg, v_g, v_sg, mask, T, **kw)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=repr(kw))
+    np.testing.assert_array_equal(
+        _float_path(q, k_q, k_s, v_q, v_s, mask, T),
+        _float_path(q, k_g, k_sg, v_g, v_sg, mask, T))
+
+
+def test_windowed_ring_mask_matches_jnp_semantics():
+    """Sliding-window decode: the packed kernel over the ring-buffer
+    mask equals the float path over the same mask (softmax over ring
+    slots is permutation-invariant, so no unrotation is needed)."""
+    T, B, S, hkv, g, hd = 4, 2, 8, 2, 2, 8
+    window = S
+    for pos in (3, 7, 11, 29):             # before and after wraparound
+        q, k_q, k_s, v_q, v_s, _ = _mk_problem(pos, B, S, hkv, g, hd, T)
+        mask = np.asarray(
+            np.broadcast_to(ref.decode_mask_ref(pos, S, window), (B, S)))
+        got = np.asarray(_run_kernel(q, k_q, k_s, v_q, v_s, mask, T,
+                                     packed=True))
+        want = _float_path(q, k_q, k_s, v_q, v_s, mask, T)
+        bound = _dequant_bound(q, k_s, v_s, hd, mask)
+        assert np.abs(got - want).max() <= bound
+
+
+# ---------------------------------------------------------------------------
+# 4. online-softmax core properties
+# ---------------------------------------------------------------------------
+
+
+def _osm_sweep(scores, mask, v, splits):
+    """Run the streaming core over a block partition of the S axis."""
+    g, hd = scores.shape[0], v.shape[1]
+    state = ra.osm_init((g, 1), (g, hd))
+    for lo, hi in splits:
+        state = ra.osm_update(
+            state, scores[:, lo:hi], mask[:, lo:hi],
+            lambda p, lo=lo, hi=hi: p @ v[lo:hi])
+    return ra.osm_finalize(state)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), split=st.integers(1, 15),
+       fill=st.floats(0.0, 1.0))
+def test_osm_block_split_invariance(seed, split, fill):
+    """Any block partition == the single-pass softmax within 1e-6 —
+    including rows whose valid slots all land in one block."""
+    rng = np.random.default_rng(seed)
+    g, S, hd = 3, 16, 4
+    scores = jnp.asarray(rng.normal(size=(g, S)).astype(np.float32) * 5)
+    mask = jnp.asarray(rng.random((g, S)) < fill)
+    v = jnp.asarray(rng.normal(size=(S, hd)).astype(np.float32))
+    one = _osm_sweep(scores, mask, v, [(0, S)])
+    cut = split if split < S else S - 1
+    two = _osm_sweep(scores, mask, v, [(0, cut), (cut, S)])
+    man = _osm_sweep(scores, mask, v, [(i, i + 1) for i in range(S)])
+    np.testing.assert_allclose(np.asarray(two), np.asarray(one), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(man), np.asarray(one), atol=1e-6)
+
+
+def test_osm_all_masked_blocks_are_stable():
+    """Fully-masked rows (and all-masked leading blocks) produce exact
+    zeros — never NaN from exp(-1e30 - -1e30) or 0/0."""
+    g, S, hd = 2, 12, 4
+    rng = np.random.default_rng(0)
+    scores = jnp.asarray(rng.normal(size=(g, S)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, hd)).astype(np.float32))
+    out = _osm_sweep(scores, jnp.zeros((g, S), bool), v,
+                     [(0, 4), (4, 8), (8, 12)])
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    # row 0 masked, row 1 valid only in the LAST block: earlier all-
+    # masked updates must not poison the running max / sum
+    mask = np.zeros((g, S), bool)
+    mask[1, 9] = True
+    out = _osm_sweep(scores, jnp.asarray(mask), v,
+                     [(0, 4), (4, 8), (8, 12)])
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_array_equal(np.asarray(out)[0], 0.0)
+    np.testing.assert_allclose(np.asarray(out)[1], np.asarray(v)[9],
+                               rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_osm_scale_fold_associativity(seed):
+    """Folding the per-token v-scales into p before the value dot
+    (what the kernel streams) == scaling the dequantized values first
+    (what the float path does): (p * sv) @ V == p @ (sv[:, None] * V)."""
+    rng = np.random.default_rng(seed)
+    g, S, hd = 2, 16, 4
+    scores = jnp.asarray(rng.normal(size=(g, S)).astype(np.float32))
+    mask = jnp.asarray(rng.random((g, S)) < 0.8)
+    sv = jnp.asarray(rng.uniform(0.25, 4.0, size=(S,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, hd)).astype(np.float32))
+    a = _osm_sweep(scores, mask, sv[:, None] * v, [(0, 8), (8, S)])
+    g2, hd2 = scores.shape[0], v.shape[1]
+    state = ra.osm_init((g2, 1), (g2, hd2))
+    for lo, hi in [(0, 8), (8, S)]:
+        state = ra.osm_update(
+            state, scores[:, lo:hi], mask[:, lo:hi],
+            lambda p, lo=lo, hi=hi: (p * sv[lo:hi]) @ v[lo:hi])
+    b = ra.osm_finalize(state)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 5. e2e long-decode regression: packed_attn on vs off through the
+#    compiled serving surface
+# ---------------------------------------------------------------------------
+
+
+def test_long_decode_packed_vs_float_regression():
+    """64 greedy tokens through LMExecutable with packed_attn on vs off:
+    argmax-token agreement above the BENCH_lm agreement floor, per-step
+    logit rel-err under the committed BENCH_lm T=4 accuracy floor, and
+    zero steady-state recompiles on both plans."""
+    bench = json.loads((pathlib.Path(__file__).resolve().parents[1]
+                        / "BENCH_lm.json").read_text())
+    floor = next(r["logit_rel_err"] for r in bench["accuracy"]
+                 if r["T"] == 4)
+    new_tokens = 64
+    cfg = dataclasses.replace(get_config("gemma_2b", smoke=True),
+                              radix_steps=4, radix_kv_pack=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 7), 0, cfg.vocab)
+    logits, toks = {}, {}
+    for packed in (False, True):
+        c = dataclasses.replace(cfg, packed_attn=packed)
+        exe = api.Accelerator(backend="jnp").compile(
+            (params, c), (2, 8 + new_tokens + 2), buckets=(8,))
+        exe.warmup()
+        compiles0 = exe.stats()["compiles"]
+        state = exe.prefill(tok)
+        steps, out = [], []
+        for _ in range(new_tokens):
+            nxt = jnp.argmax(state["logits"], -1).astype(jnp.int32)
+            out.append(np.asarray(nxt))
+            state = exe.decode(state, nxt[:, None])
+            steps.append(np.asarray(state["logits"]))
+        assert exe.stats()["compiles"] == compiles0   # zero steady-state
+        logits[packed] = np.stack(steps, 1)           # (B, 64, vocab)
+        toks[packed] = np.stack(out, 1)
+    agree = float((toks[True] == toks[False]).mean())
+    assert agree >= 0.75, agree                       # REPRO_LM_AGREE_FLOOR
+    rel = (np.linalg.norm(logits[True] - logits[False], axis=-1)
+           / np.linalg.norm(logits[False], axis=-1))
+    assert float(np.median(rel)) < floor, (float(np.median(rel)), floor)

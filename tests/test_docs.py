@@ -309,10 +309,20 @@ def test_lm_guide_matches_code_surface():
     from repro.lm.config import ArchConfig
     fields = {f.name for f in _dc.fields(ArchConfig)}
     for knob in ("use_kernel", "kernel_autotune", "kernel_dataflow",
-                 "radix_attn", "radix_kv_pack"):
+                 "radix_attn", "radix_kv_pack", "packed_attn"):
         assert knob in fields, knob
         assert f"`cfg.{knob}`" in text or f"`{knob}`" in text, (
             f"docs/lm.md is missing the {knob} serving knob")
+    # the packed-attention section names the live kernel module and
+    # both docs explain the plane algebra it implements
+    assert "src/repro/kernels/radix_attn.py" in text
+    ktext = (REPO / "docs" / "kernels.md").read_text()
+    assert "radix_attn" in ktext, (
+        "docs/kernels.md is missing the packed decode-attention kernel")
+    from repro.kernels.radix_attn import Q_BITS
+    assert f"Q_BITS = {Q_BITS}" in text or f"Q_BITS ({Q_BITS}" in text or \
+        f"`Q_BITS` = {Q_BITS}" in text, (
+        "docs/lm.md must state the query-quantization width Q_BITS")
     # the plan-cache counters §3 promises are the LMPlanCache's
     from repro.core.engine import PlanCacheStats
     stats_keys = set(PlanCacheStats().as_dict())
@@ -326,8 +336,9 @@ def test_lm_guide_matches_code_surface():
 def test_bench_lm_json_structure():
     """The committed BENCH_lm.json is the lm-accuracy-gate baseline: it
     must carry the serving rows (prefill per bucket + decode, tok/s),
-    the zero-recompile cache proof, and the accuracy sweep the --check
-    gate reads."""
+    the decode_attn packed-vs-float rows the lm_bench --check ratio
+    gate re-measures, the zero-recompile cache proof, and the accuracy
+    sweep the lm_radix_accuracy --check gate reads."""
     import json as _json
 
     payload = _json.loads((REPO / "BENCH_lm.json").read_text())
@@ -339,6 +350,10 @@ def test_bench_lm_json_structure():
     assert set(phases) == {"prefill", "decode"}
     assert len(phases["prefill"]) == len(payload["config"]["seq_buckets"])
     assert payload["cache"]["steady_state_recompiles"] == 0
+    attn = {r["row"]: r for r in payload["decode_attn"]}
+    assert set(attn) == {"decode_attn_packed", "decode_attn_float"}
+    for r in attn.values():
+        assert r["us_per_token"] > 0, r
     from benchmarks.lm_radix_accuracy import T_SWEEP
     acc = {r["T"]: r for r in payload["accuracy"]}
     assert set(acc) == set(T_SWEEP)

@@ -4,6 +4,12 @@ oracle in kernels/ref.py, and the LM compile surface
 (``Accelerator.compile`` on an ``(params, ArchConfig)`` pair) decodes
 end-to-end with zero steady-state recompiles.
 
+Scope note (vs the similarly-named tests/test_radix_lm.py): THIS file
+owns the differential **kernel locks** and the compile surface; the
+numerics/accuracy trends (error vs T, KV roundtrips, generation
+agreement with the exact server) live in test_radix_lm.py, and the
+decode-ATTENTION differential suite lives in test_attn_differential.py.
+
 Layers of the lock, coarsest to finest:
 
 1. ``maybe_radix_matmul(use_kernel=True)`` == ``use_kernel=False``
